@@ -1,0 +1,110 @@
+"""Render EXPERIMENTS.md tables from benchmarks/results/*.json.
+
+    PYTHONPATH=src python -m benchmarks.render_experiments > /tmp/tables.md
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__)))
+from roofline import analyse, hint  # noqa: E402
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def load(name):
+    p = os.path.join(RESULTS, name)
+    if not os.path.exists(p):
+        return {}
+    with open(p) as f:
+        return json.load(f)
+
+
+def dryrun_table(data, title):
+    print(f"\n### {title}\n")
+    print("| arch | shape | status | args GB/dev | temp GB/dev | "
+          "HLO GFLOP/dev | coll MB/dev | compile s |")
+    print("|---|---|---|---|---|---|---|---|")
+    for key in sorted(data):
+        r = data[key]
+        if not r.get("ok"):
+            print(f"| {r['arch']} | {r['shape']} | FAIL: "
+                  f"{r.get('error', '?')[:60]} | | | | | |")
+            continue
+        st = r.get("struct", {})
+        print(f"| {r['arch']} | {r['shape']} | ok | "
+              f"{(r['memory']['argument_bytes'] or 0)/1e9:.2f} | "
+              f"{(r['memory']['temp_bytes'] or 0)/1e9:.2f} | "
+              f"{st.get('flops', 0)/1e9:.1f} | "
+              f"{st.get('collective_total', 0)/1e6:.1f} | "
+              f"{r['compile_s']} |")
+
+
+def roofline_table(data):
+    print("\n### Roofline (single pod, 256 chips; terms in seconds)\n")
+    print("| arch | shape | compute | memory | collective | bottleneck | "
+          "useful FLOP frac | what would move the dominant term |")
+    print("|---|---|---|---|---|---|---|---|")
+    rows = [r for r in (analyse(v) for v in data.values()) if r]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    for r in rows:
+        print(f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3g} | "
+              f"{r['memory_s']:.3g} | {r['collective_s']:.3g} | "
+              f"**{r['bottleneck']}** | {min(r['useful_flops_frac'],1):.2f} | "
+              f"{hint(r)} |")
+
+
+def perf_compare(base, opt, cells):
+    print("\n### Hillclimb before/after (per-device, single pod)\n")
+    print("| cell | variant | GFLOP | HBM GB (rw) | coll GB | "
+          "dominant term s |")
+    print("|---|---|---|---|---|---|")
+    for key in cells:
+        for name, data in (("base", base), ("opt", opt)):
+            r = data.get(key)
+            if not r or not r.get("ok"):
+                continue
+            a = analyse(r)
+            st = r["struct"]
+            dom = max(a["compute_s"], a["memory_s"], a["collective_s"])
+            print(f"| {key} | {name} | {st['flops']/1e9:.1f} | "
+                  f"{2*st['bytes_written']/1e9:.2f} | "
+                  f"{st['collective_total']/1e9:.3f} | {dom:.3g} |")
+
+
+def main():
+    single = load("dryrun_single.json")
+    multi = load("dryrun_multi.json")
+    opt = load("dryrun_single_opt.json")
+    stage1 = load("dryrun_single_stage1.json")
+    dryrun_table(single, "Dry-run: single pod 16x16 = 256 chips")
+    if multi:
+        dryrun_table(multi, "Dry-run: multi-pod 2x16x16 = 512 chips")
+    roofline_table(single)
+    cells = ["olmoe-1b-7b|train_4k", "granite-moe-1b-a400m|train_4k",
+             "equiformer-v2|ogb_products", "equiformer-v2|minibatch_lg",
+             "bert4rec|retrieval_cand", "dlrm-mlperf|retrieval_cand",
+             "colpali|search_1m", "colqwen|search_1m", "colsmol|search_1m"]
+    perf_compare(single, opt, cells)
+    if stage1:
+        print("\n### Paper-technique A/B on the serving engine "
+              "(search_1m, 1M pages)\n")
+        print("| arch | variant | GFLOP/dev | HBM GB/dev | coll MB/dev |")
+        print("|---|---|---|---|---|")
+        for key in sorted(stage1):
+            for name, data in (("1-stage exact (pre-paper)", stage1),
+                               ("2-stage pooled (paper)", single),
+                               ("2-stage + int8 (ours)", opt)):
+                r = data.get(key)
+                if not r or not r.get("ok") or r["shape"] != "search_1m":
+                    continue
+                st = r["struct"]
+                print(f"| {r['arch']} | {name} | {st['flops']/1e9:.1f} | "
+                      f"{2*st['bytes_written']/1e9:.2f} | "
+                      f"{st['collective_total']/1e6:.1f} |")
+
+
+if __name__ == "__main__":
+    main()

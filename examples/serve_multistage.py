@@ -1,0 +1,58 @@
+"""Serve a trained (or randomly initialised) retriever with batched
+requests through the multi-stage engine, including int8 and Matryoshka
+stage-1 variants (beyond-paper levers).
+
+    PYTHONPATH=src python examples/serve_multistage.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import multistage as MST
+from repro.core.matryoshka import add_truncated_stage
+from repro.data.synthetic import evaluate_ranking, make_benchmark
+from repro.retrieval.engine import make_search_fn
+from repro.retrieval.store import build_store
+
+
+def bench_config(name, stages, vectors, n_docs, q, qm, qrels):
+    fn = make_search_fn(None, stages, n_docs)
+    fn(vectors, q, qm)
+    t0 = time.time()
+    for _ in range(3):
+        scores, ids = fn(vectors, q, qm)
+    scores.block_until_ready()
+    dt = (time.time() - t0) / 3
+    m = evaluate_ranking(np.asarray(ids), qrels, ks=(5, 10))
+    print(f"{name:28s} QPS={len(q)/dt:7.1f}  "
+          + "  ".join(f"{k}={v:.3f}" for k, v in m.items()))
+
+
+def main():
+    cfg = get_config("colqwen")
+    bench = make_benchmark(cfg, (150, 120, 100), (30, 30, 30), seed=7)
+    store = build_store(cfg, jnp.asarray(bench.pages),
+                        jnp.asarray(bench.token_types))
+    q = jnp.asarray(bench.queries)
+    qm = jnp.asarray(bench.query_mask)
+    vecs = add_truncated_stage(store.vectors, "mean_pooling", 32)
+
+    print(f"corpus: {store.n_docs} pages ({cfg.name} geometry)")
+    bench_config("1-stage exact", MST.one_stage(10), vecs, store.n_docs,
+                 q, qm, bench.qrels)
+    bench_config("2-stage pooled", MST.two_stage(128, 10), vecs,
+                 store.n_docs, q, qm, bench.qrels)
+    bench_config("3-stage cascade", MST.three_stage(256, 128, 10), vecs,
+                 store.n_docs, q, qm, bench.qrels)
+    mrl = (MST.Stage("mean_pooling_mrl32", 128), MST.Stage("initial", 10))
+    bench_config("2-stage pooled+MRL32 (ours)", mrl, vecs, store.n_docs,
+                 q, qm, bench.qrels)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from repro.configs.base import (
+    LMConfig, GNNConfig, RecsysConfig, RetrieverConfig, MoESpec, ShapeSpec,
+)
+from repro.configs.registry import (
+    ALL_ARCHS, ASSIGNED_ARCHS, PAPER_ARCHS, get_cells, get_config, get_shapes,
+)

@@ -1,0 +1,24 @@
+"""colsmol-style retriever: tile-grid geometry (ColSmol-500M analogue).
+
+Processor resizes pages to 512x512, partitions into a 4x3 tile grid
+(12 tiles) + 1 global tile, each tile yielding P=64 patch tokens ->
+~832 visual tokens. Pooling: tile-level mean (Eq. 2 of the paper),
+832 -> 13 vectors (64x compression). [hf:vidore/colSmol-500M]
+"""
+from repro.configs.base import RetrieverConfig, RETRIEVER_SHAPES
+
+CONFIG = RetrieverConfig(
+    name="colsmol",
+    geometry="tiles",
+    d_model=768,
+    n_layers=12,
+    n_heads=12,
+    d_ff=3072,
+    out_dim=128,
+    tile_patches=64,
+    n_tiles=13,
+    n_special=6,
+    pool="tiles",
+    smooth="none",
+)
+SHAPES = RETRIEVER_SHAPES

@@ -1,0 +1,50 @@
+"""Architecture registry: ``--arch <id>`` resolution for every entry point."""
+from __future__ import annotations
+
+import importlib
+
+# arch id -> module path (one file per architecture)
+_ARCH_MODULES = {
+    # LM family (assigned)
+    "gemma2-9b": "repro.configs.gemma2_9b",
+    "gemma3-4b": "repro.configs.gemma3_4b",
+    "minicpm-2b": "repro.configs.minicpm_2b",
+    "granite-moe-1b-a400m": "repro.configs.granite_moe_1b",
+    "olmoe-1b-7b": "repro.configs.olmoe_1b_7b",
+    # GNN (assigned)
+    "equiformer-v2": "repro.configs.equiformer_v2",
+    # RecSys (assigned)
+    "dcn-v2": "repro.configs.dcn_v2",
+    "autoint": "repro.configs.autoint",
+    "bert4rec": "repro.configs.bert4rec",
+    "dlrm-mlperf": "repro.configs.dlrm_mlperf",
+    # Paper's own late-interaction retrievers
+    "colsmol": "repro.configs.colsmol",
+    "colpali": "repro.configs.colpali",
+    "colqwen": "repro.configs.colqwen",
+}
+
+ASSIGNED_ARCHS = tuple(list(_ARCH_MODULES)[:10])
+PAPER_ARCHS = ("colsmol", "colpali", "colqwen")
+ALL_ARCHS = tuple(_ARCH_MODULES)
+
+
+def get_config(arch: str):
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; available: {sorted(_ARCH_MODULES)}")
+    mod = importlib.import_module(_ARCH_MODULES[arch])
+    return mod.CONFIG
+
+
+def get_shapes(arch: str):
+    mod = importlib.import_module(_ARCH_MODULES[arch])
+    return {s.name: s for s in mod.SHAPES}
+
+
+def get_cells(archs=None):
+    """All (arch, shape) dry-run cells."""
+    out = []
+    for a in archs or ASSIGNED_ARCHS:
+        for s in get_shapes(a).values():
+            out.append((a, s.name))
+    return out

@@ -1,0 +1,3 @@
+"""The paper's primary contribution: training-free model-aware pooling,
+token hygiene, empty-region cropping, MaxSim, and multi-stage retrieval."""
+from repro.core import cropping, hygiene, matryoshka, maxsim, multistage, pooling

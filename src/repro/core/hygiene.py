@@ -1,0 +1,52 @@
+"""Token hygiene (paper §2.1): keep only visual patch tokens at index time.
+
+VLM processors emit, alongside visual patch tokens: (i) special tokens
+(CLS/BOS/EOS), (ii) prompt/instruction tokens, (iii) batch-padding tokens
+(trailing zero vectors). Standard MaxSim treats all tokens equally, letting
+non-visual tokens act as spurious high-similarity attractors. We mask them
+out at index time; pooling and MaxSim both respect the mask.
+
+Token-type convention (emitted by our processors / synthetic pipeline):
+    0 = visual patch, 1 = special, 2 = prompt/instruction, 3 = padding
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+VISUAL, SPECIAL, PROMPT, PAD = 0, 1, 2, 3
+
+
+def visual_mask_from_types(token_types: jax.Array) -> jax.Array:
+    """[S] int token types -> [S] bool (True = keep for indexing)."""
+    return token_types == VISUAL
+
+
+def detect_padding(embeddings: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Detect batch-padding tokens as (near-)zero vectors. [S,d] -> [S] bool
+    (True = is padding)."""
+    return jnp.linalg.norm(embeddings, axis=-1) < eps
+
+
+def hygiene_mask(embeddings: jax.Array,
+                 token_types: jax.Array | None = None) -> jax.Array:
+    """Combined visual-token mask: type-based when types are available,
+    plus zero-vector padding detection always."""
+    keep = ~detect_padding(embeddings)
+    if token_types is not None:
+        keep = keep & visual_mask_from_types(token_types)
+    return keep
+
+
+def apply_hygiene(embeddings: jax.Array, token_types: jax.Array | None = None):
+    """Returns (embeddings, mask). Vectors are not physically removed (static
+    shapes); masked vectors are zeroed so they can never win a MaxSim max
+    even if a caller forgets the mask."""
+    mask = hygiene_mask(embeddings, token_types)
+    return embeddings * mask[..., None].astype(embeddings.dtype), mask
+
+
+def retained_counts(mask: jax.Array) -> jax.Array:
+    """Number of retained (visual) tokens per page — the paper reports e.g.
+    ColPali 1024/1030 and ColQwen 720–768 (mean 743)."""
+    return jnp.sum(mask.astype(jnp.int32), axis=-1)

@@ -1,0 +1,36 @@
+"""Matryoshka-style dimension truncation (beyond-paper stage-1 variant).
+
+The paper's pooling reduces the *number* of vectors (D axis); Matryoshka
+Representation Learning motivates the orthogonal reduction along the
+*dimension* (d axis): score stage-1 with the first d' << d coordinates.
+For encoders trained with MRL this is training-free as well; for ours we
+simply expose it as a composable stage-1 proxy (used by the recsys
+``retrieval_cand`` cells and the serving-engine ablations).
+
+Cost: stage-1 madds become Q x D' x N x d' — multiplicative with the
+paper's vector-count reduction.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def truncate_dims(vecs: jax.Array, d_prime: int,
+                  renorm: bool = True) -> jax.Array:
+    """[..., d] -> [..., d'] prefix truncation (optionally re-L2-normalised)."""
+    out = vecs[..., :d_prime]
+    if renorm:
+        out = out / jnp.maximum(jnp.linalg.norm(out, axis=-1, keepdims=True), 1e-9)
+    return out
+
+
+def add_truncated_stage(store: dict, source: str, d_prime: int,
+                        name: str | None = None) -> dict:
+    """Register a truncated named vector derived from an existing one."""
+    name = name or f"{source}_mrl{d_prime}"
+    out = dict(store)
+    out[name] = truncate_dims(store[source], d_prime)
+    if source + "_mask" in store:
+        out[name + "_mask"] = store[source + "_mask"]
+    return out

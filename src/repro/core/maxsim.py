@@ -1,0 +1,93 @@
+"""MaxSim late-interaction scoring (ColBERT/ColPali relevance operator).
+
+score(q, x) = sum_i max_j <q_i, x_j>    (paper Eq. 1 cost model)
+
+Reference implementations here are pure jnp; the serving engine dispatches
+to the Pallas streaming kernel (``repro.kernels.maxsim``) on the hot path.
+Masks: ``q_mask`` marks valid query tokens, ``doc_mask`` marks valid stored
+vectors (token hygiene §2.1 — padding/special tokens must not act as
+spurious high-similarity attractors).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def maxsim(q: jax.Array, doc: jax.Array,
+           q_mask: jax.Array | None = None,
+           doc_mask: jax.Array | None = None) -> jax.Array:
+    """Single pair: q [Q,d], doc [D,d] -> scalar."""
+    sim = q @ doc.T                                   # [Q, D]
+    if doc_mask is not None:
+        sim = jnp.where(doc_mask[None, :], sim, NEG)
+    best = jnp.max(sim, axis=-1)                      # [Q]
+    if q_mask is not None:
+        best = jnp.where(q_mask, best, 0.0)
+    return jnp.sum(best, axis=-1)
+
+
+def maxsim_scan(q: jax.Array, docs: jax.Array,
+                q_mask: jax.Array | None = None,
+                doc_mask: jax.Array | None = None) -> jax.Array:
+    """One query against a corpus: q [Q,d], docs [N,D,d] -> [N]."""
+    sim = jnp.einsum("qd,njd->nqj", q, docs)          # [N, Q, D]
+    if doc_mask is not None:
+        sim = jnp.where(doc_mask[:, None, :], sim, NEG)
+    best = jnp.max(sim, axis=-1)                      # [N, Q]
+    if q_mask is not None:
+        best = jnp.where(q_mask[None, :], best, 0.0)
+    return jnp.sum(best, axis=-1)
+
+
+def maxsim_batched(q: jax.Array, docs: jax.Array,
+                   q_mask: jax.Array | None = None,
+                   doc_mask: jax.Array | None = None,
+                   chunk: int = 0) -> jax.Array:
+    """Query batch against corpus: q [B,Q,d], docs [N,D,d] -> [B,N].
+
+    ``chunk`` > 0 scans the corpus in chunks of that many documents to bound
+    the [B,N,Q,D] score intermediate (flash-style streaming in jnp).
+    """
+    def block(d_blk, m_blk):
+        sim = jnp.einsum("bqd,njd->bnqj", q, d_blk)
+        if m_blk is not None:
+            sim = jnp.where(m_blk[None, :, None, :], sim, NEG)
+        best = jnp.max(sim, axis=-1)                  # [B, n, Q]
+        if q_mask is not None:
+            best = jnp.where(q_mask[:, None, :], best, 0.0)
+        return jnp.sum(best, axis=-1)                 # [B, n]
+
+    n = docs.shape[0]
+    if chunk <= 0 or chunk >= n:
+        return block(docs, doc_mask)
+    assert n % chunk == 0, (n, chunk)
+    dblk = docs.reshape(n // chunk, chunk, *docs.shape[1:])
+    mblk = (None if doc_mask is None
+            else doc_mask.reshape(n // chunk, chunk, doc_mask.shape[-1]))
+    if mblk is None:
+        out = jax.lax.map(lambda d: block(d, None), dblk)
+    else:
+        out = jax.lax.map(lambda dm: block(dm[0], dm[1]), (dblk, mblk))
+    return jnp.moveaxis(out, 0, 1).reshape(q.shape[0], n)
+
+
+def maxsim_single_vector(q: jax.Array, vecs: jax.Array,
+                         q_mask: jax.Array | None = None) -> jax.Array:
+    """Global-pooling stage: q [B,Q,d] vs one vector per doc [N,d] -> [B,N].
+
+    MaxSim degenerates to a masked sum of query tokens dotted with the doc
+    vector — a single GEMM.
+    """
+    if q_mask is not None:
+        q = q * q_mask[..., None].astype(q.dtype)
+    qsum = jnp.sum(q, axis=-2)                        # [B, d]
+    return qsum @ vecs.T
+
+
+def search_cost_madds(n_queries: int, q_tokens: int, n_docs: int,
+                      d_vecs: int, dim: int) -> int:
+    """Paper Eq. 1: Q x D x N x d multiply-adds (per query batch)."""
+    return n_queries * q_tokens * d_vecs * n_docs * dim

@@ -1,0 +1,108 @@
+"""Multi-stage retrieval (paper §2.4) — reference single-device semantics.
+
+Each page is stored under named vectors (Qdrant-style):
+  - ``initial``        full multi-vector set (~700–1024 x d), exact MaxSim
+  - ``mean_pooling``   compact pooled set (~13–32 x d)
+  - ``experimental``   smoothed pooled variants (conv1d / gaussian / ...)
+  - ``global_pooling`` one vector per page
+
+A retrieval config is a cascade of stages; stage i scores only the
+candidates surviving stage i-1 and keeps its top-``k``:
+
+  1-stage:  [Stage("initial", k)]                       (exact baseline)
+  2-stage:  [Stage("mean_pooling", K), Stage("initial", k)]
+  3-stage:  [Stage("global_pooling", K0), Stage("mean_pooling", K),
+             Stage("initial", k)]
+
+The distributed engine (``repro.retrieval.engine``) executes the same
+cascade sharded over the mesh; this module is its oracle in tests.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import maxsim as ms
+
+
+@dataclass(frozen=True)
+class Stage:
+    vector: str            # named vector to score with
+    k: int                 # candidates kept after this stage
+    use_kernel: bool = False
+
+
+def two_stage(prefetch_k: int = 256, top_k: int = 100,
+              pooled: str = "mean_pooling") -> tuple:
+    return (Stage(pooled, prefetch_k), Stage("initial", top_k))
+
+
+def three_stage(k0: int = 1024, prefetch_k: int = 256, top_k: int = 100,
+                pooled: str = "mean_pooling") -> tuple:
+    return (Stage("global_pooling", k0), Stage(pooled, prefetch_k),
+            Stage("initial", top_k))
+
+
+def one_stage(top_k: int = 100) -> tuple:
+    return (Stage("initial", top_k),)
+
+
+def _score_stage(stage: Stage, store: dict, q: jax.Array,
+                 q_mask: jax.Array | None,
+                 cand: jax.Array | None) -> jax.Array:
+    """Scores for one stage. q [B,Q,d]; cand [B,C] doc ids or None (=all).
+
+    Returns [B, C] (or [B, N] when cand is None).
+    """
+    vecs = store[stage.vector]
+    mask = store.get(stage.vector + "_mask")
+    if vecs.shape[-1] < q.shape[-1]:
+        # Matryoshka stage: score with the matching query dim prefix
+        q = q[..., : vecs.shape[-1]]
+    if vecs.ndim == 2:                       # single-vector stage
+        scores = ms.maxsim_single_vector(q, vecs, q_mask)      # [B, N]
+        if cand is not None:
+            scores = jnp.take_along_axis(scores, cand, axis=1)
+        return scores
+    if cand is None:
+        return ms.maxsim_batched(q, vecs, q_mask, mask)        # [B, N]
+
+    def per_query(qi, qm, ci):
+        dv = vecs[ci]                                          # [C, D, d]
+        dm = None if mask is None else mask[ci]
+        return ms.maxsim_scan(qi, dv, qm, dm)
+
+    qm_in = (None if q_mask is None else 0)
+    return jax.vmap(per_query, in_axes=(0, qm_in, 0))(
+        q, q_mask, cand)
+
+
+def search(store: dict, q: jax.Array, stages: tuple,
+           q_mask: jax.Array | None = None):
+    """Run the cascade. Returns (scores [B, k_final], ids [B, k_final]),
+    ids sorted by descending final-stage score."""
+    cand = None
+    scores = None
+    for stage in stages:
+        s = _score_stage(stage, store, q, q_mask, cand)        # [B, C|N]
+        k = min(stage.k, s.shape[-1])
+        top_s, top_i = jax.lax.top_k(s, k)
+        if cand is None:
+            cand = top_i                                       # global ids
+        else:
+            cand = jnp.take_along_axis(cand, top_i, axis=1)
+        scores = top_s
+    return scores, cand
+
+
+def qps_cost_model(n_docs: int, q_tokens: int, dim: int, stages: tuple,
+                   store_dims: dict) -> int:
+    """Eq.-1 style multiply-add count for one query through a cascade."""
+    total, cand = 0, n_docs
+    for stage in stages:
+        d_vecs = store_dims[stage.vector]
+        total += q_tokens * d_vecs * cand * dim
+        cand = min(stage.k, cand)
+    return total

@@ -1,0 +1,217 @@
+"""Training-free, model-aware spatial pooling (paper §2.3).
+
+All functions are pure jnp, differentiable-free (no params), vmap-friendly,
+and mask-aware (composing with token hygiene, §2.1). The Pallas fused
+row-mean+smooth kernel in ``repro.kernels.pooling`` implements the hot
+index-time path; these are the reference semantics it is tested against.
+
+Strategies (paper section in parens):
+- ``tile_mean_pool``       ColSmol tile-level mean, Eq. 2       (§2.3.1)
+- ``row_mean_pool``        ColPali row-wise mean, Eq. 3         (§2.3.2)
+- ``conv1d_extend``        uniform sliding window, N->N+2, Eq.4 (§2.3.2)
+- ``smooth_same_length``   Gaussian/Triangular N->N, Eq. 5      (§2.3.3)
+- ``adaptive_row_pool``    dynamic-resolution row binning       (§2.3.3)
+- ``global_pool``          single-vector summary (3-stage cascade, §2.4)
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def _masked_mean(x: jax.Array, mask: jax.Array | None, axis: int) -> jax.Array:
+    """Mean over ``axis`` counting only mask-valid rows (mask broadcasts)."""
+    if mask is None:
+        return jnp.mean(x, axis=axis)
+    m = mask.astype(x.dtype)
+    while m.ndim < x.ndim:
+        m = m[..., None]
+    num = jnp.sum(x * m, axis=axis)
+    den = jnp.maximum(jnp.sum(m, axis=axis), 1.0)
+    return num / den
+
+
+# ---------------------------------------------------------------------------
+# §2.3.1 ColSmol: tile-level mean pooling (Eq. 2)
+# ---------------------------------------------------------------------------
+
+def tile_mean_pool(x: jax.Array, n_tiles: int, tile_patches: int,
+                   mask: jax.Array | None = None) -> jax.Array:
+    """[n_tiles*P, d] -> [n_tiles, d]: mean within each tile group.
+
+    ColSmol's processor emits ``n_tiles`` groups of ``P`` patch tokens
+    (the last group is the squeezed global tile).
+    """
+    P = tile_patches
+    assert x.shape[-2] == n_tiles * P, (x.shape, n_tiles, P)
+    xg = x.reshape(x.shape[:-2] + (n_tiles, P, x.shape[-1]))
+    mg = None if mask is None else mask.reshape(mask.shape[:-1] + (n_tiles, P))
+    return _masked_mean(xg, mg, axis=-2)
+
+
+# ---------------------------------------------------------------------------
+# §2.3.2 ColPali: row-wise mean pooling (Eq. 3)
+# ---------------------------------------------------------------------------
+
+def row_mean_pool(x: jax.Array, grid_h: int, grid_w: int,
+                  mask: jax.Array | None = None) -> jax.Array:
+    """[H*W, d] -> [H, d]: mean across columns of the patch grid."""
+    assert x.shape[-2] == grid_h * grid_w, (x.shape, grid_h, grid_w)
+    xg = x.reshape(x.shape[:-2] + (grid_h, grid_w, x.shape[-1]))
+    mg = None if mask is None else mask.reshape(mask.shape[:-1] + (grid_h, grid_w))
+    return _masked_mean(xg, mg, axis=-2)
+
+
+def col_mean_pool(x: jax.Array, grid_h: int, grid_w: int,
+                  mask: jax.Array | None = None) -> jax.Array:
+    """[H*W, d] -> [W, d]: column means (ablation variant)."""
+    xg = x.reshape(x.shape[:-2] + (grid_h, grid_w, x.shape[-1]))
+    mg = None if mask is None else mask.reshape(mask.shape[:-1] + (grid_h, grid_w))
+    return _masked_mean(xg, mg, axis=-3)
+
+
+# ---------------------------------------------------------------------------
+# §2.3.2 conv1d sliding-window pooling with boundary extension (Eq. 4)
+# ---------------------------------------------------------------------------
+
+def conv1d_extend(rows: jax.Array, k: int = 3) -> jax.Array:
+    """Uniform sliding window over row vectors, N -> N + 2r outputs.
+
+    Output i averages input rows ``W_i = {j : |j - (i - r)| <= r} ∩ [0, N)``
+    (Eq. 4). With k=3 (r=1) this yields N+2 vectors; boundary windows are
+    truncated and averaged over their valid support.
+    """
+    r = k // 2
+    n = rows.shape[-2]
+    idx = jnp.arange(n + 2 * r)[:, None] - r           # window centers
+    offs = jnp.arange(-r, r + 1)[None, :]
+    j = idx + offs                                      # [N+2r, k]
+    valid = (j >= 0) & (j < n)
+    jc = jnp.clip(j, 0, n - 1)
+    win = rows[..., jc, :]                              # [..., N+2r, k, d]
+    w = valid.astype(rows.dtype)[..., None]
+    return jnp.sum(win * w, axis=-2) / jnp.maximum(
+        jnp.sum(w, axis=-2), jnp.asarray(1.0, rows.dtype))
+
+
+# ---------------------------------------------------------------------------
+# §2.3.3 ColQwen: weighted same-length smoothing (Eq. 5)
+# ---------------------------------------------------------------------------
+
+def smoothing_weights(kind: str, k: int, dtype=jnp.float32) -> jax.Array:
+    """Window weights w_delta for delta in [-r, r]."""
+    r = k // 2
+    d = jnp.abs(jnp.arange(-r, r + 1)).astype(dtype)
+    if kind == "gaussian":
+        sigma = max(0.5, r / 2.0)
+        w = jnp.exp(-(d ** 2) / (2.0 * sigma ** 2))
+    elif kind == "triangular":
+        w = (r + 1.0) - d
+    elif kind == "uniform":
+        w = jnp.ones_like(d)
+    else:
+        raise ValueError(f"unknown smoothing kind {kind!r}")
+    return w
+
+
+def smooth_same_length(rows: jax.Array, kind: str = "gaussian", k: int = 3,
+                       row_mask: jax.Array | None = None) -> jax.Array:
+    """Same-length (N->N) weighted smoothing with boundary renormalisation.
+
+    Boundary indices outside [0, N) — and mask-invalid rows — are skipped
+    and the weights renormalised (Eq. 5). Gentle by design: PatchMerger
+    backbones already encode learned 2x2 local mixing, so only light
+    smoothing is safe (the conv1d variant double-smooths and degrades).
+    """
+    r = k // 2
+    n = rows.shape[-2]
+    w = smoothing_weights(kind, k, dtype=rows.dtype)        # [k]
+    i = jnp.arange(n)[:, None]
+    j = i + jnp.arange(-r, r + 1)[None, :]                  # [N, k]
+    valid = (j >= 0) & (j < n)
+    jc = jnp.clip(j, 0, n - 1)
+    if row_mask is not None:
+        valid = valid & row_mask[..., jc]
+    win = rows[..., jc, :]                                  # [..., N, k, d]
+    wv = w[None, :] * valid.astype(rows.dtype)              # [..., N, k]
+    z = jnp.maximum(jnp.sum(wv, axis=-1, keepdims=True), 1e-9)
+    return jnp.einsum("...nk,...nkd->...nd", wv / z, win)
+
+
+# ---------------------------------------------------------------------------
+# §2.3.3 adaptive row-mean pooling for dynamic resolution
+# ---------------------------------------------------------------------------
+
+def adaptive_row_pool(rows: jax.Array, h_eff: jax.Array, t_max: int):
+    """Down-sample up to ``h_eff`` valid rows to at most ``t_max`` outputs.
+
+    ``rows`` is [H_max, d] with the first ``h_eff`` rows valid (static shape;
+    ``h_eff`` may be a traced scalar). Rows are assigned to evenly-spaced
+    bins ``b(j) = floor(j * T / h)`` where ``T = min(h, t_max)`` — pages with
+    h_eff < t_max are NOT upsampled: trailing bins are empty and masked.
+
+    Returns (pooled [t_max, d], out_mask [t_max] bool).
+    """
+    h_max, d = rows.shape[-2], rows.shape[-1]
+    h = jnp.asarray(h_eff, jnp.int32)
+    t = jnp.minimum(h, t_max)
+    j = jnp.arange(h_max)
+    bins = jnp.where(j < h, (j * t) // jnp.maximum(h, 1), t_max)  # invalid -> overflow bin
+    one_hot = (bins[:, None] == jnp.arange(t_max)[None, :]).astype(rows.dtype)
+    num = jnp.einsum("...jd,jt->...td", rows, one_hot)
+    cnt = jnp.sum(one_hot, axis=0)                                # [t_max]
+    pooled = num / jnp.maximum(cnt, 1.0)[..., :, None]
+    return pooled, cnt > 0
+
+
+# ---------------------------------------------------------------------------
+# §2.4 global pooling (stage-0 of the 3-stage cascade)
+# ---------------------------------------------------------------------------
+
+def global_pool(x: jax.Array, mask: jax.Array | None = None) -> jax.Array:
+    """[D, d] -> [d] single-vector summary (masked mean, L2-normalised)."""
+    g = _masked_mean(x, mask, axis=-2)
+    return g / jnp.maximum(jnp.linalg.norm(g, axis=-1, keepdims=True), 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Model-aware dispatch
+# ---------------------------------------------------------------------------
+
+def pool_page(cfg, patches: jax.Array, mask: jax.Array | None = None,
+              h_eff: jax.Array | None = None):
+    """Apply the model-aware pooling stack for a RetrieverConfig.
+
+    Returns (pooled [n_pooled, d], pooled_mask [n_pooled] bool).
+    ``patches`` holds visual tokens only ([n_patches, d]).
+    """
+    if cfg.geometry == "tiles":
+        pooled = tile_mean_pool(patches, cfg.n_tiles, cfg.tile_patches, mask)
+        pmask = jnp.ones(pooled.shape[:-1], bool)
+    elif cfg.geometry == "grid":
+        rows = row_mean_pool(patches, cfg.grid_h, cfg.grid_w, mask)
+        if cfg.smooth == "conv1d":
+            pooled = conv1d_extend(rows, k=3)
+        elif cfg.smooth in ("gaussian", "triangular"):
+            pooled = smooth_same_length(rows, cfg.smooth, k=3)
+        else:
+            pooled = rows
+        pmask = jnp.ones(pooled.shape[:-1], bool)
+    elif cfg.geometry == "dynamic":
+        rows = row_mean_pool(patches, cfg.grid_h, cfg.grid_w, mask)
+        if cfg.smooth in ("gaussian", "triangular"):
+            rows = smooth_same_length(rows, cfg.smooth, k=3)
+        h = cfg.grid_h if h_eff is None else h_eff
+        pooled, pmask = adaptive_row_pool(rows, h, cfg.max_rows)
+    else:
+        raise ValueError(cfg.geometry)
+    # pooled vectors are re-L2-normalised so MaxSim stays cosine-like
+    pooled = pooled / jnp.maximum(
+        jnp.linalg.norm(pooled, axis=-1, keepdims=True), 1e-9)
+    return pooled, pmask
+
+
+pool_pages = jax.vmap(pool_page, in_axes=(None, 0, 0, 0), out_axes=0)

@@ -1,0 +1,95 @@
+"""Logical-axis sharding policy: model code names axes, the policy maps them
+to mesh axes. ``mesh=None`` turns every constraint into a no-op so the same
+model code runs single-device (smoke tests) and pod-scale (dry-run).
+
+Logical axes:
+  dp     data parallel (batch)                  -> ('pod', 'data') / ('data',)
+  tp     tensor parallel (heads/ffn/vocab/experts/channels/corpus)
+  sp     sequence parallel (long-context KV / activations)
+  flat   everything (node/edge/candidate sharding over all devices)
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+DEFAULT_RULES = {
+    "dp": ("data",),
+    "tp": ("model",),
+    "sp": ("model",),
+    "flat": ("data", "model"),
+}
+
+
+def rules_for_mesh(mesh: Mesh | None) -> dict:
+    rules = {k: tuple(v) for k, v in DEFAULT_RULES.items()}
+    if mesh is not None and "pod" in mesh.axis_names:
+        rules["dp"] = ("pod", "data")
+        rules["flat"] = ("pod", "data", "model")
+    return rules
+
+
+class ShardingPolicy:
+    def __init__(self, mesh: Mesh | None, rules: dict | None = None,
+                 overrides: dict | None = None):
+        self.mesh = mesh
+        self.rules = dict(rules or rules_for_mesh(mesh))
+        if overrides:
+            self.rules.update(overrides)
+
+    def _resolve(self, axis):
+        if axis is None:
+            return None
+        if isinstance(axis, (tuple, list)):
+            out: list = []
+            for a in axis:
+                r = self._resolve(a)
+                if r is None:
+                    continue
+                out.extend(r if isinstance(r, tuple) else (r,))
+            return tuple(out) if out else None
+        got = self.rules.get(axis, axis)
+        if isinstance(got, (tuple, list)):
+            got = tuple(got)
+            return got if len(got) != 1 else got[0]
+        return got
+
+    def spec(self, *axes) -> P:
+        return P(*[self._resolve(a) for a in axes])
+
+    def named(self, *axes) -> NamedSharding | None:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(*axes))
+
+    def constrain(self, x, *axes):
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, self.named(*axes))
+
+    def axis_size(self, logical: str) -> int:
+        if self.mesh is None:
+            return 1
+        r = self._resolve(logical)
+        if r is None:
+            return 1
+        if isinstance(r, str):
+            r = (r,)
+        n = 1
+        for a in r:
+            n *= self.mesh.shape[a]
+        return n
+
+    def tree_shardings(self, tree_of_specs):
+        """Map a pytree of logical-axis tuples to NamedShardings (or None)."""
+        if self.mesh is None:
+            return None
+        return jax.tree.map(
+            lambda axes: self.named(*axes), tree_of_specs,
+            is_leaf=lambda x: isinstance(x, tuple) and
+            all(a is None or isinstance(a, (str, tuple, list)) for a in x))
+
+
+def divisible(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0

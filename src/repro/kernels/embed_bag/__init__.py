@@ -1,0 +1,2 @@
+from repro.kernels.embed_bag.ops import embed_bag
+from repro.kernels.embed_bag.ref import embed_bag_ref

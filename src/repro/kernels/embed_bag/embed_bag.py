@@ -1,0 +1,58 @@
+"""Pallas TPU kernel: EmbeddingBag (gather + weighted segment reduce).
+
+JAX has no native nn.EmbeddingBag; the recsys hot path (huge sparse tables,
+multi-hot fields) is a ragged gather over the vocabulary followed by a
+per-bag weighted sum. On TPU the idiomatic implementation is the
+scalar-prefetch gather: bag indices are prefetched into SMEM *before* the
+grid runs, and each grid step's BlockSpec ``index_map`` reads the prefetched
+index to choose WHICH table row the next DMA fetches — the gather happens in
+the DMA engine, overlapping with compute, and table rows stream HBM -> VMEM
+exactly once per lookup (no one-hot matmul, no [bags, vocab] blowup).
+
+Grid: (n_bags, max_per_bag); the per-bag accumulator lives in the output
+block (revisited across the inner axis). Padded slots carry weight 0 and a
+clamped index so they fetch a valid row but contribute nothing.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _bag_kernel(idx_ref, w_ref, row_ref, out_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    b = pl.program_id(0)
+    w = w_ref[b, j]
+    out_ref[...] += w * row_ref[...].astype(jnp.float32)
+
+
+def embed_bag_pallas(table: jax.Array, indices: jax.Array,
+                     weights: jax.Array, *, interpret: bool = True):
+    """table [V,d], indices [B,L] int32 in [0,V), weights [B,L] f32
+    -> bags [B,d] f32 (sum_j weights[b,j] * table[indices[b,j]]).
+    """
+    V, d = table.shape
+    B, L = indices.shape
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,            # indices + weights land in SMEM
+        grid=(B, L),
+        in_specs=[
+            # one table row per step, chosen by the prefetched index
+            pl.BlockSpec((1, d), lambda b, j, idx, w: (idx[b, j], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda b, j, idx, w: (b, 0)),
+    )
+    return pl.pallas_call(
+        _bag_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, d), jnp.float32),
+        interpret=interpret,
+    )(indices.astype(jnp.int32), weights.astype(jnp.float32), table)

@@ -1,0 +1,33 @@
+"""Jitted wrapper for the EmbeddingBag kernel: modes, padding, dispatch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embed_bag.embed_bag import embed_bag_pallas
+from repro.kernels.embed_bag.ref import embed_bag_ref
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "impl", "interpret"))
+def embed_bag(table: jax.Array, indices: jax.Array,
+              valid: jax.Array | None = None, *, mode: str = "sum",
+              impl: str = "pallas", interpret: bool = True) -> jax.Array:
+    """Multi-hot embedding-bag lookup.
+
+    table [V,d]; indices [B,L] (entries < 0 or valid==False are padding);
+    mode in {"sum", "mean"}. Returns [B,d] f32.
+    """
+    B, L = indices.shape
+    if valid is None:
+        valid = indices >= 0
+    w = valid.astype(jnp.float32)
+    if mode == "mean":
+        w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1.0)
+    elif mode != "sum":
+        raise ValueError(mode)
+    idx = jnp.clip(indices, 0, table.shape[0] - 1).astype(jnp.int32)
+    if impl == "ref":
+        return embed_bag_ref(table, idx, w)
+    return embed_bag_pallas(table, idx, w, interpret=interpret)

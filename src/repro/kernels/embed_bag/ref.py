@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the EmbeddingBag kernel (take + weighted sum)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embed_bag_ref(table: jax.Array, indices: jax.Array,
+                  weights: jax.Array) -> jax.Array:
+    """table [V,d], indices [B,L], weights [B,L] -> [B,d] f32."""
+    rows = jnp.take(table, indices, axis=0).astype(jnp.float32)   # [B,L,d]
+    return jnp.einsum("bl,bld->bd", weights.astype(jnp.float32), rows)

@@ -1,0 +1,2 @@
+from repro.kernels.maxsim.ops import maxsim_scores, quantize_int8
+from repro.kernels.maxsim.ref import maxsim_ref

@@ -1,0 +1,71 @@
+"""Jitted public wrapper for the MaxSim kernel: padding, defaults, dispatch.
+
+``maxsim_scores(q, docs, ...)`` pads N/D/Q to hardware-aligned multiples,
+invokes the Pallas kernel (interpret=True on CPU — kernel-body semantics
+validated on this host, compiled for TPU on real hardware), and strips
+padding. Set ``impl="ref"`` to force the jnp oracle (used for A/B tests and
+as the CPU-fast path in benchmarks).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.maxsim.maxsim import maxsim_pallas
+from repro.kernels.maxsim.ref import maxsim_ref
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int, value=0):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "block_n", "block_d",
+                                             "interpret"))
+def maxsim_scores(q: jax.Array, docs: jax.Array,
+                  q_mask: jax.Array | None = None,
+                  doc_mask: jax.Array | None = None,
+                  scales: jax.Array | None = None,
+                  *, impl: str = "pallas", block_n: int = 8,
+                  block_d: int = 0, interpret: bool = True) -> jax.Array:
+    """q [B,Q,d], docs [N,D,d] -> scores [B,N] (f32)."""
+    B, Q, d = q.shape
+    N, D, _ = docs.shape
+    if q_mask is None:
+        q_mask = jnp.ones((B, Q), jnp.float32)
+    if doc_mask is None:
+        doc_mask = jnp.ones((N, D), jnp.float32)
+    q_mask = q_mask.astype(jnp.float32)
+    doc_mask = doc_mask.astype(jnp.float32)
+
+    if impl == "ref":
+        return maxsim_ref(q, q_mask, docs, doc_mask, scales)
+
+    # pad Q to sublane multiple, N to block_n, D to block_d (or lane mult)
+    qp = _pad_to(q, 1, 8)
+    qmp = _pad_to(q_mask, 1, 8)
+    bd = block_d if block_d > 0 else min(D, 256)
+    docs_p = _pad_to(_pad_to(docs, 0, block_n), 1, bd)
+    dm_p = _pad_to(_pad_to(doc_mask, 0, block_n), 1, bd)
+    sc_p = None
+    if scales is not None:
+        sc_p = _pad_to(_pad_to(scales, 0, block_n), 1, bd)
+    out = maxsim_pallas(qp, qmp, docs_p, dm_p, block_n=block_n,
+                        block_d=bd, scales=sc_p, interpret=interpret)
+    return out[:, :N]
+
+
+def quantize_int8(docs: jax.Array, eps: float = 1e-9):
+    """Per-vector symmetric int8 quantisation: docs [N,D,d] ->
+    (int8 codes [N,D,d], scales [N,D])."""
+    amax = jnp.max(jnp.abs(docs.astype(jnp.float32)), axis=-1)
+    scales = jnp.maximum(amax, eps) / 127.0
+    codes = jnp.clip(jnp.round(docs / scales[..., None]), -127, 127)
+    return codes.astype(jnp.int8), scales

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the MaxSim kernel (the kernel's correctness contract)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def maxsim_ref(q: jax.Array, q_mask: jax.Array, docs: jax.Array,
+               doc_mask: jax.Array,
+               scales: jax.Array | None = None) -> jax.Array:
+    """q [B,Q,d], q_mask [B,Q], docs [N,D,d], doc_mask [N,D] -> [B,N] f32."""
+    qf = q.astype(jnp.float32)
+    df = docs.astype(jnp.float32)
+    if scales is not None:
+        df = df * scales.astype(jnp.float32)[..., None]
+    sim = jnp.einsum("bqd,njd->bnqj", qf, df)
+    sim = jnp.where(doc_mask[None, :, None, :] > 0, sim, NEG)
+    best = jnp.max(sim, axis=-1)                          # [B, N, Q]
+    best = jnp.where(q_mask[:, None, :] > 0, jnp.maximum(best, NEG / 2), 0.0)
+    return jnp.sum(best, axis=-1)

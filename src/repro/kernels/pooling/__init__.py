@@ -1,0 +1,5 @@
+from repro.kernels.pooling.ops import (
+    adaptive_matrix, conv1d_matrix, global_matrix, pool_pages_fused,
+    pooling_matrix, rowmean_matrix, smooth_matrix, tile_matrix,
+)
+from repro.kernels.pooling.ref import pool_ref

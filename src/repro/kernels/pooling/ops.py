@@ -1,0 +1,112 @@
+"""Pooling-matrix construction + jitted wrapper for the fused pooling kernel.
+
+Every training-free strategy is lowered to one [n_out, S] matrix; strategy
+composition (e.g. conv1d-over-row-means) is matrix composition with the
+kernel's single mask-normalisation — exactly equivalent to the two-step
+reference whenever the hygiene mask is uniform within a pooling group (the
+common case: padding lives outside the visual-token range), and tested
+against ``pool_ref`` unconditionally.
+
+Per-page dynamic geometries (ColQwen h_eff < grid bound) take the pure-jnp
+path in ``repro.core.pooling``; the kernel path covers the static-geometry
+index-time bulk.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.pooling import smoothing_weights
+from repro.kernels.pooling.pooling import pool_pallas
+from repro.kernels.pooling.ref import pool_ref
+
+
+def rowmean_matrix(grid_h: int, grid_w: int) -> np.ndarray:
+    """[H, H*W] indicator: masked mean across each grid row (Eq. 3)."""
+    p = np.zeros((grid_h, grid_h * grid_w), np.float32)
+    for h in range(grid_h):
+        p[h, h * grid_w:(h + 1) * grid_w] = 1.0
+    return p
+
+
+def tile_matrix(n_tiles: int, tile_patches: int) -> np.ndarray:
+    """[T, T*P] indicator: masked mean within each tile group (Eq. 2)."""
+    p = np.zeros((n_tiles, n_tiles * tile_patches), np.float32)
+    for t in range(n_tiles):
+        p[t, t * tile_patches:(t + 1) * tile_patches] = 1.0
+    return p
+
+
+def conv1d_matrix(n: int, k: int = 3) -> np.ndarray:
+    """[N+2r, N] uniform sliding window with boundary extension (Eq. 4)."""
+    r = k // 2
+    p = np.zeros((n + 2 * r, n), np.float32)
+    for i in range(n + 2 * r):
+        for off in range(-r, r + 1):
+            j = (i - r) + off
+            if 0 <= j < n:
+                p[i, j] = 1.0
+    return p
+
+
+def smooth_matrix(n: int, kind: str, k: int = 3) -> np.ndarray:
+    """[N, N] same-length weighted smoothing (Eq. 5); rows renormalised."""
+    r = k // 2
+    w = np.asarray(smoothing_weights(kind, k))
+    p = np.zeros((n, n), np.float32)
+    for i in range(n):
+        for di, off in enumerate(range(-r, r + 1)):
+            j = i + off
+            if 0 <= j < n:
+                p[i, j] = w[di]
+    return p
+
+
+def adaptive_matrix(h: int, t_max: int) -> np.ndarray:
+    """[T, H] evenly-spaced row binning for a static h (dynamic h -> jnp path)."""
+    t = min(h, t_max)
+    p = np.zeros((t, h), np.float32)
+    for j in range(h):
+        p[(j * t) // h, j] = 1.0
+    return p
+
+
+def pooling_matrix(cfg) -> np.ndarray:
+    """Compose the model-aware pooling stack into one matrix [n_pooled, S]."""
+    if cfg.geometry == "tiles":
+        return tile_matrix(cfg.n_tiles, cfg.tile_patches)
+    base = rowmean_matrix(cfg.grid_h, cfg.grid_w)
+    if cfg.geometry == "grid":
+        if cfg.smooth == "conv1d":
+            return conv1d_matrix(cfg.grid_h) @ base
+        if cfg.smooth in ("gaussian", "triangular"):
+            return smooth_matrix(cfg.grid_h, cfg.smooth) @ base
+        return base
+    if cfg.geometry == "dynamic":
+        if cfg.smooth in ("gaussian", "triangular"):
+            base = smooth_matrix(cfg.grid_h, cfg.smooth) @ base
+        return adaptive_matrix(cfg.grid_h, cfg.max_rows) @ base
+    raise ValueError(cfg.geometry)
+
+
+def global_matrix(s: int) -> np.ndarray:
+    return np.ones((1, s), np.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "block_s", "l2_norm",
+                                             "interpret"))
+def pool_pages_fused(x: jax.Array, mask: jax.Array, pool_mat: jax.Array,
+                     *, impl: str = "pallas", block_s: int = 0,
+                     l2_norm: bool = True, interpret: bool = True):
+    """x [B,S,d] + mask [B,S] + pool_mat [n_out,S] -> pooled [B,n_out,d]."""
+    if impl == "ref":
+        return pool_ref(x, mask, pool_mat, l2_norm=l2_norm)
+    S = x.shape[1]
+    bs = block_s if block_s > 0 else (S if S % 2 else min(S, 512))
+    while S % bs:
+        bs //= 2
+    return pool_pallas(x, mask, pool_mat, block_s=max(bs, 1),
+                       l2_norm=l2_norm, interpret=interpret)

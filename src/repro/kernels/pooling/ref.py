@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the fused pooling kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pool_ref(x: jax.Array, mask: jax.Array, pool_mat: jax.Array,
+             l2_norm: bool = True) -> jax.Array:
+    """x [B,S,d], mask [B,S], pool_mat [n_out,S] -> [B,n_out,d] f32."""
+    xf = x.astype(jnp.float32)
+    m = mask.astype(jnp.float32)
+    p = pool_mat.astype(jnp.float32)
+    num = jnp.einsum("os,bsd->bod", p, xf * m[..., None])
+    den = jnp.einsum("os,bs->bo", p, m)
+    out = num / jnp.maximum(den, 1e-9)[..., None]
+    if l2_norm:
+        out = out / jnp.maximum(
+            jnp.linalg.norm(out, axis=-1, keepdims=True), 1e-9)
+    return out

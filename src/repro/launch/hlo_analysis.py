@@ -1,0 +1,195 @@
+"""Structural analysis of partitioned HLO: per-device FLOPs, HBM bytes and
+collective bytes with while-loop trip counts applied.
+
+XLA:CPU's ``compiled.cost_analysis()`` counts each while-loop body ONCE —
+useless for scan-over-layers models (a 42-layer gemma2 reports ~1/21 of its
+FLOPs). This walker instead:
+
+1. splits the post-optimisation HLO module into computations,
+2. per computation, accumulates
+   - matmul FLOPs from ``dot`` instructions (2 x prod(result dims) x
+     prod(contracting dims), operand shapes resolved from the local symbol
+     table),
+   - a bytes-accessed proxy: sum of result-buffer bytes over all
+     instructions (reads ~= writes within a small factor; we report
+     read+write as 2x),
+   - collective result-buffer bytes per op kind,
+3. builds the call graph (calls= / to_apply= / condition= / body=) and
+   propagates multiplicities from ENTRY, multiplying while bodies by their
+   trip count (largest integer constant in the loop condition — exact for
+   lax.scan/fori_loop lowerings),
+4. returns totals that ARE per-device (the partitioned module is the
+   per-device program).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+)$")
+_CALLED_RE = re.compile(
+    r"(?:calls|to_apply|condition|body)=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?.*\{\s*$")
+
+
+def _shape_dims(type_str: str):
+    """All dtype[dims] groups in a type string -> list of (bytes, dims)."""
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        d = [int(x) for x in dims.split(",") if x]
+        out.append((_DTYPE_BYTES[dt], d))
+    return out
+
+
+def _nbytes(type_str: str) -> int:
+    total = 0
+    for b, dims in _shape_dims(type_str):
+        n = 1
+        for x in dims:
+            n *= x
+        total += n * b
+    return total
+
+
+def split_computations(text: str) -> dict:
+    comps, cur, name = {}, None, None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HDR.match(line)
+            if m and ("->" in line or line.startswith("ENTRY")):
+                name, cur = m.group(1), []
+                if line.startswith("ENTRY"):
+                    comps["__entry__"] = name
+        else:
+            if line.strip() == "}":
+                comps[name] = cur
+                cur = None
+            else:
+                cur.append(line)
+    return comps
+
+
+def _dot_flops(rhs: str, symtab: dict) -> int:
+    """FLOPs of a dot instruction: 2 * prod(result) * prod(contracting)."""
+    res_shapes = _shape_dims(rhs.split(" dot(")[0])
+    if not res_shapes:
+        return 0
+    res_n = 1
+    for x in res_shapes[0][1]:
+        res_n *= x
+    # operand 0 name
+    m = re.search(r"dot\(\s*%?([\w\.\-]+)", rhs)
+    if not m:
+        return 0
+    lhs_shape = symtab.get(m.group(1))
+    mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rhs)
+    if lhs_shape is None or mc is None:
+        return 2 * res_n          # fallback: assume contract dim ~1
+    contract = 1
+    for idx in (int(i) for i in mc.group(1).split(",") if i):
+        if idx < len(lhs_shape):
+            contract *= lhs_shape[idx]
+    return 2 * res_n * contract
+
+
+def analyse_computation(lines: list) -> dict:
+    symtab = {}
+    flops = 0
+    bytes_written = 0
+    coll = defaultdict(int)
+    children = []           # (called_comp, kind, trip_hint_rhs)
+    for line in lines:
+        md = _DEF_RE.match(line)
+        if not md:
+            continue
+        name, rhs = md.group(1), md.group(2)
+        shapes = _shape_dims(rhs.split("(")[0] if "(" in rhs else rhs)
+        if shapes:
+            symtab[name] = shapes[0][1]
+        head = rhs.split("(")[0]
+        opname = head.rsplit(" ", 1)[-1] if " " in head else head
+        opname = opname.strip()
+        if opname not in ("parameter", "get-tuple-element", "tuple",
+                          "constant", "bitcast"):
+            bytes_written += _nbytes(rhs.split("(")[0])
+        if " dot(" in rhs or rhs.startswith("dot("):
+            flops += _dot_flops(rhs, symtab)
+        base = opname.replace("-start", "")
+        if base in COLLECTIVE_OPS:
+            coll[base] += _nbytes(rhs.split("(")[0])
+        if opname == "while" or "while(" in rhs:
+            mcond = re.search(r"condition=%?([\w\.\-]+)", rhs)
+            mbody = re.search(r"body=%?([\w\.\-]+)", rhs)
+            if mbody:
+                children.append((mbody.group(1), "while",
+                                 mcond.group(1) if mcond else None))
+        else:
+            # fusion/to_apply sub-computations: their intermediates live in
+            # registers, so bytes must NOT be counted — flops/collectives
+            # still are (dots can sit inside fusions on CPU).
+            for cm in _CALLED_RE.finditer(rhs):
+                children.append((cm.group(1), "fused", None))
+    return {"flops": flops, "bytes": bytes_written, "coll": dict(coll),
+            "children": children}
+
+
+def trip_count(cond_lines: list) -> int:
+    best = 1
+    for line in cond_lines:
+        for m in _CONST_RE.finditer(line):
+            v = int(m.group(1))
+            if 1 < v <= 1_000_000:
+                best = max(best, v)
+    return best
+
+
+def analyse_module(text: str) -> dict:
+    comps = split_computations(text)
+    entry = comps.pop("__entry__", None)
+    infos = {k: analyse_computation(v) for k, v in comps.items()
+             if isinstance(v, list)}
+
+    totals = {"flops": 0.0, "bytes": 0.0,
+              "coll": defaultdict(float), "while_trips": []}
+
+    def walk(name: str, mult: float, depth=0, count_bytes=True):
+        info = infos.get(name)
+        if info is None or depth > 50:
+            return
+        totals["flops"] += mult * info["flops"]
+        if count_bytes:
+            totals["bytes"] += mult * info["bytes"]
+        for k, v in info["coll"].items():
+            totals["coll"][k] += mult * v
+        for child, kind, cond in info["children"]:
+            m = mult
+            cb = count_bytes
+            if kind == "while":
+                trips = trip_count(comps.get(cond, [])) if cond else 1
+                totals["while_trips"].append(trips)
+                m = mult * trips
+            elif kind == "fused":
+                cb = False
+            walk(child, m, depth + 1, cb)
+
+    if entry:
+        walk(entry, 1.0)
+    return {
+        "flops": totals["flops"],
+        "bytes_written": totals["bytes"],
+        "collective_bytes": dict(totals["coll"]),
+        "collective_total": float(sum(totals["coll"].values())),
+        "while_trips": totals["while_trips"][:16],
+    }

@@ -1,0 +1,65 @@
+"""Serving launcher: index a corpus, run batched multi-stage search.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch colpali \
+      --pages 300 --queries 64 --stages 2
+
+Measures QPS for 1/2/3-stage configurations on the same corpus — the
+CPU-scale twin of the paper's Table 2 throughput columns (benchmarks/run.py
+does the full sweep).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def main():
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.core import multistage as MST
+    from repro.data.synthetic import evaluate_ranking, make_benchmark
+    from repro.retrieval.engine import make_search_fn
+    from repro.retrieval.store import build_store
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="colpali")
+    ap.add_argument("--pages", type=int, default=300)
+    ap.add_argument("--queries", type=int, default=60)
+    ap.add_argument("--stages", type=int, default=2, choices=(1, 2, 3))
+    ap.add_argument("--prefetch-k", type=int, default=256)
+    ap.add_argument("--top-k", type=int, default=100)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    per = max(args.pages // 3, 30)
+    qper = max(args.queries // 3, 10)
+    bench = make_benchmark(cfg, (per, per, per), (qper, qper, qper))
+    t0 = time.time()
+    store = build_store(cfg, jnp.asarray(bench.pages),
+                        jnp.asarray(bench.token_types))
+    print(f"indexed {store.n_docs} pages in {time.time()-t0:.2f}s "
+          f"(named vectors: {sorted(store.dims())})")
+
+    stages = {1: MST.one_stage(args.top_k),
+              2: MST.two_stage(args.prefetch_k, args.top_k),
+              3: MST.three_stage(4 * args.prefetch_k, args.prefetch_k,
+                                 args.top_k)}[args.stages]
+    fn = make_search_fn(None, stages, store.n_docs)
+    q = jnp.asarray(bench.queries)
+    qm = jnp.asarray(bench.query_mask)
+    scores, ids = fn(store.vectors, q, qm)      # compile
+    t0 = time.time()
+    for _ in range(3):
+        scores, ids = fn(store.vectors, q, qm)
+    scores.block_until_ready()
+    dt = (time.time() - t0) / 3
+    qps = len(q) / dt
+    metrics = evaluate_ranking(np.asarray(ids), bench.qrels, ks=(5, 10))
+    print(f"{args.stages}-stage: QPS={qps:.1f}  " +
+          "  ".join(f"{k}={v:.3f}" for k, v in metrics.items()))
+
+
+if __name__ == "__main__":
+    main()

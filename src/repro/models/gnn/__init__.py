@@ -1,0 +1,1 @@
+from repro.models.gnn import equiformer_v2, graph, sampler, so3

@@ -1,0 +1,259 @@
+"""SO(3) machinery for EquiformerV2/eSCN: real spherical harmonics, Wigner
+rotations, edge-frame alignment, and m-truncation metadata.
+
+Real orthonormal SH are evaluated with division-free Cartesian recursions
+(Q_l^m polynomials in z; c_m = rho^m cos(m phi), s_m = rho^m sin(m phi)
+via the complex-multiply recurrence), flattened as idx(l, m) = l^2 + l + m.
+
+Wigner rotation matrices D^l(R) (real basis) are built *numerically* from
+the defining property Y(R r) = D^l(R) Y(r): we precompute (numpy, once) a
+pseudo-inverse of SH evaluated at fixed generic sample directions, then per
+rotation evaluate SH at the rotated samples — exact up to lstsq conditioning
+and fully jittable. This avoids shipping e3nn's precomputed J matrices while
+keeping true equivariance (verified by tests/test_gnn.py).
+
+eSCN insight (arXiv:2302.03655, used by EquiformerV2): rotate each edge's
+features so the edge direction is the z-axis; the SH of the edge direction
+collapses onto m=0, making the tensor-product convolution block-diagonal in
+m — per-m SO(2) linear maps on the |m| <= m_max retained coefficients:
+O(l_max^6) -> O(l_max^3) per edge.
+"""
+from __future__ import annotations
+
+import math
+from functools import lru_cache
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# real spherical harmonics
+# ---------------------------------------------------------------------------
+
+@lru_cache(maxsize=None)
+def _k_norm(l_max: int) -> np.ndarray:
+    """Orthonormalisation constants K_lm (numpy, float64)."""
+    K = np.zeros((l_max + 1, l_max + 1))
+    for l in range(l_max + 1):
+        for m in range(l + 1):
+            K[l, m] = math.sqrt((2 * l + 1) / (4 * math.pi)
+                                * math.factorial(l - m) / math.factorial(l + m))
+    return K
+
+
+def sph_harm(xyz: jax.Array, l_max: int) -> jax.Array:
+    """Real orthonormal SH of unit vectors. [..., 3] -> [..., (l_max+1)^2]."""
+    x, y, z = xyz[..., 0], xyz[..., 1], xyz[..., 2]
+    K = _k_norm(l_max)
+    # Q_l^m(z) = P_l^m / rho^m  (polynomials in z), rho^2 = x^2 + y^2
+    Q: dict = {}
+    for m in range(l_max + 1):
+        if m == 0:
+            Q[(0, 0)] = jnp.ones_like(z)
+        else:
+            Q[(m, m)] = Q[(m - 1, m - 1)] * (-(2 * m - 1))
+        if m + 1 <= l_max:
+            Q[(m + 1, m)] = z * (2 * m + 1) * Q[(m, m)]
+        for l in range(m + 2, l_max + 1):
+            Q[(l, m)] = ((2 * l - 1) * z * Q[(l - 1, m)]
+                         - (l + m - 1) * Q[(l - 2, m)]) / (l - m)
+    # c_m = rho^m cos(m phi), s_m = rho^m sin(m phi)
+    cs = {0: (jnp.ones_like(z), jnp.zeros_like(z))}
+    for m in range(1, l_max + 1):
+        cm, sm = cs[m - 1]
+        cs[m] = (cm * x - sm * y, sm * x + cm * y)
+    out = [None] * (l_max + 1) ** 2
+    sqrt2 = math.sqrt(2.0)
+    for l in range(l_max + 1):
+        out[l * l + l] = K[l, 0] * Q[(l, 0)]
+        for m in range(1, l + 1):
+            cm, sm = cs[m]
+            out[l * l + l + m] = sqrt2 * K[l, m] * cm * Q[(l, m)]
+            out[l * l + l - m] = sqrt2 * K[l, m] * sm * Q[(l, m)]
+    return jnp.stack(out, axis=-1)
+
+
+def n_sph(l_max: int) -> int:
+    return (l_max + 1) ** 2
+
+
+# ---------------------------------------------------------------------------
+# Wigner rotations via sampled SH (numpy pinv precomputed per l)
+# ---------------------------------------------------------------------------
+
+@lru_cache(maxsize=None)
+def _sample_dirs(l_max: int) -> np.ndarray:
+    """Generic, well-spread unit vectors (Fibonacci sphere), oversampled."""
+    k = 2 * (2 * l_max + 1)
+    i = np.arange(k) + 0.5
+    phi = math.pi * (3.0 - math.sqrt(5.0)) * i
+    ct = 1.0 - 2.0 * i / k
+    st = np.sqrt(np.maximum(0.0, 1.0 - ct * ct))
+    return np.stack([st * np.cos(phi), st * np.sin(phi), ct], axis=-1)
+
+
+def _sph_harm_np(xyz: np.ndarray, l_max: int) -> np.ndarray:
+    """Pure-numpy float64 twin of sph_harm (table construction only)."""
+    x, y, z = xyz[..., 0], xyz[..., 1], xyz[..., 2]
+    K = _k_norm(l_max)
+    Q: dict = {}
+    for m in range(l_max + 1):
+        if m == 0:
+            Q[(0, 0)] = np.ones_like(z)
+        else:
+            Q[(m, m)] = Q[(m - 1, m - 1)] * (-(2 * m - 1))
+        if m + 1 <= l_max:
+            Q[(m + 1, m)] = z * (2 * m + 1) * Q[(m, m)]
+        for l in range(m + 2, l_max + 1):
+            Q[(l, m)] = ((2 * l - 1) * z * Q[(l - 1, m)]
+                         - (l + m - 1) * Q[(l - 2, m)]) / (l - m)
+    cs = {0: (np.ones_like(z), np.zeros_like(z))}
+    for m in range(1, l_max + 1):
+        cm, sm = cs[m - 1]
+        cs[m] = (cm * x - sm * y, sm * x + cm * y)
+    out = [None] * (l_max + 1) ** 2
+    sqrt2 = math.sqrt(2.0)
+    for l in range(l_max + 1):
+        out[l * l + l] = K[l, 0] * Q[(l, 0)]
+        for m in range(1, l + 1):
+            cm, sm = cs[m]
+            out[l * l + l + m] = sqrt2 * K[l, m] * cm * Q[(l, m)]
+            out[l * l + l - m] = sqrt2 * K[l, m] * sm * Q[(l, m)]
+    return np.stack(out, axis=-1)
+
+
+@lru_cache(maxsize=None)
+def _pinv_table(l_max: int):
+    """pinv of Y(samples) restricted to each l block: list of [2l+1, K]."""
+    S = _sample_dirs(l_max)
+    Y = _sph_harm_np(S.astype(np.float64), l_max)
+    out = []
+    for l in range(l_max + 1):
+        blk = Y[:, l * l:(l + 1) * (l + 1)]          # [K, 2l+1]
+        out.append(np.linalg.pinv(blk))              # [2l+1, K]
+    return out, S
+
+
+def wigner_blocks(R: jax.Array, l_max: int) -> list[jax.Array]:
+    """D^l(R) per l. R [..., 3, 3] -> list of [..., 2l+1, 2l+1].
+
+    D = (pinv(Y_S) @ Y(R S))^T per l block.
+    """
+    pinvs, S = _pinv_table(l_max)
+    Sj = jnp.asarray(S, R.dtype)                      # [K, 3]
+    RS = jnp.einsum("...ij,kj->...ki", R, Sj)         # [..., K, 3]
+    Yr = sph_harm(RS, l_max)                          # [..., K, (l_max+1)^2]
+    out = []
+    for l in range(l_max + 1):
+        blk = Yr[..., l * l:(l + 1) * (l + 1)]        # [..., K, 2l+1]
+        P = jnp.asarray(pinvs[l], R.dtype)            # [2l+1, K]
+        out.append(jnp.einsum("mk,...kn->...nm", P, blk))
+    return out
+
+
+def apply_wigner(blocks: list[jax.Array], coeffs: jax.Array,
+                 transpose: bool = False) -> jax.Array:
+    """coeffs [..., (l_max+1)^2, C]; blocks per l [..., 2l+1, 2l+1]."""
+    outs = []
+    for l, D in enumerate(blocks):
+        c = coeffs[..., l * l:(l + 1) * (l + 1), :]
+        eq = "...nm,...mc->...nc" if not transpose else "...mn,...mc->...nc"
+        outs.append(jnp.einsum(eq, D, c))
+    return jnp.concatenate(outs, axis=-2)
+
+
+def apply_wigner_trunc(blocks: list[jax.Array], coeffs: jax.Array,
+                       l_max: int, m_max: int) -> jax.Array:
+    """Fused rotate-into-edge-frame + m-truncate: computes ONLY the
+    |m| <= m_max output rows of each D^l block, so the full
+    [(l_max+1)^2, C] rotated tensor never materialises (the largest buffer
+    of the edge pipeline). Exact. Returns [..., n_keep, C] in keep order."""
+    outs = []
+    for l, D in enumerate(blocks):
+        lo = max(0, l - m_max)
+        rows = slice(l - min(l, m_max), l + min(l, m_max) + 1)
+        c = coeffs[..., l * l:(l + 1) * (l + 1), :]
+        outs.append(jnp.einsum("...nm,...mc->...nc", D[..., rows, :], c))
+    return jnp.concatenate(outs, axis=-2)
+
+
+def apply_wigner_expand(blocks: list[jax.Array], trunc: jax.Array,
+                        l_max: int, m_max: int) -> jax.Array:
+    """Fused expand-from-m-truncated + rotate-back (transpose): contracts
+    only the |m| <= m_max columns of each D^l, so the zero-padded
+    [(l_max+1)^2, C] tensor never materialises. Exact inverse path of
+    apply_wigner_trunc. trunc [..., n_keep, C] -> [..., (l_max+1)^2, C]."""
+    outs = []
+    off = 0
+    for l in range(l_max + 1):
+        n = 2 * min(l, m_max) + 1
+        rows = slice(l - min(l, m_max), l + min(l, m_max) + 1)
+        c = trunc[..., off:off + n, :]
+        D = blocks[l]
+        outs.append(jnp.einsum("...mn,...mc->...nc", D[..., rows, :], c))
+        off += n
+    return jnp.concatenate(outs, axis=-2)
+
+
+def rotation_to_z(v: jax.Array, eps: float = 1e-9) -> jax.Array:
+    """R with R @ v_hat = z_hat. v [..., 3] -> [..., 3, 3] (Rodrigues)."""
+    v = v / jnp.maximum(jnp.linalg.norm(v, axis=-1, keepdims=True), eps)
+    vx, vy, vz = v[..., 0], v[..., 1], v[..., 2]
+    # axis = v x z = (vy, -vx, 0); angle: cos = vz
+    s2 = vx * vx + vy * vy                           # sin^2(theta)
+    safe = s2 > eps
+    c = vz
+    # Rodrigues: R = c I + sin [a]_x + (1-c) a a^T, axis a = (v x z)/|v x z|
+    sn = jnp.sqrt(jnp.maximum(s2, eps))
+    aux, auy = vy / sn, -vx / sn
+    K = jnp.zeros(v.shape[:-1] + (3, 3), v.dtype)
+    K = K.at[..., 0, 2].set(auy).at[..., 2, 0].set(-auy)
+    K = K.at[..., 1, 2].set(-aux).at[..., 2, 1].set(aux)
+    I = jnp.eye(3, dtype=v.dtype)
+    a = jnp.stack([aux, auy, jnp.zeros_like(aux)], axis=-1)
+    R = (c[..., None, None] * I
+         + sn[..., None, None] * K
+         + (1 - c)[..., None, None] * a[..., :, None] * a[..., None, :])
+    # degenerate: v ~ +z -> I; v ~ -z -> rotation by pi about x
+    flip = jnp.zeros_like(I) + jnp.asarray(
+        [[1.0, 0, 0], [0, -1.0, 0], [0, 0, -1.0]], v.dtype)
+    Rdeg = jnp.where((vz > 0)[..., None, None], I, flip)
+    return jnp.where(safe[..., None, None], R, Rdeg)
+
+
+# ---------------------------------------------------------------------------
+# m-truncation metadata (eSCN)
+# ---------------------------------------------------------------------------
+
+@lru_cache(maxsize=None)
+def m_indices(l_max: int, m_max: int):
+    """Index arrays for the |m|<=m_max retained coefficients.
+
+    Returns dict with:
+      keep      [n_keep] flat indices into the (l_max+1)^2 axis
+      m0        positions (within keep) of m=0 comps, ordered by l
+      cos[m]    positions of +m comps per m=1..m_max (ordered by l)
+      sin[m]    positions of -m comps per m
+    """
+    keep, pos_of = [], {}
+    for l in range(l_max + 1):
+        for m in range(-l, l + 1):
+            if abs(m) <= m_max:
+                pos_of[(l, m)] = len(keep)
+                keep.append(l * l + l + m)
+    out = {
+        "keep": np.asarray(keep, np.int32),
+        "m0": np.asarray([pos_of[(l, 0)] for l in range(l_max + 1)], np.int32),
+        "cos": {}, "sin": {},
+    }
+    for m in range(1, m_max + 1):
+        ls = [l for l in range(m, l_max + 1)]
+        out["cos"][m] = np.asarray([pos_of[(l, m)] for l in ls], np.int32)
+        out["sin"][m] = np.asarray([pos_of[(l, -m)] for l in ls], np.int32)
+    return out
+
+
+def n_keep(l_max: int, m_max: int) -> int:
+    return int(len(m_indices(l_max, m_max)["keep"]))

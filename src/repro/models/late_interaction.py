@@ -1,0 +1,164 @@
+"""ColX-family late-interaction retriever encoders (the paper's models).
+
+Per the assignment rules the modality frontend is a stub: ``input_specs``
+provides precomputed patch embeddings [S, d_patch]. Everything after that is
+real: processor geometry (tiles / fixed grid / dynamic grid + 2x2
+PatchMerger), a bidirectional transformer backbone shared between pages and
+queries, projection to the late-interaction dim (d=128), L2 normalisation,
+token types for hygiene (§2.1), and the ColBERT-style in-batch contrastive
+training objective over MaxSim scores.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hygiene
+from repro.core.maxsim import maxsim_batched
+
+D_PATCH = 64          # frontend-stub patch embedding dim
+
+
+def _dense(key, shape, scale=None):
+    scale = scale if scale is not None else shape[0] ** -0.5
+    return jax.random.normal(key, shape, jnp.float32) * scale
+
+
+def _block_params(key, d, dff):
+    kq, kk, kv, ko, k1, k2 = jax.random.split(key, 6)
+    return {
+        "ln1": jnp.zeros((d,), jnp.float32),
+        "wq": _dense(kq, (d, d)), "wk": _dense(kk, (d, d)),
+        "wv": _dense(kv, (d, d)), "wo": _dense(ko, (d, d)),
+        "ln2": jnp.zeros((d,), jnp.float32),
+        "w1": _dense(k1, (d, dff)), "b1": jnp.zeros((dff,)),
+        "w2": _dense(k2, (dff, d)), "b2": jnp.zeros((d,)),
+    }
+
+
+def init_params(cfg, key) -> dict:
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    block_keys = jax.random.split(ks[0], cfg.n_layers)
+    blocks = jax.vmap(lambda k: _block_params(k, d, cfg.d_ff))(block_keys)
+    p = {
+        "patch_proj": _dense(ks[1], (D_PATCH, d)),
+        "text_embed": _dense(ks[2], (cfg.query_vocab, d)),
+        "special_embed": _dense(ks[3], (cfg.n_special, d)),
+        "pos_embed": _dense(ks[4], (cfg.seq_len + cfg.max_query_tokens, d),
+                            0.02),
+        "blocks": blocks,
+        "ln_f": jnp.zeros((d,), jnp.float32),
+        "out": _dense(ks[5], (d, cfg.out_dim)),
+    }
+    if cfg.geometry == "dynamic":
+        km1, km2 = jax.random.split(jax.random.fold_in(key, 7))
+        p["merger"] = {"ln": jnp.zeros((4 * D_PATCH,), jnp.float32),
+                       "w1": _dense(km1, (4 * D_PATCH, d)),
+                       "w2": _dense(km2, (d, D_PATCH)),
+                       "b": jnp.zeros((D_PATCH,))}
+    return p
+
+
+def _norm(x, w, eps=1e-6):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * (1.0 + w)
+
+
+def _backbone(cfg, params, x, mask, shard):
+    """Bidirectional transformer. x [B,S,d_model], mask [B,S]."""
+    H = cfg.n_heads
+    d = cfg.d_model
+    neg = jnp.asarray(-1e30, x.dtype)
+    amask = mask[:, None, :]
+
+    def body(x, b):
+        h = _norm(x, b["ln1"])
+        q = (h @ b["wq"]).reshape(*h.shape[:2], H, d // H)
+        k = (h @ b["wk"]).reshape(*h.shape[:2], H, d // H)
+        v = (h @ b["wv"]).reshape(*h.shape[:2], H, d // H)
+        s = jnp.einsum("bshk,bthk->bhst", q, k) / math.sqrt(d // H)
+        s = jnp.where(amask[:, None], s, neg)
+        a = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhst,bthk->bshk", a, v).reshape(h.shape)
+        x = x + o @ b["wo"]
+        h = _norm(x, b["ln2"])
+        x = x + jax.nn.gelu(h @ b["w1"] + b["b1"]) @ b["w2"] + b["b2"]
+        return x, None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body), x, params["blocks"])
+    return _norm(x, params["ln_f"])
+
+
+def patch_merger(cfg, params, patches: jax.Array) -> jax.Array:
+    """ColQwen-style learned 2x2 spatial merge: [H*W, dp] -> [H/2*W/2, dp].
+
+    LayerNorm -> concat 2x2 block -> MLP. The learned local mixing is why
+    conv1d pooling double-smooths this geometry (paper §2.3.3).
+    """
+    H, W = cfg.grid_h * 2, cfg.grid_w * 2
+    B = patches.shape[0]
+    g = patches.reshape(B, H // 2, 2, W // 2, 2, D_PATCH)
+    g = jnp.moveaxis(g, 3, 2).reshape(B, (H // 2) * (W // 2), 4 * D_PATCH)
+    h = _norm(g, params["merger"]["ln"])
+    h = jax.nn.gelu(h @ params["merger"]["w1"])
+    return h @ params["merger"]["w2"] + params["merger"]["b"]
+
+
+def encode_pages(cfg, params, patch_embeds: jax.Array, shard):
+    """patch_embeds [B, n_raw_patches, D_PATCH] -> (vecs [B,S,out], types [S]).
+
+    S = n_patches + n_special; emits token types so the indexer can apply
+    hygiene (the paper indexes visual tokens only).
+    """
+    B = patch_embeds.shape[0]
+    if cfg.geometry == "dynamic":
+        patch_embeds = patch_merger(cfg, params, patch_embeds)
+    x = patch_embeds @ params["patch_proj"]
+    sp = jnp.broadcast_to(params["special_embed"][None],
+                          (B, cfg.n_special, cfg.d_model))
+    x = jnp.concatenate([sp, x], axis=1)
+    x = x + params["pos_embed"][: x.shape[1]]
+    if shard is not None:
+        x = shard.constrain(x, "dp", None, None)
+    mask = jnp.ones((B, x.shape[1]), bool)
+    h = _backbone(cfg, params, x, mask, shard)
+    vecs = h @ params["out"]
+    vecs = vecs / jnp.maximum(jnp.linalg.norm(vecs, axis=-1, keepdims=True),
+                              1e-9)
+    types = jnp.concatenate([
+        jnp.full((cfg.n_special,), hygiene.SPECIAL, jnp.int32),
+        jnp.full((x.shape[1] - cfg.n_special,), hygiene.VISUAL, jnp.int32)])
+    return vecs, types
+
+
+def encode_queries(cfg, params, tokens: jax.Array, qmask: jax.Array, shard):
+    """tokens [B, Q] int32 -> query vectors [B, Q, out_dim] (masked)."""
+    x = jnp.take(params["text_embed"], tokens, axis=0)
+    x = x + params["pos_embed"][cfg.seq_len:cfg.seq_len + tokens.shape[1]]
+    h = _backbone(cfg, params, x, qmask, shard)
+    vecs = h @ params["out"]
+    vecs = vecs / jnp.maximum(jnp.linalg.norm(vecs, axis=-1, keepdims=True),
+                              1e-9)
+    return vecs * qmask[..., None].astype(vecs.dtype)
+
+
+def contrastive_loss(cfg, params, batch, shard):
+    """In-batch ColBERT-style contrastive loss over MaxSim scores."""
+    pages, _ = encode_pages(cfg, params, batch["patches"], shard)
+    # hygiene at training time too: score visual tokens only
+    vis = jnp.arange(pages.shape[1]) >= cfg.n_special
+    queries = encode_queries(cfg, params, batch["query_tokens"],
+                             batch["query_mask"], shard)
+    scores = maxsim_batched(queries, pages,
+                            q_mask=batch["query_mask"],
+                            doc_mask=jnp.broadcast_to(
+                                vis[None], (pages.shape[0], pages.shape[1])))
+    scores = scores / math.sqrt(cfg.out_dim)
+    labels = jnp.arange(scores.shape[0])
+    logz = jax.nn.logsumexp(scores, axis=-1)
+    gold = jnp.take_along_axis(scores, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)

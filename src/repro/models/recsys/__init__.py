@@ -1,0 +1,1 @@
+from repro.models.recsys import embedding, nets

@@ -1,0 +1,403 @@
+"""The four assigned recsys architectures + step functions.
+
+- dcn-v2       : cross network (x_{l+1} = x0 * (W x_l + b) + x_l), stacked MLP
+- autoint      : multi-head self-attention over field embeddings
+- bert4rec     : bidirectional transformer over item history, sampled softmax
+- dlrm-mlperf  : bottom MLP + dot interaction + top MLP (Criteo-1TB layout)
+
+``retrieval_step`` implements the paper's multi-stage search transferred to
+recsys: 1M candidates are scored by a cheap stage-1 proxy (Matryoshka-style
+truncated-dim dot product), the top-K survivors get the full model
+(exact "rerank"), mirroring pooled-prefetch -> exact-MaxSim. ``stages=1``
+gives the single-stage exact baseline.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models.recsys import embedding as EMB
+
+
+# ---------------------------------------------------------------------------
+# shared pieces
+# ---------------------------------------------------------------------------
+
+def _dense(key, shape, scale=None):
+    scale = scale if scale is not None else shape[0] ** -0.5
+    return jax.random.normal(key, shape, jnp.float32) * scale
+
+
+def mlp_params(key, dims: tuple) -> list:
+    keys = jax.random.split(key, len(dims) - 1)
+    return [{"w": _dense(k, (a, b)), "b": jnp.zeros((b,), jnp.float32)}
+            for k, a, b in zip(keys, dims[:-1], dims[1:])]
+
+
+def mlp_apply(layers: list, x: jax.Array, final_act: bool = False):
+    for i, l in enumerate(layers):
+        x = x @ l["w"] + l["b"]
+        if i < len(layers) - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+def bce_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    z, y = logits.astype(jnp.float32), labels.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(z, 0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z))))
+
+
+def layout_of(cfg) -> EMB.EmbeddingLayout:
+    return EMB.EmbeddingLayout(tuple(cfg.vocab_sizes), cfg.embed_dim)
+
+
+# ---------------------------------------------------------------------------
+# DCN-v2
+# ---------------------------------------------------------------------------
+
+def init_dcn(cfg, key, n_shards: int = 1) -> dict:
+    layout = layout_of(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d0 = cfg.n_dense + cfg.n_sparse * cfg.embed_dim
+    cross = [{"w": _dense(k, (d0, d0)), "b": jnp.zeros((d0,), jnp.float32)}
+             for k in jax.random.split(k2, cfg.n_cross_layers)]
+    return {"emb": EMB.init_embedding(layout, k1, n_shards),
+            "cross": cross,
+            "mlp": mlp_params(k3, (d0,) + tuple(cfg.mlp)),
+            "out": mlp_params(k4, (cfg.mlp[-1], 1))}
+
+
+def dcn_forward(cfg, params, dense, sparse_idx, shard):
+    layout = layout_of(cfg)
+    emb = EMB.lookup(layout, params["emb"], sparse_idx, shard)
+    B = dense.shape[0]
+    x0 = jnp.concatenate([dense, emb.reshape(B, -1)], axis=-1)
+    x = x0
+    for l in params["cross"]:
+        x = x0 * (x @ l["w"] + l["b"]) + x
+    h = mlp_apply(params["mlp"], x, final_act=True)
+    return mlp_apply(params["out"], h)[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# AutoInt
+# ---------------------------------------------------------------------------
+
+def init_autoint(cfg, key, n_shards: int = 1) -> dict:
+    layout = layout_of(cfg)
+    ks = jax.random.split(key, 2 + cfg.n_attn_layers)
+    d, da, H = cfg.embed_dim, cfg.d_attn, cfg.n_heads
+    layers = []
+    din = d
+    for k in ks[2:]:
+        kq, kk, kv, kr = jax.random.split(k, 4)
+        layers.append({
+            "wq": _dense(kq, (din, H, da)), "wk": _dense(kk, (din, H, da)),
+            "wv": _dense(kv, (din, H, da)), "wr": _dense(kr, (din, H * da)),
+        })
+        din = H * da           # concat-heads output feeds the next layer
+    out_dim = cfg.n_sparse * H * da
+    return {"emb": EMB.init_embedding(layout, ks[0], n_shards),
+            "layers": layers,
+            "out": mlp_params(ks[1], (out_dim, 1))}
+
+
+def autoint_forward(cfg, params, dense, sparse_idx, shard):
+    layout = layout_of(cfg)
+    x = EMB.lookup(layout, params["emb"], sparse_idx, shard)   # [B, F, d]
+    for l in params["layers"]:
+        q = jnp.einsum("bfd,dhk->bfhk", x, l["wq"])
+        k = jnp.einsum("bfd,dhk->bfhk", x, l["wk"])
+        v = jnp.einsum("bfd,dhk->bfhk", x, l["wv"])
+        a = jax.nn.softmax(jnp.einsum("bfhk,bghk->bhfg", q, k)
+                           / math.sqrt(q.shape[-1]), axis=-1)
+        o = jnp.einsum("bhfg,bghk->bfhk", a, v)
+        o = o.reshape(x.shape[:2] + (-1,))
+        x = jax.nn.relu(o + jnp.einsum("bfd,dk->bfk", x, l["wr"]))
+    B = x.shape[0]
+    return mlp_apply(params["out"], x.reshape(B, -1))[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# BERT4Rec
+# ---------------------------------------------------------------------------
+
+def init_bert4rec(cfg, key, n_shards: int = 1) -> dict:
+    d, H = cfg.embed_dim, cfg.n_heads
+    ks = jax.random.split(key, 3 + cfg.n_blocks)
+    blocks = []
+    for k in ks[3:]:
+        kq, kk, kv, ko, k1, k2 = jax.random.split(k, 6)
+        blocks.append({
+            "ln1": jnp.zeros((d,), jnp.float32),
+            "wq": _dense(kq, (d, d)), "wk": _dense(kk, (d, d)),
+            "wv": _dense(kv, (d, d)), "wo": _dense(ko, (d, d)),
+            "ln2": jnp.zeros((d,), jnp.float32),
+            "w1": _dense(k1, (d, 4 * d)), "b1": jnp.zeros((4 * d,)),
+            "w2": _dense(k2, (4 * d, d)), "b2": jnp.zeros((d,)),
+        })
+    # +1 for [MASK]; rows padded so the table row-shards over any tp<=256
+    rows = -(-(cfg.n_items + 1) // 256) * 256
+    return {
+        "items": _dense(ks[0], (rows, d)),
+        "pos": _dense(ks[1], (cfg.seq_len, d)),
+        "blocks": blocks,
+        "ln_f": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def _b4r_norm(x, w, eps=1e-6):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * (1.0 + w)
+
+
+def bert4rec_encode(cfg, params, seq, seq_mask, shard):
+    """seq [B,S] item ids (n_items = [MASK]) -> hidden [B,S,d]."""
+    d, H = cfg.embed_dim, cfg.n_heads
+    x = jnp.take(params["items"], seq, axis=0) + params["pos"]
+    x = shard.constrain(x, "dp", None, None)
+    neg = jnp.asarray(-1e30, x.dtype)
+    amask = (seq_mask[:, None, :] & seq_mask[:, :, None])
+
+    @jax.checkpoint
+    def block(x, b):
+        h = _b4r_norm(x, b["ln1"])
+        q = (h @ b["wq"]).reshape(*h.shape[:2], H, d // H)
+        k = (h @ b["wk"]).reshape(*h.shape[:2], H, d // H)
+        v = (h @ b["wv"]).reshape(*h.shape[:2], H, d // H)
+        s = jnp.einsum("bshk,bthk->bhst", q, k) / math.sqrt(d // H)
+        s = jnp.where(amask[:, None], s, neg)
+        a = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhst,bthk->bshk", a, v).reshape(h.shape)
+        x = x + o @ b["wo"]
+        h = _b4r_norm(x, b["ln2"])
+        x = x + jax.nn.gelu(h @ b["w1"] + b["b1"]) @ b["w2"] + b["b2"]
+        return x
+
+    for b in params["blocks"]:
+        x = block(x, b)
+    return _b4r_norm(x, params["ln_f"])
+
+
+def bert4rec_mlm_loss(cfg, params, batch, shard, n_neg: int = 256):
+    """Masked-item prediction with sampled softmax (vocab 10^6 makes full
+    softmax at 65k x 200 tokens infeasible; negatives shared per batch)."""
+    h = bert4rec_encode(cfg, params, batch["seq"], batch["seq_mask"], shard)
+    pos_idx = batch["mlm_positions"]                  # [B, M]
+    gold = batch["mlm_labels"]                        # [B, M]
+    hm = jnp.take_along_axis(h, pos_idx[..., None], axis=1)   # [B, M, d]
+    negs = batch["neg_samples"]                       # [K]
+    wpos = jnp.take(params["items"], gold, axis=0)    # [B, M, d]
+    wneg = jnp.take(params["items"], negs, axis=0)    # [K, d]
+    s_pos = jnp.sum(hm * wpos, axis=-1)               # [B, M]
+    s_neg = jnp.einsum("bmd,kd->bmk", hm, wneg)       # [B, M, K]
+    logits = jnp.concatenate([s_pos[..., None], s_neg], axis=-1)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ce = logz - s_pos
+    m = batch["mlm_mask"].astype(jnp.float32)
+    return jnp.sum(ce * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+def bert4rec_query(cfg, params, seq, seq_mask, shard):
+    """Encoded user vector = hidden at the last valid position. [B, d]."""
+    h = bert4rec_encode(cfg, params, seq, seq_mask, shard)
+    last = jnp.maximum(jnp.sum(seq_mask.astype(jnp.int32), axis=1) - 1, 0)
+    return jnp.take_along_axis(h, last[:, None, None], axis=1)[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# DLRM
+# ---------------------------------------------------------------------------
+
+def init_dlrm(cfg, key, n_shards: int = 1) -> dict:
+    layout = layout_of(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    n_vec = cfg.n_sparse + 1
+    n_int = n_vec * (n_vec - 1) // 2
+    top_in = n_int + cfg.embed_dim
+    return {"emb": EMB.init_embedding(layout, k1, n_shards),
+            "bot": mlp_params(k2, (cfg.n_dense,) + tuple(cfg.bot_mlp)),
+            "top": mlp_params(k3, (top_in,) + tuple(cfg.top_mlp))}
+
+
+def dlrm_forward(cfg, params, dense, sparse_idx, shard):
+    layout = layout_of(cfg)
+    emb = EMB.lookup(layout, params["emb"], sparse_idx, shard)  # [B,26,128]
+    dv = mlp_apply(params["bot"], dense, final_act=True)        # [B,128]
+    vecs = jnp.concatenate([dv[:, None, :], emb], axis=1)       # [B,27,128]
+    gram = jnp.einsum("bfd,bgd->bfg", vecs, vecs)
+    iu, ju = np.triu_indices(vecs.shape[1], k=1)
+    inter = gram[:, iu, ju]                                     # [B, 351]
+    x = jnp.concatenate([inter, dv], axis=-1)
+    return mlp_apply(params["top"], x)[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# family dispatch + steps
+# ---------------------------------------------------------------------------
+
+def init_params(cfg, key, n_shards: int = 1) -> dict:
+    return {"dcn-v2": init_dcn, "autoint": init_autoint,
+            "bert4rec": init_bert4rec, "dlrm-mlperf": init_dlrm}[cfg.name](
+        cfg, key, n_shards)
+
+
+def param_specs(cfg) -> dict:
+    """Logical axes: embedding tables as in embedding_specs; rest replicated."""
+    def rep(tree):
+        return jax.tree.map(lambda _: (None,), tree,
+                            is_leaf=lambda x: hasattr(x, "shape"))
+    # resolved dynamically in launch/dryrun via tree structure
+    return {}
+
+
+def ctr_forward(cfg, params, batch, shard):
+    if cfg.name == "dcn-v2":
+        return dcn_forward(cfg, params, batch["dense"], batch["sparse"], shard)
+    if cfg.name == "autoint":
+        return autoint_forward(cfg, params, batch.get("dense"),
+                               batch["sparse"], shard)
+    if cfg.name == "dlrm-mlperf":
+        return dlrm_forward(cfg, params, batch["dense"], batch["sparse"], shard)
+    raise ValueError(cfg.name)
+
+
+def loss_fn(cfg, params, batch, shard):
+    if cfg.name == "bert4rec":
+        return bert4rec_mlm_loss(cfg, params, batch, shard)
+    return bce_loss(ctr_forward(cfg, params, batch, shard), batch["labels"])
+
+
+def serve_step(cfg, params, batch, shard, chunk: int = 32768):
+    """Batched inference; offline-scoring batches (serve_bulk, 262k rows)
+    are scanned in fixed chunks so activation temp stays bounded."""
+    def one(b):
+        if cfg.name == "bert4rec":
+            q = bert4rec_query(cfg, params, b["seq"], b["seq_mask"], shard)
+            return jnp.einsum(
+                "bd,bkd->bk", q, jnp.take(params["items"], b["slate"], axis=0))
+        return jax.nn.sigmoid(ctr_forward(cfg, params, b, shard))
+
+    B = jax.tree.leaves(batch)[0].shape[0]
+    if B <= chunk or B % chunk:
+        return one(batch)
+    n = B // chunk
+    chunked = jax.tree.map(
+        lambda x: x.reshape((n, chunk) + x.shape[1:]), batch)
+    out = jax.lax.map(one, chunked)
+    return out.reshape((B,) + out.shape[2:])
+
+
+# ---------------------------------------------------------------------------
+# retrieval_cand: the paper's multi-stage search on 10^6 candidates
+# ---------------------------------------------------------------------------
+
+def _item_field(cfg) -> int:
+    return int(np.argmax(np.asarray(cfg.vocab_sizes))) if cfg.vocab_sizes else 0
+
+
+def _topk(scores: jax.Array, k: int, shard, two_level: bool) -> tuple:
+    """Top-k over flat-sharded scores.
+
+    two_level=False: plain lax.top_k — XLA all-gathers the full score
+    vector (4 MB for 1M f32 candidates) to every chip.
+    two_level=True: per-shard top-k then merge — only S*k (score, id)
+    pairs cross the interconnect (the engine's rerank-local trick applied
+    to recsys candidate generation).
+    """
+    n = scores.shape[0]
+    s = shard.axis_size("flat")
+    if not two_level or s <= 1 or n % s:
+        return jax.lax.top_k(scores, k)
+    seg = scores.reshape(s, n // s)
+    seg = shard.constrain(seg, "flat", None)
+    kk = min(k, n // s)
+    v, i = jax.lax.top_k(seg, kk)                     # local per shard
+    gid = i + (jnp.arange(s) * (n // s))[:, None]
+    v2, j = jax.lax.top_k(v.reshape(-1), k)
+    return v2, gid.reshape(-1)[j]
+
+
+def retrieval_step(cfg, params, batch, shard, *, stages: int = 2,
+                   prefetch_k: int = 256, top_k: int = 100,
+                   d_proxy: int = 16, two_level_topk: bool = False):
+    """Score 1 query against N candidates; return (scores, ids) of top_k.
+
+    stages=1: exact full-model scoring of every candidate (baseline).
+    stages=2: truncated-dim proxy prefetch -> exact rerank of top-K
+              (the paper's multi-stage retrieval, Matryoshka stage 1).
+    """
+    cand = batch["candidates"]                         # [N] item ids
+    N = cand.shape[0]
+
+    if cfg.name == "bert4rec":
+        q = bert4rec_query(cfg, params, batch["seq"], batch["seq_mask"],
+                           shard)[0]                   # [d]
+        table = params["items"]
+
+        def exact(ids):
+            vecs = jnp.take(table, ids, axis=0)
+            return vecs @ q
+
+        if stages == 1:
+            scores = shard.constrain(exact(cand), "flat")
+            return _topk(scores, top_k, shard, two_level_topk)
+        if "cand_proxy" in batch:
+            # named-vector discipline (paper §2.4): the stage-1 proxy is a
+            # SEPARATE compact table co-sharded with the candidate list, so
+            # the prefetch reads are local — no cross-shard row gather.
+            vec_p = batch["cand_proxy"]
+        else:
+            vec_p = jnp.take(table, cand, axis=0)[:, :d_proxy]
+        s1 = shard.constrain(vec_p @ q[:d_proxy], "flat")
+        _, pre = _topk(s1, prefetch_k, shard, two_level_topk)
+        s2 = exact(cand[pre])
+        sc, ix = jax.lax.top_k(s2, top_k)
+        return sc, pre[ix]
+
+    # CTR models: user context broadcast over candidate item field
+    fld = _item_field(cfg)
+    layout = layout_of(cfg)
+    base_sparse = batch["sparse"][0]                   # [n_sparse]
+    dense = batch["dense"][0] if "dense" in batch else None
+
+    def full_scores(ids):
+        n = ids.shape[0]
+        sp = jnp.broadcast_to(base_sparse, (n,) + base_sparse.shape)
+        sp = sp.at[:, fld].set(ids)
+        de = (jnp.broadcast_to(dense, (n,) + dense.shape)
+              if dense is not None else None)
+        b = {"dense": de, "sparse": sp}
+        return ctr_forward(cfg, params, b, shard)
+
+    if stages == 1:
+        scores = shard.constrain(full_scores(cand), "flat")
+        return _topk(scores, top_k, shard, two_level_topk)
+    # stage 1: truncated-dim dot between user-context proxy and item embeds
+    uvec = EMB.lookup(layout, params["emb"], base_sparse[None], shard)[0]
+    uq = jnp.mean(uvec, axis=0)[:d_proxy]              # [d_proxy]
+    if "cand_proxy" in batch:
+        ivecs = batch["cand_proxy"]
+    else:
+        ivecs = _field_embedding(layout, params["emb"], fld,
+                                 cand)[:, :d_proxy]
+    s1 = shard.constrain(ivecs @ uq, "flat")
+    _, pre = _topk(s1, prefetch_k, shard, two_level_topk)
+    s2 = full_scores(cand[pre])
+    sc, ix = jax.lax.top_k(s2, top_k)
+    return sc, pre[ix]
+
+
+def _field_embedding(layout, emb_params, fld: int, ids: jax.Array):
+    if fld in layout.big_fields:
+        offs, _ = layout.offsets(layout.big_fields)
+        off = offs[list(layout.big_fields).index(fld)]
+        return jnp.take(emb_params["big"], ids + off, axis=0)
+    offs, _ = layout.offsets(layout.small_fields)
+    off = offs[list(layout.small_fields).index(fld)]
+    return jnp.take(emb_params["small"], ids + off, axis=0)

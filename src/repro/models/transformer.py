@@ -1,0 +1,291 @@
+"""Decoder-only LM family: gemma2/gemma3/minicpm/granite-moe/olmoe.
+
+Design choices for pod-scale lowering:
+- scan-over-layers with parameters stacked per segment (HLO size and compile
+  time independent of depth); a segment is ``reps`` repetitions of the
+  arch's attention pattern so sliding windows stay static inside the body;
+- remat per scan body (activation recompute) — policy: save nothing;
+- chunked cross-entropy: logits are never materialised for the full batch
+  (essential at vocab 256k x 1M tokens);
+- GQA + sliding-window + logit soft-capping per config;
+- decode with ring-buffer KV caches (see kv_cache.py), sequence-sharded.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import kv_cache as KV
+
+
+# ---------------------------------------------------------------------------
+# segment plan: n_layers -> [(reps, windows_tuple), ...]
+# ---------------------------------------------------------------------------
+
+def segment_plan(cfg) -> list[tuple[int, tuple]]:
+    p = len(cfg.attn_pattern)
+    full, rem = divmod(cfg.n_layers, p)
+    plan = []
+    if full:
+        plan.append((full, tuple(cfg.attn_pattern)))
+    if rem:
+        plan.append((1, tuple(cfg.attn_pattern[:rem])))
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+def padded_vocab(cfg, mult: int = 256) -> int:
+    """Vocab rounded up so the embedding shards evenly over any tp<=mult
+    (Megatron-style padding; padded logits are masked in the loss)."""
+    return -(-cfg.vocab_size // mult) * mult
+
+
+def _layer_params(cfg, key) -> dict:
+    ka, kf = jax.random.split(key)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), jnp.float32),
+        "attn": L.attention_params(cfg, ka),
+        "ln2": jnp.zeros((cfg.d_model,), jnp.float32),
+        "ffn": L.ffn_params(cfg, kf),
+    }
+
+
+def init_params(cfg, key) -> dict:
+    plan = segment_plan(cfg)
+    keys = jax.random.split(key, len(plan) + 1)
+    segments = []
+    for (reps, windows), k in zip(plan, keys[:-1]):
+        slot_keys = jax.random.split(k, len(windows))
+        slots = []
+        for w, sk in zip(windows, slot_keys):
+            rep_keys = jax.random.split(sk, reps)
+            stacked = jax.vmap(lambda kk: _layer_params(cfg, kk))(rep_keys)
+            slots.append(stacked)
+        segments.append(slots)
+    return {
+        "embed": jax.random.normal(keys[-1], (padded_vocab(cfg), cfg.d_model),
+                                   jnp.float32) * cfg.d_model ** -0.5,
+        "segments": segments,
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+
+
+def _layer_specs(cfg, tp: int, dp: int) -> dict:
+    """Logical sharding axes per layer param (leading rep axis prepended).
+
+    Preference order per leaf:
+      1. tensor-parallel on the natural axis (heads / kv-heads / experts /
+         d_ff) when it divides tp;
+      2. otherwise ZeRO-style sharding over dp on the leading (d_model)
+         axis — the leaf is gathered for compute but params + both Adam
+         moments live sharded (this is what makes minicpm's 36 heads and
+         gemma3's 8 heads fit a tp=16 pod);
+      3. otherwise replicated (tiny leaves: norms).
+    """
+    tp, dp = max(tp, 1), max(dp, 1)
+    D = cfg.d_model
+
+    def zero(ndim):
+        return (None,) + ("dp",) + (None,) * (ndim - 1) \
+            if D % dp == 0 else (None,) * (ndim + 1)
+
+    heads_ok = cfg.n_heads % tp == 0
+    kv_ok = cfg.n_kv_heads % tp == 0
+    # wo is [reps, H, hd, D]: its ZeRO axis is D (last), not the leading one
+    wo_zero = ((None, None, None, "dp") if D % dp == 0
+               else (None,) * 4)
+    attn = {
+        "wq": (None, None, "tp", None) if heads_ok else zero(3),
+        "wk": (None, None, "tp", None) if kv_ok else zero(3),
+        "wv": (None, None, "tp", None) if kv_ok else zero(3),
+        "wo": (None, "tp", None, None) if heads_ok else wo_zero,
+    }
+    if cfg.moe is not None:
+        ok = cfg.moe.n_experts % tp == 0
+        ffn = {"router": (None, None, None),
+               "w1": (None, "tp", None, None) if ok else (None,) * 4,
+               "w3": (None, "tp", None, None) if ok else (None,) * 4,
+               "w2": (None, "tp", None, None) if ok else (None,) * 4}
+    else:
+        ok = cfg.d_ff % tp == 0
+        ffn = {"w1": (None, None, "tp") if ok else zero(2),
+               "w3": (None, None, "tp") if ok else zero(2),
+               "w2": (None, "tp", None) if ok else (None, None, None)}
+    return {"ln1": (None, None), "attn": attn, "ln2": (None, None),
+            "ffn": ffn}
+
+
+def param_specs(cfg, tp: int = 1, dp: int = 1) -> dict:
+    plan = segment_plan(cfg)
+    per_layer = _layer_specs(cfg, tp, dp)
+    segments = [[per_layer for _ in windows] for reps, windows in plan]
+    return {
+        "embed": ("tp", None),
+        "segments": segments,
+        "final_norm": (None,),
+    }
+
+
+def param_shardings(cfg, shard):
+    if shard.mesh is None:
+        return None
+    return jax.tree.map(lambda axes: shard.named(*axes),
+                        param_specs(cfg, shard.axis_size("tp"),
+                                    shard.axis_size("dp")),
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _block(cfg, p, x, positions, window, shard, cache=None, pos=None):
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    y, new_cache = L.attention(cfg, p["attn"], h, positions, window, shard,
+                               kv_cache=cache, decode_pos=pos)
+    x = x + y
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + L.ffn(cfg, p["ffn"], h, shard)
+    if cfg.sp_activations and x.shape[0] > 1 and x.shape[1] > 1:
+        # Megatron-SP: the residual stream (and so every saved scan carry)
+        # lives sequence-sharded over the model axis; XLA inserts the
+        # gather/reduce-scatter pair around attention/MLP entry/exit.
+        x = shard.constrain(x, "dp", "sp", None)
+    return x, new_cache
+
+
+def forward(cfg, params, tokens, shard, caches=None):
+    """Train/prefill forward. tokens [B,S] -> hidden [B,S,D].
+
+    When ``caches`` is given (prefill), each layer persists its KV into the
+    cache; returns (hidden, filled_caches), else hidden only.
+    """
+    B, S = tokens.shape
+    dtype = jnp.dtype(cfg.dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+    x = x * jnp.asarray(cfg.d_model ** 0.5, dtype)
+    x = shard.constrain(x, "dp" if B > 1 else None, None, None)
+    positions = jnp.arange(S)
+    plan = segment_plan(cfg)
+    out_caches = [] if caches is not None else None
+
+    for si, ((reps, windows), slots) in enumerate(zip(plan, params["segments"])):
+        seg_cache = caches[si] if caches is not None else None
+
+        def body(x, xs):
+            slot_params, slot_cache = xs
+            new_slots = []
+            for k, w in enumerate(windows):
+                c = None if slot_cache is None else slot_cache[k]
+                # pos=None: train/prefill branch (prefill persists the cache)
+                x, nc = _block(cfg, slot_params[k], x, positions, w, shard,
+                               cache=c, pos=None)
+                new_slots.append(nc)
+            return x, (new_slots if slot_cache is not None else None)
+
+        body = jax.checkpoint(body, policy=None) if cfg.remat else body
+        xs = (slots, seg_cache)
+        x, ys = jax.lax.scan(body, x, xs)
+        if out_caches is not None:
+            out_caches.append(ys)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if caches is not None:
+        return x, out_caches
+    return x
+
+
+def _logits(cfg, params, h):
+    logits = jnp.einsum("...d,vd->...v", h,
+                        params["embed"].astype(h.dtype))
+    logits = L.softcap(logits, cfg.final_softcap)
+    vp = params["embed"].shape[0]
+    if vp != cfg.vocab_size:                      # mask vocab padding
+        pad_mask = jnp.arange(vp) < cfg.vocab_size
+        logits = jnp.where(pad_mask, logits, jnp.asarray(-1e30, logits.dtype))
+    return logits
+
+
+def lm_loss(cfg, params, hidden, labels, shard):
+    """Chunked cross-entropy: scan over token chunks so [tokens, V] never
+    materialises. hidden [B,S,D], labels [B,S] -> scalar mean CE."""
+    B, S, D = hidden.shape
+    T = B * S
+    h2 = hidden.reshape(T, D)
+    y2 = labels.reshape(T)
+    n_chunks = cfg.loss_chunks
+    while T % n_chunks:
+        n_chunks -= 1
+    hc = h2.reshape(n_chunks, T // n_chunks, D)
+    yc = y2.reshape(n_chunks, T // n_chunks)
+
+    def chunk_loss(carry, xs):
+        h, y = xs
+        logits = _logits(cfg, params, h).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+        return carry + jnp.sum(logz - gold), None
+
+    total, _ = jax.lax.scan(
+        jax.checkpoint(chunk_loss) if cfg.remat else chunk_loss,
+        jnp.zeros((), jnp.float32), (hc, yc))
+    return total / T
+
+
+# ---------------------------------------------------------------------------
+# step functions (the dry-run lowers exactly these)
+# ---------------------------------------------------------------------------
+
+def loss_fn(cfg, params, batch, shard):
+    h = forward(cfg, params, batch["tokens"], shard)
+    return lm_loss(cfg, params, h, batch["labels"], shard)
+
+
+def prefill_step(cfg, params, batch, shard, windowed_cache: bool = True,
+                 decode_budget: int = 0):
+    """Prefill: build KV caches + last-position logits. batch: tokens [B,S].
+
+    ``decode_budget`` reserves extra cache capacity for subsequent decode
+    steps (global-attention slots grow by it; ring windows don't need to).
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    plan = segment_plan(cfg)
+    caches = KV.init_cache(cfg, plan, B, S + decode_budget,
+                           jnp.dtype(cfg.dtype), windowed=windowed_cache)
+    h, caches = forward(cfg, params, tokens, shard, caches=caches)
+    logits = _logits(cfg, params, h[:, -1:])
+    return logits, caches
+
+
+def decode_step(cfg, params, caches, token, pos, shard):
+    """One decode step. token [B,1] int32; pos scalar int32; caches from
+    init_cache/prefill. Returns (logits [B,1,V], new caches)."""
+    B = token.shape[0]
+    dtype = jnp.dtype(cfg.dtype)
+    x = jnp.take(params["embed"], token, axis=0).astype(dtype)
+    x = x * jnp.asarray(cfg.d_model ** 0.5, dtype)
+    positions = jnp.full((1,), pos, jnp.int32)
+    plan = segment_plan(cfg)
+    new_caches = []
+    for (reps, windows), slots, seg_cache in zip(plan, params["segments"],
+                                                 caches):
+        def body(x, xs):
+            slot_params, slot_cache = xs
+            new_slots = []
+            for k, w in enumerate(windows):
+                x, nc = _block(cfg, slot_params[k], x, positions, w, shard,
+                               cache=slot_cache[k], pos=pos)
+                new_slots.append(nc)
+            return x, new_slots
+
+        x, ys = jax.lax.scan(body, x, (slots, seg_cache))
+        new_caches.append(ys)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return _logits(cfg, params, x), new_caches

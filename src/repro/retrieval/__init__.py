@@ -1,0 +1,1 @@
+from repro.retrieval import engine, store, topk

@@ -1,0 +1,162 @@
+"""Mesh-sharded multi-stage MaxSim search engine.
+
+Executes the paper's prefetch->rerank cascade (§2.4) as ONE jitted XLA
+program over a corpus sharded across every chip (the "server-side single
+API call", pod-scale edition). Design rules:
+
+- documents never move: each shard scans/reranks only the documents it owns
+  ("rerank where the data lives");
+- the only interconnect traffic is (score, id) pairs: S*B*K*8 bytes per
+  stage via all-gather — independent of D and d;
+- stage-1 full-corpus scan is the memory-roofline term (N_local * D' * d
+  bytes); pooling shrinks it 32-64x, int8 storage halves it again;
+- later stages score only each shard's members of the global candidate set,
+  compacted to a fixed per-shard cap (exact when cap >= per-shard hits;
+  cap defaults to 8x the fair share).
+
+The single-device oracle is repro.core.multistage.search; tests assert
+equality on a 1-shard mesh and overlap on multi-shard CPU meshes.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core import maxsim as MS
+from repro.core.multistage import Stage
+from repro.retrieval.topk import allgather_topk, merge_topk
+
+NEG = -1e30
+
+
+def _flat_axes(mesh: Mesh) -> tuple:
+    return tuple(mesh.axis_names)
+
+
+def _score_all_local(stage_vecs, stage_mask, q, q_mask, scales=None):
+    """Full scan of this shard's docs. [n_loc, D, d] -> [B, n_loc].
+
+    With ``scales`` (int8 storage) the corpus streams at 1 byte/coord and is
+    dequantised on the fly — the scan stage is memory-bound, so this halves
+    its roofline term vs bf16."""
+    if scales is not None:
+        stage_vecs = stage_vecs.astype(q.dtype) * scales[..., None].astype(
+            q.dtype)
+    if stage_vecs.shape[-1] < q.shape[-1]:            # Matryoshka stage
+        q = q[..., : stage_vecs.shape[-1]]
+    if stage_vecs.ndim == 2:                          # single-vector stage
+        return MS.maxsim_single_vector(q, stage_vecs.astype(q.dtype), q_mask)
+    return MS.maxsim_batched(q, stage_vecs.astype(q.dtype), q_mask,
+                             stage_mask)
+
+
+def _score_candidates(stage_vecs, stage_mask, q, q_mask, cand_local, valid):
+    """Score per-query candidate lists. cand_local [B, L] local ids."""
+    if stage_vecs.ndim == 2:
+        vecs = jnp.take(stage_vecs, cand_local, axis=0).astype(q.dtype)
+        if q_mask is not None:
+            qs = jnp.sum(q * q_mask[..., None].astype(q.dtype), axis=-2)
+        else:
+            qs = jnp.sum(q, axis=-2)
+        s = jnp.einsum("bd,bld->bl", qs, vecs)
+        return jnp.where(valid, s, NEG)
+
+    def per_query(qi, qm, cl, vl):
+        dv = jnp.take(stage_vecs, cl, axis=0).astype(qi.dtype)   # [L, D, d]
+        dm = None if stage_mask is None else jnp.take(stage_mask, cl, axis=0)
+        s = MS.maxsim_scan(qi, dv, qm, dm)
+        return jnp.where(vl, s, NEG)
+
+    return jax.vmap(per_query)(q, q_mask, cand_local, valid)
+
+
+def _compact_local(cand: jax.Array, my_shard, n_local: int, cap: int):
+    """Select this shard's members of the global candidate list.
+
+    cand [B, K] global ids -> (local ids [B, L], valid [B, L], original
+    position [B, L]) with L = cap.
+    """
+    mine = (cand // n_local) == my_shard
+    order = jnp.argsort(~mine, axis=1)[:, :cap]            # mine first
+    sel_cand = jnp.take_along_axis(cand, order, axis=1)
+    sel_mine = jnp.take_along_axis(mine, order, axis=1)
+    return sel_cand % n_local, sel_mine, order
+
+
+def make_search_fn(mesh: Mesh | None, stages: tuple, n_docs: int,
+                   rerank_overcommit: int = 8):
+    """Build the jitted multi-stage search callable.
+
+    Returns fn(store_vectors: dict, q [B,Q,d], q_mask [B,Q]) ->
+    (scores [B,k], ids [B,k]).
+    """
+    if mesh is None:
+        from repro.core import multistage
+        def local_fn(store, q, q_mask):
+            return multistage.search(store, q, stages, q_mask)
+        return jax.jit(local_fn)
+
+    axes = _flat_axes(mesh)
+    n_shards = 1
+    for a in axes:
+        n_shards *= mesh.shape[a]
+    assert n_docs % n_shards == 0, (n_docs, n_shards)
+    n_local = n_docs // n_shards
+
+    def body(store, q, q_mask):
+        shard_idx = jax.lax.axis_index(axes)
+        cand = None
+        scores = None
+        for si, stage in enumerate(stages):
+            vecs = store[stage.vector]
+            mask = store.get(stage.vector + "_mask")
+            if cand is None:
+                scales = None
+                if stage.vector + "_int8" in store:   # scan stage only
+                    vecs = store[stage.vector + "_int8"]
+                    scales = store[stage.vector + "_scale"]
+                s_loc = _score_all_local(vecs, mask, q, q_mask,
+                                         scales)        # [B,n_loc]
+                k = min(stage.k, n_docs)
+                scores, cand = allgather_topk(s_loc, k, axes, shard_idx,
+                                              n_local)
+            else:
+                cap = min(cand.shape[1],
+                          max(1, -(-cand.shape[1] // n_shards))
+                          * rerank_overcommit)
+                cl, valid, order = _compact_local(cand, shard_idx, n_local,
+                                                  cap)
+                s = _score_candidates(vecs, mask, q, q_mask, cl, valid)
+                # merge shards: each candidate scored on exactly one shard
+                sv = jax.lax.all_gather(s, axes, axis=1, tiled=True)
+                ov = jax.lax.all_gather(
+                    jnp.take_along_axis(cand, order, axis=1), axes,
+                    axis=1, tiled=True)
+                k = min(stage.k, cand.shape[1])
+                scores, cand = merge_topk(sv, ov, k)
+        return scores, cand
+
+    store_specs = {}
+
+    def searcher(store, q, q_mask):
+        specs = {k: P(axes) if v.ndim >= 1 else P()
+                 for k, v in store.items()}
+        fn = shard_map(body, mesh=mesh,
+                       in_specs=(specs, P(), P()),
+                       out_specs=(P(), P()),
+                       check_rep=False)
+        return fn(store, q, q_mask)
+
+    return jax.jit(searcher)
+
+
+def store_shardings(mesh: Mesh | None, store_vectors: dict) -> dict | None:
+    if mesh is None:
+        return None
+    axes = _flat_axes(mesh)
+    return {k: NamedSharding(mesh, P(axes)) for k in store_vectors}

@@ -1,0 +1,91 @@
+"""Named-vector page store (the Qdrant-collection analogue, in JAX arrays).
+
+Each page is stored under named vectors (paper §2.4):
+  initial        [N, D, d]   full multi-vector set  (+ initial_mask [N, D])
+  mean_pooling   [N, D', d]  model-aware pooled     (+ mask)
+  experimental   [N, D'', d] smoothed variant       (+ mask)
+  global_pooling [N, d]      one vector per page
+
+Token hygiene (§2.1) is applied AT INDEX TIME: the masks mark visual tokens
+only, and masked slots are zeroed. Optional int8 storage (per-vector
+symmetric scales) halves corpus HBM bytes for the scan stage.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hygiene as HG
+from repro.core import pooling as PL
+from repro.core.pooling import global_pool
+from repro.kernels.maxsim.ops import quantize_int8
+
+
+@dataclass
+class VectorStore:
+    vectors: dict
+    n_docs: int
+    store_dtype: str = "bfloat16"
+
+    def dims(self) -> dict:
+        out = {}
+        for k, v in self.vectors.items():
+            if k.endswith("_mask") or k.endswith("_scale"):
+                continue
+            out[k] = v.shape[1] if v.ndim == 3 else 1
+        return out
+
+
+def build_store(cfg, page_embeds: jax.Array, token_types: jax.Array,
+                h_eff: jax.Array | None = None,
+                store_dtype=jnp.bfloat16,
+                experimental_smooth: str | None = None) -> VectorStore:
+    """Index a batch of encoded pages into named vectors.
+
+    page_embeds [N, S, d] raw encoder output (special tokens included);
+    token_types [S] or [N, S]. Hygiene strips non-visual tokens; pooling is
+    model-aware per cfg (RetrieverConfig).
+    """
+    N, S, d = page_embeds.shape
+    if token_types.ndim == 1:
+        token_types = jnp.broadcast_to(token_types[None], (N, S))
+    emb, keep = HG.apply_hygiene(page_embeds, token_types)
+
+    # physically separate visual tokens (static layout: specials lead)
+    n_vis = cfg.n_patches
+    vis = emb[:, S - n_vis:]                      # [N, n_vis, d]
+    vis_mask = keep[:, S - n_vis:]
+
+    pooled, pooled_mask = PL.pool_pages(cfg, vis, vis_mask,
+                                        (jnp.full((N,), cfg.grid_h)
+                                         if h_eff is None else h_eff))
+    vectors = {
+        "initial": vis.astype(store_dtype),
+        "initial_mask": vis_mask,
+        "mean_pooling": pooled.astype(store_dtype),
+        "mean_pooling_mask": pooled_mask,
+        "global_pooling": jax.vmap(global_pool)(vis, vis_mask).astype(
+            store_dtype),
+    }
+    if experimental_smooth:
+        import dataclasses as _dc
+        cfg2 = _dc.replace(cfg, smooth=experimental_smooth)
+        exp, exp_mask = PL.pool_pages(cfg2, vis, vis_mask,
+                                      (jnp.full((N,), cfg.grid_h)
+                                       if h_eff is None else h_eff))
+        vectors["experimental"] = exp.astype(store_dtype)
+        vectors["experimental_mask"] = exp_mask
+    return VectorStore(vectors, N, str(store_dtype))
+
+
+def quantize_store(store: VectorStore, names=("initial",)) -> VectorStore:
+    """Add int8 codes + scales for the given named vectors (beyond-paper:
+    halves scan-stage HBM bytes; composable with pooling per paper §7(iii))."""
+    vecs = dict(store.vectors)
+    for name in names:
+        codes, scales = quantize_int8(vecs[name].astype(jnp.float32))
+        vecs[name + "_int8"] = codes
+        vecs[name + "_scale"] = scales
+    return VectorStore(vecs, store.n_docs, store.store_dtype)

@@ -1,0 +1,35 @@
+"""Distributed top-k: local select + score/id merge (never moves payloads)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def local_topk_with_ids(scores: jax.Array, k: int, id_offset) -> tuple:
+    """scores [B, n_local] -> (vals [B,k], global ids [B,k])."""
+    k = min(k, scores.shape[-1])
+    v, i = jax.lax.top_k(scores, k)
+    return v, i + id_offset
+
+
+def merge_topk(vals: jax.Array, ids: jax.Array, k: int) -> tuple:
+    """Merge candidate sets along the last axis: vals/ids [B, M] -> top-k."""
+    k = min(k, vals.shape[-1])
+    v, sel = jax.lax.top_k(vals, k)
+    return v, jnp.take_along_axis(ids, sel, axis=-1)
+
+
+def allgather_topk(scores_local: jax.Array, k: int, axis_name,
+                   shard_index, n_local: int) -> tuple:
+    """Inside shard_map: per-shard top-k then all-gather + merge.
+
+    scores_local [B, n_local]; returns identical (vals, global ids) [B, k]
+    on every shard. Communication: S * B * k * 8 bytes (scores + ids), never
+    the documents.
+    """
+    v, gi = local_topk_with_ids(scores_local, k, shard_index * n_local)
+    av = jax.lax.all_gather(v, axis_name, axis=1, tiled=True)    # [B, S*k]
+    ai = jax.lax.all_gather(gi, axis_name, axis=1, tiled=True)
+    return merge_topk(av, ai, k)

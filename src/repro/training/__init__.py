@@ -1,0 +1,1 @@
+from repro.training import checkpoint, compression, elastic, optimizer, train_loop

@@ -1,0 +1,58 @@
+"""Gradient compression for cross-pod data parallelism.
+
+At multi-pod scale the pod axis crosses DCN (slow links): compressing the
+gradient all-reduce there is the standard trick. We implement int8
+error-feedback compression (1-bit-Adam-family): quantise grads to int8 with
+a per-tensor scale, all-reduce the int8 payload (4x fewer bytes than fp32,
+2x fewer than bf16), dequantise, and carry the quantisation residual into
+the next step (error feedback keeps the method unbiased over time).
+
+Used by train_loop when ``compress_pod_grads=True``; the residual state
+lives alongside the optimizer state and is checkpointed with it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_residuals(params):
+    return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+
+def quantize_int8(x: jax.Array, eps: float = 1e-12):
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax, eps) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_grads(grads, residuals):
+    """Returns (int8 tree, scale tree, new residual tree)."""
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        q, s = quantize_int8(gf)
+        deq = q.astype(jnp.float32) * s
+        return q, s, gf - deq
+    triples = jax.tree.map(one, grads, residuals)
+    is_triple = lambda x: isinstance(x, tuple) and len(x) == 3
+    qs = jax.tree.map(lambda t: t[0], triples, is_leaf=is_triple)
+    ss = jax.tree.map(lambda t: t[1], triples, is_leaf=is_triple)
+    rs = jax.tree.map(lambda t: t[2], triples, is_leaf=is_triple)
+    return qs, ss, rs
+
+
+def decompress_grads(qs, ss):
+    return jax.tree.map(lambda q, s: q.astype(jnp.float32) * s, qs, ss)
+
+
+def psum_compressed(grads, residuals, axis_name):
+    """Error-feedback int8 all-reduce over ``axis_name`` (inside shard_map
+    or pmap). int8 payloads are summed in int32 to avoid overflow."""
+    qs, ss, rs = compress_grads(grads, residuals)
+    summed = jax.tree.map(
+        lambda q: jax.lax.psum(q.astype(jnp.int32), axis_name), qs)
+    n = jax.lax.psum(1, axis_name)
+    avg = jax.tree.map(lambda si, s: si.astype(jnp.float32) * s / n,
+                       summed, ss)
+    return avg, rs

@@ -1,0 +1,65 @@
+"""Elastic scaling: reshard a running job onto a different device topology.
+
+Node failures at 1000+ node scale are routine; waiting for a replacement is
+wasted fleet time. The elastic path: checkpoint -> rebuild a smaller/larger
+mesh from the healthy devices -> re-place every param/opt leaf with the SAME
+logical axes resolved against the new mesh -> continue. Because all
+shardings in this framework are expressed as logical axes (ShardingPolicy),
+resharding is a pure re-resolution: no model code changes.
+
+Also includes straggler mitigation hooks: deterministic per-step data
+assignment (any host can recompute any shard's batch from (step, shard));
+and a step-time watchdog that flags slow hosts for eviction — on a real
+cluster this feeds the controller, here it is used by launch/train.py to
+demonstrate the policy.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+import jax
+
+from repro.distributed.sharding import ShardingPolicy
+
+
+def remesh(n_devices: int, model_parallel: int, devices=None):
+    """Build the largest (data, model) mesh that fits n_devices."""
+    devices = devices if devices is not None else jax.devices()[:n_devices]
+    model = min(model_parallel, len(devices))
+    data = len(devices) // model
+    devs = np.asarray(devices[: data * model]).reshape(data, model)
+    return jax.sharding.Mesh(devs, ("data", "model"))
+
+
+def reshard_tree(tree, logical_specs, new_mesh, overrides=None):
+    """Re-place every leaf onto ``new_mesh`` per its logical axes."""
+    pol = ShardingPolicy(new_mesh, overrides=overrides)
+    shardings = jax.tree.map(
+        lambda axes: pol.named(*axes), logical_specs,
+        is_leaf=lambda x: isinstance(x, tuple))
+    return jax.tree.map(jax.device_put, tree, shardings)
+
+
+def deterministic_batch_seed(run_seed: int, step: int, shard: int) -> int:
+    """Any host can recompute any shard's batch: seed = f(run, step, shard).
+    A recovered/backup host resumes mid-epoch without coordination."""
+    return (run_seed * 1_000_003 + step) * 65_537 + shard
+
+
+@dataclass
+class StragglerWatchdog:
+    """Flags steps (hosts) whose duration exceeds median * tolerance."""
+    tolerance: float = 2.0
+    window: int = 32
+    times: list = field(default_factory=list)
+
+    def record(self, seconds: float) -> bool:
+        """Returns True if this step is a straggler."""
+        self.times.append(seconds)
+        self.times = self.times[-self.window:]
+        if len(self.times) < 8:
+            return False
+        med = float(np.median(self.times))
+        return seconds > self.tolerance * med

@@ -1,0 +1,157 @@
+"""Optimizers + LR schedules (no optax offline; plain-pytree implementation).
+
+- AdamW (fp32 moments, decoupled weight decay, global-norm clipping)
+- Row-wise Adagrad for huge embedding tables (one scalar accumulator per
+  row instead of two full moments — 12 bytes/param -> ~4; the standard
+  production-DLRM choice)
+- Schedules: cosine, and WSD (warmup-stable-decay, the MiniCPM schedule —
+  minicpm-2b's config default).
+
+The optimizer is label-routed: a pytree of labels ("adamw" | "rowwise")
+produced from the param tree decides each leaf's update rule, so embedding
+tables and dense params coexist in one train step.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1.0 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def wsd_schedule(base_lr: float, warmup: int, stable: int, decay: int,
+                 floor: float = 0.1):
+    """Warmup-Stable-Decay (MiniCPM, arXiv:2404.06395 §4): linear warmup,
+    long constant plateau, short exponential-ish decay to floor*base."""
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        t = jnp.clip((step - warmup - stable) / max(decay, 1), 0.0, 1.0)
+        dec = base_lr * (floor ** t)
+        return jnp.where(step < warmup, warm,
+                         jnp.where(step < warmup + stable, base_lr, dec))
+    return lr
+
+
+# ---------------------------------------------------------------------------
+# optimizer state
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    betas: tuple = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    schedule: str = "cosine"        # cosine | wsd | const
+    warmup: int = 100
+    total_steps: int = 10_000
+
+
+def make_schedule(oc: OptConfig):
+    if oc.schedule == "cosine":
+        return cosine_schedule(oc.lr, oc.warmup, oc.total_steps)
+    if oc.schedule == "wsd":
+        stable = int(0.8 * oc.total_steps)
+        return wsd_schedule(oc.lr, oc.warmup, stable,
+                            oc.total_steps - oc.warmup - stable)
+    return lambda step: jnp.asarray(oc.lr, jnp.float32)
+
+
+def default_labels(params, rowwise_paths=("emb", "items", "big", "small")):
+    """Label embedding-table leaves 'rowwise', everything else 'adamw'."""
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    labels = {}
+
+    def label_of(path):
+        keys = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+        return ("rowwise" if any(k in rowwise_paths for k in keys
+                                 if isinstance(k, str)) else "adamw")
+    paths = [p for p, _ in flat]
+    vals = [label_of(p) for p in paths]
+    treedef = jax.tree_util.tree_structure(params)
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def init_opt_state(params, labels=None) -> dict:
+    labels = labels if labels is not None else default_labels(params)
+
+    def leaf_state(p, lab):
+        if lab == "rowwise":
+            return {"acc": jnp.zeros(p.shape[:1], jnp.float32)}
+        return {"m": jnp.zeros_like(p, jnp.float32),
+                "v": jnp.zeros_like(p, jnp.float32)}
+    return {"step": jnp.zeros((), jnp.int32),
+            "per_leaf": jax.tree.map(leaf_state, params, labels),
+            }
+
+
+def opt_state_specs(param_specs_tree, labels):
+    """Logical-axis specs for the optimizer state mirroring param specs."""
+    def leaf_spec(spec, lab):
+        if lab == "rowwise":
+            return {"acc": spec[:1]}
+        return {"m": spec, "v": spec}
+    per_leaf = jax.tree.map(leaf_spec, param_specs_tree, labels,
+                            is_leaf=lambda x: isinstance(x, tuple))
+    return {"step": (), "per_leaf": per_leaf}
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def apply_updates(params, grads, state, oc: OptConfig, labels=None,
+                  schedule=None):
+    """One optimizer step. Returns (new_params, new_state)."""
+    labels = labels if labels is not None else default_labels(params)
+    schedule = schedule or make_schedule(oc)
+    step = state["step"] + 1
+    lr = schedule(step)
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, oc.clip_norm / jnp.maximum(gn, 1e-9)) \
+        if oc.clip_norm > 0 else 1.0
+
+    b1, b2 = oc.betas
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, s, lab):
+        g = g.astype(jnp.float32) * scale
+        if lab == "rowwise":
+            row = jnp.mean(jnp.square(g), axis=tuple(range(1, g.ndim)))
+            acc = s["acc"] + row
+            denom = jnp.sqrt(acc) + oc.eps
+            new_p = p - lr * g / denom.reshape(denom.shape + (1,) * (g.ndim - 1))
+            return new_p.astype(p.dtype), {"acc": acc}
+        m = b1 * s["m"] + (1 - b1) * g
+        v = b2 * s["v"] + (1 - b2) * g * g
+        mhat, vhat = m / bc1, v / bc2
+        new_p = p.astype(jnp.float32) - lr * (
+            mhat / (jnp.sqrt(vhat) + oc.eps) + oc.weight_decay * p)
+        return new_p.astype(p.dtype), {"m": m, "v": v}
+
+    pairs = jax.tree.map(upd, params, grads, state["per_leaf"], labels)
+    is_pair = (lambda x: isinstance(x, tuple) and len(x) == 2
+               and isinstance(x[1], dict))
+    new_params = jax.tree.map(lambda t: t[0], pairs, is_leaf=is_pair)
+    new_per_leaf = jax.tree.map(lambda t: t[1], pairs, is_leaf=is_pair)
+    return new_params, {"step": step, "per_leaf": new_per_leaf}

@@ -1,0 +1,49 @@
+"""Generic training-step builder: value_and_grad + optimizer, one jit.
+
+The same builder serves every family (the loss closure differs) and the
+dry-run (the returned fn is what gets .lower().compile()'d). Buffers are
+donated so params/opt-state update in place.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.training import optimizer as OPT
+
+
+def make_train_step(loss_fn, oc: OPT.OptConfig, labels=None,
+                    donate: bool = True, jit: bool = True):
+    """loss_fn(params, batch) -> scalar. Returns
+    step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    schedule = OPT.make_schedule(oc)
+
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        labs = labels if labels is not None else OPT.default_labels(params)
+        new_params, new_state = OPT.apply_updates(
+            params, grads, opt_state, oc, labels=labs, schedule=schedule)
+        metrics = {"loss": loss.astype(jnp.float32),
+                   "grad_norm": OPT.global_norm(grads),
+                   "lr": schedule(new_state["step"])}
+        return new_params, new_state, metrics
+
+    if not jit:
+        return step
+    return jax.jit(step, donate_argnums=(0, 1) if donate else ())
+
+
+def train_many(step_fn, params, opt_state, batches, log_every: int = 10,
+               callback=None):
+    """Simple host loop used by examples; returns final (params, state, log)."""
+    log = []
+    for i, batch in enumerate(batches):
+        params, opt_state, m = step_fn(params, opt_state, batch)
+        if i % log_every == 0 or callback is not None:
+            m = {k: float(v) for k, v in m.items()}
+            log.append({"step": i, **m})
+            if callback is not None:
+                callback(i, m)
+    return params, opt_state, log

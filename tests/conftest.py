@@ -1,0 +1,23 @@
+import os
+
+# Smoke tests and benches see 1 device; only launch/dryrun forces 512.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def rand_rotation(rng):
+    a = rng.normal(size=(3, 3))
+    q, _ = np.linalg.qr(a)
+    if np.linalg.det(q) < 0:
+        q[:, 0] *= -1
+    return q

@@ -1,0 +1,147 @@
+"""Paper-core behaviour: pooling semantics, hygiene, cropping, multistage."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import cropping, hygiene, maxsim, multistage, pooling
+from repro.configs import get_config
+
+
+def test_row_mean_pool_exact(rng):
+    x = jnp.asarray(rng.normal(size=(12, 8)), jnp.float32)  # 3x4 grid
+    rows = pooling.row_mean_pool(x, 3, 4)
+    np.testing.assert_allclose(rows, np.asarray(x).reshape(3, 4, 8).mean(1),
+                               rtol=1e-6)
+
+
+def test_conv1d_boundary_extension():
+    rows = jnp.asarray([[1.0], [2.0], [3.0], [4.0]])
+    out = pooling.conv1d_extend(rows, k=3)
+    # Eq.4: N=4 -> 6 outputs; window W_i = {j: |j-(i-1)|<=1} clipped
+    expect = [1.0, 1.5, 2.0, 3.0, 3.5, 4.0]
+    np.testing.assert_allclose(out[:, 0], expect, rtol=1e-6)
+
+
+def test_gaussian_weights_match_paper():
+    w = pooling.smoothing_weights("gaussian", 3)
+    # paper §2.3.3: sigma = max(0.5, r/2) = 0.5 -> weights ~ [0.61^2?…]
+    np.testing.assert_allclose(np.asarray(w),
+                               [np.exp(-2.0), 1.0, np.exp(-2.0)], rtol=1e-5)
+    t = pooling.smoothing_weights("triangular", 3)
+    np.testing.assert_allclose(np.asarray(t), [1.0, 2.0, 1.0])
+
+
+def test_smoothing_preserves_constant_rows(rng):
+    """Same-length smoothing with renormalised boundaries is an average:
+    constant inputs are fixed points (Eq. 5 Z_i renormalisation)."""
+    rows = jnp.ones((7, 16)) * 3.14
+    for kind in ("gaussian", "triangular", "uniform"):
+        out = pooling.smooth_same_length(rows, kind)
+        np.testing.assert_allclose(out, rows, rtol=1e-5)
+
+
+def test_adaptive_pool_no_upsample(rng):
+    rows = jnp.asarray(rng.normal(size=(32, 8)), jnp.float32)
+    pooled, mask = pooling.adaptive_row_pool(rows, 20, 32)
+    assert int(mask.sum()) == 20          # h_eff < T: NOT upsampled
+    pooled2, mask2 = pooling.adaptive_row_pool(rows, 32, 16)
+    assert int(mask2.sum()) == 16         # h_eff > T: binned down
+    np.testing.assert_allclose(
+        pooled2[mask2], np.asarray(rows).reshape(16, 2, 8).mean(1), rtol=1e-5)
+
+
+def test_hygiene_padding_and_types(rng):
+    emb = jnp.asarray(rng.normal(size=(10, 4)), jnp.float32)
+    emb = emb.at[7:].set(0.0)                       # trailing padding
+    types = jnp.asarray([1, 1, 0, 0, 0, 0, 0, 3, 3, 3])
+    _, mask = hygiene.apply_hygiene(emb, types)
+    np.testing.assert_array_equal(np.asarray(mask),
+                                  [0, 0, 1, 1, 1, 1, 1, 0, 0, 0])
+    assert int(hygiene.retained_counts(mask)) == 5
+
+
+def test_hygiene_blocks_spurious_attractor(rng):
+    """A high-norm special token must not win MaxSim once masked."""
+    d = 16
+    q = jnp.asarray(rng.normal(size=(4, d)), jnp.float32)
+    doc = jnp.asarray(rng.normal(size=(8, d)), jnp.float32) * 0.1
+    attractor = q[0] * 10.0                          # matches query token 0
+    doc = doc.at[0].set(attractor)
+    types = jnp.asarray([1] + [0] * 7)               # token 0 is special
+    _, mask = hygiene.apply_hygiene(doc, types)
+    s_dirty = maxsim.maxsim(q, doc)
+    s_clean = maxsim.maxsim(q, doc, doc_mask=mask)
+    assert float(s_dirty) > float(s_clean) + 1.0
+
+
+def test_crop_box(rng):
+    from repro.data.synthetic import make_page_image
+    img, (mt, mb, ml, mr) = make_page_image(rng)
+    t, b, l, r = cropping.crop_box(img, std_thresh=0.02,
+                                   page_number_strip=0.05)
+    assert abs(t - mt) <= 2 and abs(l - ml) <= 2
+    assert b <= mb + 2 and r <= mr + 2
+    # page-number strip removed the footer row
+    assert b < img.shape[0] * 0.9
+
+
+def test_crop_blank_page_is_noop():
+    img = np.ones((64, 48), np.float32)
+    assert cropping.crop_box(img) == (0, 64, 0, 48)
+
+
+def test_maxsim_eq1_cost():
+    assert maxsim.search_cost_madds(1, 10, 10_000, 1024, 128) == \
+        10 * 1024 * 10_000 * 128
+    # paper: 32x reduction when D 1024 -> 32
+    full = maxsim.search_cost_madds(1, 10, 10_000, 1024, 128)
+    pooled = maxsim.search_cost_madds(1, 10, 10_000, 32, 128)
+    assert full // pooled == 32
+
+
+def test_multistage_k_equals_n_is_exact(rng):
+    docs = jnp.asarray(rng.normal(size=(40, 16, 32)), jnp.float32)
+    store = {"initial": docs, "initial_mask": jnp.ones((40, 16), bool),
+             "mean_pooling": docs[:, :4],
+             "mean_pooling_mask": jnp.ones((40, 4), bool),
+             "global_pooling": docs.mean(1)}
+    q = jnp.asarray(rng.normal(size=(5, 8, 32)), jnp.float32)
+    s1, i1 = multistage.search(store, q, multistage.one_stage(10))
+    s2, i2 = multistage.search(store, q, multistage.two_stage(40, 10))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_allclose(s1, s2, rtol=1e-5)
+
+
+def test_multistage_cost_model():
+    dims = {"initial": 1024, "mean_pooling": 32, "global_pooling": 1}
+    c1 = multistage.qps_cost_model(10_000, 10, 128, multistage.one_stage(100),
+                                   dims)
+    c2 = multistage.qps_cost_model(10_000, 10, 128,
+                                   multistage.two_stage(256, 100), dims)
+    assert c1 / c2 > 10          # paper: large multiplicative saving
+
+
+@pytest.mark.parametrize("arch", ["colpali", "colsmol", "colqwen"])
+def test_pool_page_shapes(rng, arch):
+    cfg = get_config(arch)
+    x = jnp.asarray(rng.normal(size=(cfg.n_patches, cfg.out_dim)),
+                    jnp.float32)
+    pooled, mask = pooling.pool_page(cfg, x)
+    assert pooled.shape[0] == cfg.n_pooled
+    # pooled vectors are unit-norm where valid
+    nrm = np.linalg.norm(np.asarray(pooled)[np.asarray(mask)], axis=-1)
+    np.testing.assert_allclose(nrm, 1.0, rtol=1e-4)
+
+
+def test_colqwen_uses_gaussian_not_conv1d():
+    """§2.3.3: conv1d double-smooths PatchMerger outputs; the colqwen
+    config must use same-length gaussian."""
+    cfg = get_config("colqwen")
+    assert cfg.smooth == "gaussian"
+    assert cfg.n_pooled <= cfg.max_rows
+    cfg_p = get_config("colpali")
+    assert cfg_p.smooth == "conv1d"
+    assert cfg_p.n_pooled == cfg_p.grid_h + 2      # N+2 boundary extension

@@ -1,0 +1,88 @@
+"""SO(3) machinery correctness (the eSCN foundation)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import rand_rotation
+from repro.models.gnn import so3
+
+
+def test_sph_harm_orthonormal(rng):
+    v = rng.normal(size=(100_000, 3))
+    v /= np.linalg.norm(v, axis=1, keepdims=True)
+    Y = np.asarray(so3.sph_harm(jnp.asarray(v, jnp.float32), 3))
+    G = (Y.T @ Y) / len(v) * 4 * np.pi
+    assert np.abs(G - np.eye(G.shape[0])).max() < 0.02   # MC noise bound
+
+
+@pytest.mark.parametrize("l_max", [1, 2, 4, 6])
+def test_wigner_property(rng, l_max):
+    """Y(R r) == D(R) Y(r) and D orthogonal, for random rotations."""
+    R = jnp.asarray(np.stack([rand_rotation(rng) for _ in range(4)]),
+                    jnp.float32)
+    blocks = so3.wigner_blocks(R, l_max)
+    r = rng.normal(size=(4, 3))
+    r = jnp.asarray(r / np.linalg.norm(r, axis=1, keepdims=True), jnp.float32)
+    Yr = so3.sph_harm(jnp.einsum("bij,bj->bi", R, r), l_max)
+    Y0 = so3.sph_harm(r, l_max)
+    for l, D in enumerate(blocks):
+        lhs = Yr[:, l * l:(l + 1) ** 2]
+        rhs = jnp.einsum("bnm,bm->bn", D, Y0[:, l * l:(l + 1) ** 2])
+        np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                                   atol=5e-5)
+        orth = jnp.einsum("bnm,bkm->bnk", D, D)
+        np.testing.assert_allclose(np.asarray(orth),
+                                   np.broadcast_to(np.eye(2 * l + 1),
+                                                   orth.shape), atol=5e-5)
+
+
+def test_wigner_composition(rng):
+    """D(R1 R2) == D(R1) D(R2) (representation property)."""
+    R1 = jnp.asarray(rand_rotation(rng)[None], jnp.float32)
+    R2 = jnp.asarray(rand_rotation(rng)[None], jnp.float32)
+    b12 = so3.wigner_blocks(jnp.einsum("bij,bjk->bik", R1, R2), 4)
+    b1 = so3.wigner_blocks(R1, 4)
+    b2 = so3.wigner_blocks(R2, 4)
+    for l in range(5):
+        lhs = b12[l][0]
+        rhs = b1[l][0] @ b2[l][0]
+        np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                                   atol=1e-4)
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(deadline=None, max_examples=30)
+def test_rotation_to_z_property(seed):
+    rng = np.random.default_rng(seed)
+    v = rng.normal(size=(8, 3)).astype(np.float32)
+    v[0] = [0, 0, 1]
+    v[1] = [0, 0, -1]
+    v[2] = [1e-12, 0, 1]              # near-degenerate
+    R = so3.rotation_to_z(jnp.asarray(v))
+    vn = v / np.maximum(np.linalg.norm(v, axis=1, keepdims=True), 1e-9)
+    out = np.einsum("bij,bj->bi", np.asarray(R), vn)
+    np.testing.assert_allclose(out, np.tile([0, 0, 1.0], (8, 1)), atol=1e-5)
+    # proper rotations: det == +1
+    np.testing.assert_allclose(np.linalg.det(np.asarray(R)), 1.0, atol=1e-5)
+
+
+def test_m_truncation_indices():
+    mi = so3.m_indices(6, 2)
+    assert so3.n_keep(6, 2) == 29
+    assert len(mi["m0"]) == 7
+    assert len(mi["cos"][1]) == 6 and len(mi["cos"][2]) == 5
+    # keep indices are sorted flat indices into the 49-dim axis
+    assert (np.diff(mi["keep"]) > 0).all()
+    assert mi["keep"][0] == 0 and mi["keep"][-1] < 49
+
+
+def test_apply_wigner_roundtrip(rng):
+    """rotate then rotate-back (transpose) is identity."""
+    R = jnp.asarray(rand_rotation(rng)[None], jnp.float32)
+    blocks = so3.wigner_blocks(R, 4)
+    x = jnp.asarray(rng.normal(size=(1, 25, 8)), jnp.float32)
+    y = so3.apply_wigner(blocks, x)
+    x2 = so3.apply_wigner(blocks, y, transpose=True)
+    np.testing.assert_allclose(np.asarray(x), np.asarray(x2), atol=1e-5)

@@ -1,0 +1,132 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs jnp oracles."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.maxsim import maxsim_scores, maxsim_ref, quantize_int8
+from repro.kernels.pooling import (pool_pages_fused, pool_ref,
+                                   pooling_matrix, rowmean_matrix,
+                                   conv1d_matrix, smooth_matrix, tile_matrix)
+from repro.kernels.embed_bag import embed_bag, embed_bag_ref
+from repro.configs import get_config
+
+
+# ---------------------------------------------------------------------------
+# MaxSim kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,Q,N,D,d", [
+    (1, 8, 8, 32, 128),
+    (3, 10, 24, 96, 128),
+    (2, 17, 40, 64, 64),      # Q not sublane-aligned -> padding path
+    (4, 32, 16, 130, 128),    # D not block-aligned
+])
+def test_maxsim_shapes(rng, B, Q, N, D, d):
+    q = jnp.asarray(rng.normal(size=(B, Q, d)), jnp.float32)
+    docs = jnp.asarray(rng.normal(size=(N, D, d)), jnp.float32)
+    qm = jnp.asarray(rng.random((B, Q)) > 0.2, jnp.float32)
+    dm = jnp.asarray(rng.random((N, D)) > 0.1, jnp.float32)
+    out = maxsim_scores(q, docs, qm, dm, impl="pallas", block_n=8, block_d=32)
+    ref = maxsim_ref(q, qm, docs, dm)
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_maxsim_dtypes(rng, dtype):
+    q = jnp.asarray(rng.normal(size=(2, 8, 128)), dtype)
+    docs = jnp.asarray(rng.normal(size=(16, 64, 128)), dtype)
+    out = maxsim_scores(q, docs, impl="pallas", block_n=8, block_d=64)
+    ref = maxsim_ref(q, jnp.ones((2, 8)), docs, jnp.ones((16, 64)))
+    tol = 1e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(out, ref, rtol=tol, atol=tol)
+
+
+def test_maxsim_int8(rng):
+    q = jnp.asarray(rng.normal(size=(2, 8, 128)), jnp.float32)
+    docs = jnp.asarray(rng.normal(size=(16, 64, 128)), jnp.float32)
+    codes, scales = quantize_int8(docs)
+    out = maxsim_scores(q, codes.astype(jnp.float32), None, None, scales,
+                        impl="pallas", block_n=8, block_d=64)
+    ref = maxsim_ref(q, jnp.ones((2, 8)), docs, jnp.ones((16, 64)))
+    # int8 quantisation error bound, not kernel error
+    np.testing.assert_allclose(out, ref, rtol=2e-2, atol=2e-1)
+
+
+def test_maxsim_fully_masked_doc(rng):
+    """A fully-masked document must not produce +inf/-inf leakage for
+    valid query tokens of other docs."""
+    q = jnp.asarray(rng.normal(size=(1, 8, 128)), jnp.float32)
+    docs = jnp.asarray(rng.normal(size=(8, 16, 128)), jnp.float32)
+    dm = jnp.ones((8, 16), jnp.float32).at[3].set(0.0)
+    out = maxsim_scores(q, docs, None, dm, impl="pallas", block_n=8,
+                        block_d=16)
+    assert np.isfinite(np.asarray(out))[:, :3].all()
+    assert np.asarray(out)[0, 3] < -1e20        # masked doc sinks
+
+
+# ---------------------------------------------------------------------------
+# Pooling kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["colpali", "colsmol", "colqwen"])
+def test_pooling_kernel_vs_ref(rng, arch):
+    cfg = get_config(arch)
+    B, S, d = 3, cfg.n_patches, 128
+    x = jnp.asarray(rng.normal(size=(B, S, d)), jnp.float32)
+    m = jnp.asarray(rng.random((B, S)) > 0.1, jnp.float32)
+    pm = jnp.asarray(pooling_matrix(cfg))
+    out = pool_pages_fused(x, m, pm, impl="pallas")
+    ref = pool_ref(x, m, pm)
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("block_s", [64, 128, 256, 1024])
+def test_pooling_kernel_blocks(rng, block_s):
+    cfg = get_config("colpali")
+    x = jnp.asarray(rng.normal(size=(2, 1024, 128)), jnp.float32)
+    m = jnp.ones((2, 1024), jnp.float32)
+    pm = jnp.asarray(pooling_matrix(cfg))
+    out = pool_pages_fused(x, m, pm, impl="pallas", block_s=block_s)
+    ref = pool_ref(x, m, pm)
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_pooling_matrices_match_core(rng):
+    """Matrix path == functional core.pooling path under full masks."""
+    from repro.core import pooling as P
+    x = jnp.asarray(rng.normal(size=(1024, 128)), jnp.float32)
+    rows = P.row_mean_pool(x, 32, 32)
+    rm = rowmean_matrix(32, 32)
+    np.testing.assert_allclose(rm @ np.asarray(x) / rm.sum(1, keepdims=True),
+                               rows, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(conv1d_matrix(32) @ np.asarray(rows)
+                               / conv1d_matrix(32).sum(1, keepdims=True),
+                               P.conv1d_extend(rows), rtol=1e-5, atol=1e-5)
+    sm = smooth_matrix(32, "gaussian")
+    np.testing.assert_allclose(sm @ np.asarray(rows)
+                               / sm.sum(1, keepdims=True),
+                               P.smooth_same_length(rows, "gaussian"),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# EmbeddingBag kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("V,d,B,L", [(100, 16, 8, 4), (1000, 32, 16, 7),
+                                     (50, 128, 3, 12)])
+def test_embed_bag_shapes(rng, V, d, B, L):
+    table = jnp.asarray(rng.normal(size=(V, d)), jnp.float32)
+    idx = jnp.asarray(rng.integers(-1, V, size=(B, L)), jnp.int32)
+    for mode in ("sum", "mean"):
+        out = embed_bag(table, idx, mode=mode, impl="pallas")
+        ref = embed_bag(table, idx, mode=mode, impl="ref")
+        np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_embed_bag_all_padding(rng):
+    table = jnp.asarray(rng.normal(size=(10, 8)), jnp.float32)
+    idx = jnp.full((2, 3), -1, jnp.int32)
+    out = embed_bag(table, idx, mode="mean", impl="pallas")
+    np.testing.assert_allclose(out, np.zeros((2, 8)), atol=1e-6)

@@ -1,0 +1,148 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st, HealthCheck
+
+from repro.core import maxsim, multistage, pooling
+
+SET = dict(deadline=None, max_examples=25,
+           suppress_health_check=[HealthCheck.too_slow])
+
+
+def _unit(rng, *shape):
+    x = rng.normal(size=shape).astype(np.float32)
+    return x / np.maximum(np.linalg.norm(x, axis=-1, keepdims=True), 1e-9)
+
+
+@given(st.integers(1, 6), st.integers(2, 10), st.integers(0, 2 ** 31 - 1))
+@settings(**SET)
+def test_maxsim_bounds(q_tokens, d_vecs, seed):
+    """For unit vectors, |maxsim| <= Q (cosine in [-1,1], summed over Q)."""
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(_unit(rng, q_tokens, 16))
+    doc = jnp.asarray(_unit(rng, d_vecs, 16))
+    s = float(maxsim.maxsim(q, doc))
+    assert -q_tokens - 1e-4 <= s <= q_tokens + 1e-4
+
+
+@given(st.integers(2, 8), st.integers(0, 2 ** 31 - 1))
+@settings(**SET)
+def test_maxsim_monotone_in_doc_vectors(d_vecs, seed):
+    """Adding vectors to a document can only increase its MaxSim score
+    (max over a superset)."""
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(_unit(rng, 4, 16))
+    doc = jnp.asarray(_unit(rng, d_vecs, 16))
+    extra = jnp.asarray(_unit(rng, 2, 16))
+    s_small = float(maxsim.maxsim(q, doc))
+    s_big = float(maxsim.maxsim(q, jnp.concatenate([doc, extra], 0)))
+    assert s_big >= s_small - 1e-5
+
+
+@given(st.integers(1, 20), st.integers(0, 2 ** 31 - 1))
+@settings(**SET)
+def test_prefetch_monotonicity(extra_k, seed):
+    """Growing prefetch-K can only improve (or keep) the exact top-1.
+
+    Formally: the stage-2 winner under prefetch K is contained in the
+    candidate set under K' >= K, so its final score is >= the K case.
+    """
+    rng = np.random.default_rng(seed)
+    N, D, d = 30, 6, 16
+    docs = jnp.asarray(_unit(rng, N, D, d))
+    store = {"initial": docs, "mean_pooling": docs[:, :2],
+             "global_pooling": docs.mean(1)}
+    q = jnp.asarray(_unit(rng, 1, 4, d))
+    k0 = 5
+    s_small, _ = multistage.search(store, q, multistage.two_stage(k0, 1))
+    s_big, _ = multistage.search(store, q,
+                                 multistage.two_stage(k0 + extra_k, 1))
+    assert float(s_big[0, 0]) >= float(s_small[0, 0]) - 1e-5
+
+
+@given(st.integers(2, 12), st.integers(1, 8), st.integers(0, 2 ** 31 - 1))
+@settings(**SET)
+def test_pooling_convexity(rows_n, dim, seed):
+    """All training-free poolings are convex combinations of inputs:
+    outputs stay inside the per-coordinate [min, max] envelope."""
+    rng = np.random.default_rng(seed)
+    rows = jnp.asarray(rng.normal(size=(rows_n, dim)).astype(np.float32))
+    lo = np.asarray(rows).min(0) - 1e-5
+    hi = np.asarray(rows).max(0) + 1e-5
+    for out in (pooling.conv1d_extend(rows),
+                pooling.smooth_same_length(rows, "gaussian"),
+                pooling.smooth_same_length(rows, "triangular")):
+        o = np.asarray(out)
+        assert (o >= lo).all() and (o <= hi).all()
+
+
+@given(st.integers(1, 31), st.integers(0, 2 ** 31 - 1))
+@settings(**SET)
+def test_adaptive_pool_mass_conservation(h_eff, seed):
+    """Adaptive binning partitions valid rows: bin-weighted mean of pooled
+    equals mean of the valid inputs."""
+    rng = np.random.default_rng(seed)
+    rows = jnp.asarray(rng.normal(size=(32, 8)).astype(np.float32))
+    pooled, mask = pooling.adaptive_row_pool(rows, h_eff, 16)
+    t = min(h_eff, 16)
+    # reconstruct counts per bin
+    j = np.arange(32)
+    bins = np.where(j < h_eff, (j * t) // max(h_eff, 1), 16)
+    cnt = np.bincount(bins[bins < 16], minlength=16).astype(np.float32)
+    lhs = (np.asarray(pooled) * cnt[:, None]).sum(0) / max(h_eff, 1)
+    rhs = np.asarray(rows)[:h_eff].mean(0) if h_eff else 0
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-3, atol=1e-4)
+    assert int(np.asarray(mask).sum()) == t
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(**SET)
+def test_hygiene_idempotent(seed):
+    from repro.core import hygiene
+    rng = np.random.default_rng(seed)
+    emb = jnp.asarray(rng.normal(size=(12, 8)).astype(np.float32))
+    emb = emb.at[9:].set(0.0)
+    types = jnp.asarray([1, 1] + [0] * 7 + [3] * 3)
+    e1, m1 = hygiene.apply_hygiene(emb, types)
+    e2, m2 = hygiene.apply_hygiene(e1, types)
+    np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))
+    np.testing.assert_allclose(np.asarray(e1), np.asarray(e2))
+
+
+@given(st.integers(2, 64), st.integers(1, 16), st.integers(0, 2 ** 31 - 1))
+@settings(**SET)
+def test_topk_merge_equals_global(n, k, seed):
+    """Distributed local-topk + merge == global top-k (scores unique)."""
+    from repro.retrieval.topk import local_topk_with_ids, merge_topk
+    rng = np.random.default_rng(seed)
+    scores = rng.permutation(n * 2).astype(np.float32)[None, :n * 2]
+    half = scores[:, :n], scores[:, n:]
+    v0, i0 = local_topk_with_ids(jnp.asarray(half[0]), min(k, n), 0)
+    v1, i1 = local_topk_with_ids(jnp.asarray(half[1]), min(k, n), n)
+    mv, mi = merge_topk(jnp.concatenate([v0, v1], 1),
+                        jnp.concatenate([i0, i1], 1), k)
+    gv, gi = jax.lax.top_k(jnp.asarray(scores), min(k, 2 * n))
+    kk = min(k, mv.shape[1])
+    np.testing.assert_allclose(np.asarray(mv)[:, :kk],
+                               np.asarray(gv)[:, :kk])
+    np.testing.assert_array_equal(np.asarray(mi)[:, :kk],
+                                  np.asarray(gi)[:, :kk])
+
+
+@given(st.integers(1, 6), st.integers(0, 2 ** 31 - 1))
+@settings(**SET)
+def test_gradient_compression_error_feedback(steps, seed):
+    """Error feedback: sum of dequantised grads + final residual equals the
+    true accumulated gradient (unbiasedness over time)."""
+    from repro.training import compression as C
+    rng = np.random.default_rng(seed)
+    g_true = [rng.normal(size=(8, 8)).astype(np.float32)
+              * 10.0 ** float(rng.integers(-3, 2)) for _ in range(steps)]
+    res = jnp.zeros((8, 8), jnp.float32)
+    acc = np.zeros((8, 8), np.float32)
+    for g in g_true:
+        qs, ss, res = C.compress_grads(jnp.asarray(g), res)
+        acc += np.asarray(C.decompress_grads(qs, ss))
+    np.testing.assert_allclose(acc + np.asarray(res), np.sum(g_true, 0),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,137 @@
+"""End-to-end retrieval behaviour: store building, engine, paper claims."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.core import multistage as MST
+from repro.core.matryoshka import add_truncated_stage
+from repro.data.synthetic import evaluate_ranking, make_benchmark
+from repro.retrieval.engine import make_search_fn
+from repro.retrieval.store import build_store, quantize_store
+
+
+@pytest.fixture(scope="module")
+def colpali_bench():
+    cfg = get_config("colpali")
+    bench = make_benchmark(cfg, (60, 50, 40), (15, 15, 10), seed=1)
+    store = build_store(cfg, jnp.asarray(bench.pages),
+                        jnp.asarray(bench.token_types),
+                        experimental_smooth="gaussian")
+    return cfg, bench, store
+
+
+def test_store_layout(colpali_bench):
+    cfg, bench, store = colpali_bench
+    dims = store.dims()
+    assert dims["initial"] == cfg.n_patches
+    assert dims["mean_pooling"] == cfg.n_pooled
+    assert dims["global_pooling"] == 1
+    assert "experimental" in dims
+    # token hygiene applied: masks exist, specials stripped from initial
+    assert store.vectors["initial_mask"].shape == (store.n_docs,
+                                                   cfg.n_patches)
+
+
+def test_one_stage_quality(colpali_bench):
+    """Exact MaxSim on the planted benchmark must retrieve well."""
+    cfg, bench, store = colpali_bench
+    fn = make_search_fn(None, MST.one_stage(50), store.n_docs)
+    _, ids = fn(store.vectors, jnp.asarray(bench.queries),
+                jnp.asarray(bench.query_mask))
+    m = evaluate_ranking(np.asarray(ids), bench.qrels, ks=(5, 10))
+    assert m["ndcg@5"] > 0.6 and m["recall@10"] > 0.85
+
+
+def test_two_stage_preserves_quality(colpali_bench):
+    """Paper §5: 2-stage within ~0.01 NDCG/recall of 1-stage at k<=10."""
+    cfg, bench, store = colpali_bench
+    q = jnp.asarray(bench.queries)
+    qm = jnp.asarray(bench.query_mask)
+    _, i1 = make_search_fn(None, MST.one_stage(10), store.n_docs)(
+        store.vectors, q, qm)
+    _, i2 = make_search_fn(None, MST.two_stage(48, 10), store.n_docs)(
+        store.vectors, q, qm)
+    m1 = evaluate_ranking(np.asarray(i1), bench.qrels, ks=(5, 10))
+    m2 = evaluate_ranking(np.asarray(i2), bench.qrels, ks=(5, 10))
+    for k in m1:
+        assert m2[k] >= m1[k] - 0.02, (k, m1[k], m2[k])
+
+
+def test_three_stage_and_experimental_vector(colpali_bench):
+    cfg, bench, store = colpali_bench
+    q = jnp.asarray(bench.queries)
+    qm = jnp.asarray(bench.query_mask)
+    s3 = MST.three_stage(96, 48, 10)
+    _, i3 = make_search_fn(None, s3, store.n_docs)(store.vectors, q, qm)
+    m3 = evaluate_ranking(np.asarray(i3), bench.qrels, ks=(5,))
+    assert m3["ndcg@5"] > 0.5
+    sx = MST.two_stage(48, 10, pooled="experimental")
+    _, ix = make_search_fn(None, sx, store.n_docs)(store.vectors, q, qm)
+    mx = evaluate_ranking(np.asarray(ix), bench.qrels, ks=(5,))
+    assert mx["ndcg@5"] > 0.5
+
+
+def test_int8_store_quality(colpali_bench):
+    """Beyond-paper: int8 storage keeps ranking quality."""
+    cfg, bench, store = colpali_bench
+    qs = quantize_store(store)
+    assert qs.vectors["initial_int8"].dtype == jnp.int8
+    codes = qs.vectors["initial_int8"].astype(jnp.float32)
+    scales = qs.vectors["initial_scale"]
+    deq = codes * scales[..., None]
+    err = jnp.abs(deq - store.vectors["initial"].astype(jnp.float32)).max()
+    assert float(err) < 0.02
+
+
+def test_matryoshka_stage(colpali_bench):
+    cfg, bench, store = colpali_bench
+    st = add_truncated_stage(store.vectors, "mean_pooling", 32)
+    assert st["mean_pooling_mrl32"].shape[-1] == 32
+    stages = (MST.Stage("mean_pooling_mrl32", 48), MST.Stage("initial", 10))
+    fn = make_search_fn(None, stages, store.n_docs)
+    _, ids = fn(st, jnp.asarray(bench.queries),
+                jnp.asarray(bench.query_mask))
+    m = evaluate_ranking(np.asarray(ids), bench.qrels, ks=(5,))
+    assert m["ndcg@5"] > 0.5
+
+
+def test_union_scope_harder_than_per_dataset(colpali_bench):
+    """Distractor experiment structure: per-dataset recall >= union recall."""
+    cfg, bench, store = colpali_bench
+    q = jnp.asarray(bench.queries)
+    qm = jnp.asarray(bench.query_mask)
+    fn = make_search_fn(None, MST.one_stage(10), store.n_docs)
+    _, ids_union = fn(store.vectors, q, qm)
+    m_union = evaluate_ranking(np.asarray(ids_union), bench.qrels, ks=(10,))
+    # per-dataset scope: restrict scoring to same-dataset pages via mask
+    # (emulated by +inf on foreign pages' scores through doc mask)
+    per_ds = []
+    for ds in range(3):
+        sel = np.where(bench.dataset_of_query == ds)[0]
+        pages_ds = np.where(bench.dataset_of_page == ds)[0]
+        remap = {int(p): i for i, p in enumerate(pages_ds)}
+        sub = {k: v[pages_ds] for k, v in store.vectors.items()}
+        fn_ds = make_search_fn(None, MST.one_stage(10), len(pages_ds))
+        _, ids = fn_ds(sub, q[sel], qm[sel])
+        qr = [{remap[i]: g for i, g in bench.qrels[s].items() if i in remap}
+              for s in sel]
+        per_ds.append(evaluate_ranking(np.asarray(ids), qr, ks=(10,)))
+    r_per = np.mean([m["recall@10"] for m in per_ds])
+    assert r_per >= m_union["recall@10"] - 1e-6
+
+
+def test_engine_sharded_single_device_mesh(colpali_bench):
+    """shard_map engine on a 1-device mesh == local oracle (multi-device
+    equality is covered by launch-level tests with fake devices)."""
+    cfg, bench, store = colpali_bench
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    q = jnp.asarray(bench.queries)
+    qm = jnp.asarray(bench.query_mask)
+    stages = MST.two_stage(32, 10)
+    s_l, i_l = make_search_fn(None, stages, store.n_docs)(store.vectors, q, qm)
+    s_s, i_s = make_search_fn(mesh, stages, store.n_docs)(store.vectors, q, qm)
+    np.testing.assert_array_equal(np.asarray(i_l), np.asarray(i_s))
+    np.testing.assert_allclose(np.asarray(s_l), np.asarray(s_s), rtol=1e-5)
