@@ -52,7 +52,7 @@ def table2_quality_qps(table: dict):
     from repro.configs import get_config
     from repro.core import multistage as MST
     from repro.data.synthetic import evaluate_ranking, make_benchmark
-    from repro.retrieval.engine import make_search_fn
+    from repro.retrieval.retriever import Retriever
     from repro.retrieval.store import build_store
 
     out = {}
@@ -63,9 +63,9 @@ def table2_quality_qps(table: dict):
         bench = make_benchmark(cfg, (110, 90, 70), (25, 25, 20), seed=2)
         store = build_store(cfg, jnp.asarray(bench.pages),
                             jnp.asarray(bench.token_types))
+        retriever = Retriever(store)
         q = jnp.asarray(bench.queries)
         qm = jnp.asarray(bench.query_mask)
-        n = store.n_docs
         configs = {
             "1stage": MST.one_stage(100),
             "2stage": MST.two_stage(256, 100),
@@ -73,9 +73,9 @@ def table2_quality_qps(table: dict):
         }
         out[arch] = {}
         for name, stages in configs.items():
-            fn = make_search_fn(None, stages, n)
-            dt = _t(fn, store.vectors, q, qm)
-            _, ids = fn(store.vectors, q, qm)
+            fn = retriever.search_fn(stages)
+            dt = _t(fn, retriever.store.vectors, q, qm)
+            _, ids = fn(retriever.store.vectors, q, qm)
             m = evaluate_ranking(np.asarray(ids), bench.qrels,
                                  ks=(5, 10, 100))
             qps = len(q) / dt
@@ -104,23 +104,27 @@ def scope_scaling(table: dict):
     res = {}
     for scope in ("perds", "union"):
         if scope == "union":
-            vecs, nq, n = store.vectors, len(q), store.n_docs
+            vecs, n = store.vectors, store.n_docs
             t1 = _t(make_search_fn(None, MST.one_stage(50), n), vecs, q, qm)
             t2 = _t(make_search_fn(None, MST.two_stage(128, 50), n),
                     vecs, q, qm)
+            nq = len(q)
         else:
+            # QPS over the actual per-split query counts: total queries
+            # answered divided by total wall time across the 3 splits.
             t1 = t2 = 0.0
+            nq = 0
             for ds in range(3):
                 pages = np.where(bench.dataset_of_page == ds)[0]
                 qs = np.where(bench.dataset_of_query == ds)[0]
                 sub = {k: v[pages] for k, v in store.vectors.items()}
                 n = len(pages)
                 t1 += _t(make_search_fn(None, MST.one_stage(50), n),
-                         sub, q[qs], qm[qs]) / 3
+                         sub, q[qs], qm[qs])
                 t2 += _t(make_search_fn(None, MST.two_stage(128, 50), n),
-                         sub, q[qs], qm[qs]) / 3
-        res[scope] = {"qps_1stage": len(q) / t1 / (3 if scope == "perds" else 1),
-                      "qps_2stage": len(q) / t2 / (3 if scope == "perds" else 1)}
+                         sub, q[qs], qm[qs])
+                nq += len(qs)
+        res[scope] = {"qps_1stage": nq / t1, "qps_2stage": nq / t2}
         res[scope]["speedup"] = res[scope]["qps_2stage"] / \
             res[scope]["qps_1stage"]
         _emit(f"scope/{scope}", t2, f"speedup={res[scope]['speedup']:.2f}")
@@ -222,19 +226,77 @@ def kernel_micro(table: dict):
     table["kernel_micro"] = True
 
 
+def kernel_vs_ref_scan(table: dict, quick: bool = False):
+    """Scan-stage dispatch A/B: Pallas kernel vs jnp ref QPS on the same
+    2-stage cascade, via the Retriever facade (§2.4 — the scan stage is the
+    memory-roofline term; off-TPU the kernel runs interpreted, so the rows
+    validate dispatch + parity rather than making a CPU throughput claim).
+    Sizes are kept small: interpret-mode Pallas is Python-loop slow."""
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.core import multistage as MST
+    from repro.data.synthetic import make_benchmark
+    from repro.retrieval.retriever import Retriever
+    from repro.retrieval.store import build_store, quantize_store
+
+    cfg = get_config("colpali")
+    pages, queries = ((20, 16, 12), (4, 4, 4)) if quick else \
+        ((40, 30, 20), (8, 8, 8))
+    bench = make_benchmark(cfg, pages, queries, seed=6)
+    store = build_store(cfg, jnp.asarray(bench.pages),
+                        jnp.asarray(bench.token_types))
+    q = jnp.asarray(bench.queries)
+    qm = jnp.asarray(bench.query_mask)
+    base = MST.two_stage(24, 10)
+    chunk = 16
+    retriever = Retriever(store)
+    # quantise the vector the scan stage actually scores (mean_pooling for
+    # the 2-stage cascade), or the int8 row silently measures bf16
+    retriever_i8 = Retriever(quantize_store(store, names=(base[0].vector,)))
+    variants = {
+        "ref": (retriever, base),
+        "ref_chunked": (retriever, MST.with_scan_policy(base, chunk=chunk)),
+        "kernel": (retriever, MST.with_scan_policy(base, use_kernel=True)),
+        "kernel_chunked": (retriever, MST.with_scan_policy(
+            base, use_kernel=True, chunk=chunk)),
+        "kernel_int8": (retriever_i8, MST.with_scan_policy(
+            base, use_kernel=True, chunk=chunk)),
+    }
+    out = {}
+    for name, (r, stages) in variants.items():
+        fn = r.search_fn(stages)
+        dt = _t(fn, r.store.vectors, q, qm)
+        qps = len(q) / dt
+        out[name] = {"qps": qps, "us_per_query": dt / len(q) * 1e6}
+        _emit(f"scan/{name}", dt, f"qps={qps:.1f}")
+    table["scan_dispatch"] = out
+
+
 def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke run: small sizes, core tables only")
+    args = ap.parse_args()
     os.makedirs(RESULTS, exist_ok=True)
     table: dict = {}
     print("name,us_per_call,derived")
-    table2_quality_qps(table)
-    scope_scaling(table)
-    eq1_cost_model(table)
-    pooling_ablation(table)
-    hygiene_ablation(table)
-    kernel_micro(table)
-    with open(os.path.join(RESULTS, "paper_tables.json"), "w") as f:
+    if args.quick:
+        eq1_cost_model(table)
+        kernel_vs_ref_scan(table, quick=True)
+        kernel_micro(table)
+    else:
+        table2_quality_qps(table)
+        scope_scaling(table)
+        eq1_cost_model(table)
+        pooling_ablation(table)
+        hygiene_ablation(table)
+        kernel_micro(table)
+        kernel_vs_ref_scan(table)
+    name = "paper_tables_quick.json" if args.quick else "paper_tables.json"
+    with open(os.path.join(RESULTS, name), "w") as f:
         json.dump(table, f, indent=1, default=float)
-    print(f"\nwrote {os.path.join(RESULTS, 'paper_tables.json')}")
+    print(f"\nwrote {os.path.join(RESULTS, name)}")
 
 
 if __name__ == "__main__":

@@ -49,7 +49,9 @@ def maxsim_batched(q: jax.Array, docs: jax.Array,
     """Query batch against corpus: q [B,Q,d], docs [N,D,d] -> [B,N].
 
     ``chunk`` > 0 scans the corpus in chunks of that many documents to bound
-    the [B,N,Q,D] score intermediate (flash-style streaming in jnp).
+    the [B,N,Q,D] score intermediate (flash-style streaming in jnp). N that
+    is not a chunk multiple is zero-padded and the padding stripped — the
+    per-document math is unchanged, so chunked == unchunked bitwise.
     """
     def block(d_blk, m_blk):
         sim = jnp.einsum("bqd,njd->bnqj", q, d_blk)
@@ -63,15 +65,21 @@ def maxsim_batched(q: jax.Array, docs: jax.Array,
     n = docs.shape[0]
     if chunk <= 0 or chunk >= n:
         return block(docs, doc_mask)
-    assert n % chunk == 0, (n, chunk)
-    dblk = docs.reshape(n // chunk, chunk, *docs.shape[1:])
+    pad = (-n) % chunk
+    if pad:
+        docs = jnp.pad(docs, ((0, pad), (0, 0), (0, 0)))
+        if doc_mask is not None:
+            doc_mask = jnp.pad(doc_mask, ((0, pad), (0, 0)))
+    n_blocks = (n + pad) // chunk
+    dblk = docs.reshape(n_blocks, chunk, *docs.shape[1:])
     mblk = (None if doc_mask is None
-            else doc_mask.reshape(n // chunk, chunk, doc_mask.shape[-1]))
+            else doc_mask.reshape(n_blocks, chunk, doc_mask.shape[-1]))
     if mblk is None:
         out = jax.lax.map(lambda d: block(d, None), dblk)
     else:
         out = jax.lax.map(lambda dm: block(dm[0], dm[1]), (dblk, mblk))
-    return jnp.moveaxis(out, 0, 1).reshape(q.shape[0], n)
+    return jnp.moveaxis(out, 0, 1).reshape(q.shape[0],
+                                           n_blocks * chunk)[:, :n]
 
 
 def maxsim_single_vector(q: jax.Array, vecs: jax.Array,

@@ -19,6 +19,7 @@ cascade sharded over the mesh; this module is its oracle in tests.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 
 import jax
@@ -29,9 +30,41 @@ from repro.core import maxsim as ms
 
 @dataclass(frozen=True)
 class Stage:
+    """One cascade stage plus its scan-dispatch policy.
+
+    ``use_kernel``/``chunk``/``dtype`` only affect the full-corpus scan
+    stage (the first stage) when executed by the serving engine
+    (``repro.retrieval.engine``); this module's ``search`` is the pure-jnp
+    oracle and ignores them.
+
+    chunk  > 0 streams the corpus in chunks of that many documents so the
+           scan-stage score intermediate is bounded at [B, chunk, Q, D]
+           instead of [B, N, Q, D] (N is padded up to a chunk multiple).
+    dtype  optional compute-dtype name for the scan (e.g. "bfloat16");
+           default is the query dtype. Applies to float stores only —
+           an int8-quantised scan always dequantises and scores in f32.
+    """
     vector: str            # named vector to score with
     k: int                 # candidates kept after this stage
     use_kernel: bool = False
+    chunk: int = 0
+    dtype: str | None = None
+
+
+def with_scan_policy(stages: tuple, *, use_kernel: bool | None = None,
+                     chunk: int | None = None,
+                     dtype: str | None = None) -> tuple:
+    """Return ``stages`` with the scan (first) stage's dispatch policy
+    replaced; ``None`` keeps the existing value."""
+    first, rest = stages[0], tuple(stages[1:])
+    kw = {}
+    if use_kernel is not None:
+        kw["use_kernel"] = use_kernel
+    if chunk is not None:
+        kw["chunk"] = chunk
+    if dtype is not None:
+        kw["dtype"] = dtype
+    return (dataclasses.replace(first, **kw),) + rest
 
 
 def two_stage(prefetch_k: int = 256, top_k: int = 100,
@@ -80,13 +113,21 @@ def _score_stage(stage: Stage, store: dict, q: jax.Array,
 
 
 def search(store: dict, q: jax.Array, stages: tuple,
-           q_mask: jax.Array | None = None):
+           q_mask: jax.Array | None = None, scan_scorer=None):
     """Run the cascade. Returns (scores [B, k_final], ids [B, k_final]),
-    ids sorted by descending final-stage score."""
+    ids sorted by descending final-stage score.
+
+    ``scan_scorer(stage, store, q, q_mask) -> [B, N]``, when given,
+    replaces the reference scorer for the full-corpus scan stage only —
+    the serving engine injects its kernel dispatch here so both share one
+    cascade loop (and the bitwise-parity contract holds structurally)."""
     cand = None
     scores = None
     for stage in stages:
-        s = _score_stage(stage, store, q, q_mask, cand)        # [B, C|N]
+        if cand is None and scan_scorer is not None:
+            s = scan_scorer(stage, store, q, q_mask)           # [B, N]
+        else:
+            s = _score_stage(stage, store, q, q_mask, cand)    # [B, C|N]
         k = min(stage.k, s.shape[-1])
         top_s, top_i = jax.lax.top_k(s, k)
         if cand is None:

@@ -1,2 +1,4 @@
-from repro.kernels.maxsim.ops import maxsim_scores, quantize_int8
+from repro.kernels.maxsim.ops import (default_interpret, maxsim_scores,
+                                      maxsim_scores_chunked, pallas_available,
+                                      quantize_int8)
 from repro.kernels.maxsim.ref import maxsim_ref

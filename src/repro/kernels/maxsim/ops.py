@@ -62,6 +62,68 @@ def maxsim_scores(q: jax.Array, docs: jax.Array,
     return out[:, :N]
 
 
+def default_interpret() -> bool:
+    """Pallas compiles natively on TPU; everywhere else it interprets."""
+    return jax.default_backend() != "tpu"
+
+
+@functools.lru_cache(maxsize=1)
+def pallas_available() -> bool:
+    """Probe whether the Pallas kernel can execute on this host/backend.
+
+    The serving engine calls this once per search-fn build and falls back
+    to the jnp reference when it returns False (e.g. a backend without
+    Pallas support and without a working interpreter)."""
+    try:
+        q = jnp.zeros((1, 8, 128), jnp.float32)
+        docs = jnp.zeros((8, 8, 128), jnp.float32)
+        out = maxsim_scores(q, docs, impl="pallas", block_n=8, block_d=8,
+                            interpret=default_interpret())
+        jax.block_until_ready(out)
+        return True
+    except Exception:
+        return False
+
+
+def maxsim_scores_chunked(q: jax.Array, docs: jax.Array,
+                          q_mask: jax.Array | None = None,
+                          doc_mask: jax.Array | None = None,
+                          scales: jax.Array | None = None,
+                          *, chunk: int, impl: str = "pallas",
+                          block_n: int = 8, block_d: int = 0,
+                          interpret: bool = True) -> jax.Array:
+    """Streaming corpus scan: score ``chunk`` documents per kernel launch.
+
+    Bounds the per-step intermediate (for impl="ref", the [B, chunk, Q, D]
+    similarity block) regardless of corpus size N. N is padded up to a
+    chunk multiple with fully-masked documents and the padding stripped
+    from the returned [B, N] scores. chunk <= 0 means unchunked.
+    """
+    N, D, _ = docs.shape
+    if chunk <= 0 or chunk >= N:
+        return maxsim_scores(q, docs, q_mask, doc_mask, scales, impl=impl,
+                             block_n=block_n, block_d=block_d,
+                             interpret=interpret)
+    if doc_mask is None:
+        doc_mask = jnp.ones((N, D), jnp.float32)
+    docs = _pad_to(docs, 0, chunk)
+    doc_mask = _pad_to(doc_mask.astype(jnp.float32), 0, chunk)
+    if scales is not None:
+        scales = _pad_to(scales, 0, chunk)
+    n_blocks = docs.shape[0] // chunk
+    db = docs.reshape(n_blocks, chunk, *docs.shape[1:])
+    mb = doc_mask.reshape(n_blocks, chunk, D)
+    call = functools.partial(maxsim_scores, impl=impl, block_n=block_n,
+                             block_d=block_d, interpret=interpret)
+    if scales is None:
+        out = jax.lax.map(lambda a: call(q, a[0], q_mask, a[1]), (db, mb))
+    else:
+        sb = scales.reshape(n_blocks, chunk, D)
+        out = jax.lax.map(lambda a: call(q, a[0], q_mask, a[1], a[2]),
+                          (db, mb, sb))
+    return jnp.moveaxis(out, 0, 1).reshape(q.shape[0], n_blocks * chunk)[:, :N]
+
+
 def quantize_int8(docs: jax.Array, eps: float = 1e-9):
     """Per-vector symmetric int8 quantisation: docs [N,D,d] ->
     (int8 codes [N,D,d], scales [N,D])."""

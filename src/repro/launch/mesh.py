@@ -3,11 +3,28 @@
 Defined as FUNCTIONS (never module-level constants) so importing this module
 never touches jax device state — the dry-run must set XLA_FLAGS before any
 jax initialisation.
+
+``make_mesh`` is version-compat: ``jax.sharding.AxisType`` (and the
+``axis_types=`` kwarg of ``jax.make_mesh``) only exist on newer jax; on
+older versions the kwarg is omitted, which yields the same Auto-typed axes.
+All mesh construction in this repo goes through these helpers — never call
+``jax.make_mesh(axis_types=...)`` directly.
 """
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+
+def _axis_type_kwargs(n_axes: int) -> dict:
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
+def make_mesh(shape: tuple, axes: tuple):
+    shape, axes = tuple(shape), tuple(axes)
+    return jax.make_mesh(shape, axes, **_axis_type_kwargs(len(axes)))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -16,13 +33,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     extra data-parallel dimension whose gradient all-reduce crosses DCN."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
-
-
-def make_mesh(shape: tuple, axes: tuple):
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def n_devices(mesh) -> int:

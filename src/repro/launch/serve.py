@@ -1,11 +1,15 @@
 """Serving launcher: index a corpus, run batched multi-stage search.
 
   PYTHONPATH=src python -m repro.launch.serve --arch colpali \
-      --pages 300 --queries 64 --stages 2
+      --pages 300 --queries 64 --stages 2 --use-kernel --chunk 128
 
 Measures QPS for 1/2/3-stage configurations on the same corpus — the
 CPU-scale twin of the paper's Table 2 throughput columns (benchmarks/run.py
-does the full sweep).
+does the full sweep). Search goes through the ``Retriever`` facade, which
+owns the store + mesh and caches the compiled cascade per stages config;
+``--use-kernel`` dispatches the scan stage to the Pallas MaxSim kernel,
+``--chunk`` bounds its per-launch corpus tile, ``--int8`` stores the scan
+vectors quantised.
 """
 from __future__ import annotations
 
@@ -20,8 +24,8 @@ def main():
     from repro.configs import get_config
     from repro.core import multistage as MST
     from repro.data.synthetic import evaluate_ranking, make_benchmark
-    from repro.retrieval.engine import make_search_fn
-    from repro.retrieval.store import build_store
+    from repro.retrieval.retriever import Retriever
+    from repro.retrieval.store import build_store, quantize_store
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="colpali")
@@ -30,6 +34,13 @@ def main():
     ap.add_argument("--stages", type=int, default=2, choices=(1, 2, 3))
     ap.add_argument("--prefetch-k", type=int, default=256)
     ap.add_argument("--top-k", type=int, default=100)
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="dispatch the scan stage to the Pallas MaxSim "
+                         "kernel (jnp ref fallback when unavailable)")
+    ap.add_argument("--chunk", type=int, default=0,
+                    help="scan-stage corpus chunk (0 = unchunked)")
+    ap.add_argument("--int8", action="store_true",
+                    help="int8-quantise the scan-stage vectors")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -39,25 +50,41 @@ def main():
     t0 = time.time()
     store = build_store(cfg, jnp.asarray(bench.pages),
                         jnp.asarray(bench.token_types))
-    print(f"indexed {store.n_docs} pages in {time.time()-t0:.2f}s "
-          f"(named vectors: {sorted(store.dims())})")
 
     stages = {1: MST.one_stage(args.top_k),
               2: MST.two_stage(args.prefetch_k, args.top_k),
               3: MST.three_stage(4 * args.prefetch_k, args.prefetch_k,
                                  args.top_k)}[args.stages]
-    fn = make_search_fn(None, stages, store.n_docs)
+    stages = MST.with_scan_policy(stages, use_kernel=args.use_kernel,
+                                  chunk=args.chunk)
+    int8_on = False
+    if args.int8:
+        # quantise the vector the scan stage scores; a single-vector scan
+        # (3-stage global_pooling) has nothing worth quantising
+        scan_vec = stages[0].vector
+        if store.vectors[scan_vec].ndim == 3:
+            store = quantize_store(store, names=(scan_vec,))
+            int8_on = True
+        else:
+            print(f"--int8: scan stage '{scan_vec}' is single-vector; "
+                  "skipping quantisation")
+    print(f"indexed {store.n_docs} pages in {time.time()-t0:.2f}s "
+          f"(named vectors: {sorted(store.dims())})")
+    retriever = Retriever(store)
     q = jnp.asarray(bench.queries)
     qm = jnp.asarray(bench.query_mask)
-    scores, ids = fn(store.vectors, q, qm)      # compile
+    scores, ids = retriever.search(q, qm, stages=stages)      # compile
     t0 = time.time()
     for _ in range(3):
-        scores, ids = fn(store.vectors, q, qm)
+        scores, ids = retriever.search(q, qm, stages=stages)
     scores.block_until_ready()
     dt = (time.time() - t0) / 3
     qps = len(q) / dt
     metrics = evaluate_ranking(np.asarray(ids), bench.qrels, ks=(5, 10))
-    print(f"{args.stages}-stage: QPS={qps:.1f}  " +
+    scan = ("kernel" if args.use_kernel else "ref") + \
+        (f"/chunk={args.chunk}" if args.chunk else "") + \
+        ("/int8" if int8_on else "")
+    print(f"{args.stages}-stage [{scan}]: QPS={qps:.1f}  " +
           "  ".join(f"{k}={v:.3f}" for k, v in metrics.items()))
 
 

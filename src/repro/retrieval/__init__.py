@@ -1,1 +1,2 @@
 from repro.retrieval import engine, store, topk
+from repro.retrieval.retriever import Retriever

@@ -28,31 +28,75 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.core import maxsim as MS
+from repro.core import multistage as MST
 from repro.core.multistage import Stage
+from repro.kernels.maxsim import ops as KOPS
 from repro.retrieval.topk import allgather_topk, merge_topk
 
 NEG = -1e30
+INT8_REF_CHUNK = 1024      # fallback scan chunk for int8 stores in ref mode
 
 
 def _flat_axes(mesh: Mesh) -> tuple:
     return tuple(mesh.axis_names)
 
 
-def _score_all_local(stage_vecs, stage_mask, q, q_mask, scales=None):
-    """Full scan of this shard's docs. [n_loc, D, d] -> [B, n_loc].
+def _scan_arrays(store: dict, stage: Stage):
+    """Resolve the scan stage's arrays: (vecs, mask, scales).
 
-    With ``scales`` (int8 storage) the corpus streams at 1 byte/coord and is
-    dequantised on the fly — the scan stage is memory-bound, so this halves
-    its roofline term vs bf16."""
+    int8 codes + per-vector scales are preferred when indexed — the scan
+    stage is memory-bound, so streaming 1 byte/coord halves its roofline
+    term vs bf16."""
+    vecs = store[stage.vector]
+    mask = store.get(stage.vector + "_mask")
+    scales = None
+    if stage.vector + "_int8" in store:
+        vecs = store[stage.vector + "_int8"]
+        scales = store[stage.vector + "_scale"]
+    return vecs, mask, scales
+
+
+def _dispatch_scan(stage: Stage, vecs, mask, q, q_mask, scales,
+                   impl: str, interpret: bool):
+    """Score the full-corpus scan stage per the stage's dispatch policy.
+
+    use_kernel routes to the Pallas streaming kernel (or its jnp twin when
+    Pallas is unavailable — ``impl`` is resolved once at build time);
+    otherwise the core.maxsim reference runs, chunked when stage.chunk > 0
+    so the [B, N, Q, D] similarity intermediate is bounded at
+    [B, chunk, Q, D]. [n_docs, D, d] -> [B, n_docs].
+    """
+    if stage.dtype is not None:
+        q = q.astype(stage.dtype)
+        if scales is None:                    # int8 codes must stay int8
+            vecs = vecs.astype(stage.dtype)
+    if vecs.shape[-1] < q.shape[-1]:          # Matryoshka stage
+        q = q[..., : vecs.shape[-1]]
+    if vecs.ndim == 2:                        # single-vector stage: one GEMM
+        if scales is not None:
+            vecs = vecs.astype(q.dtype) * scales[..., None].astype(q.dtype)
+        return MS.maxsim_single_vector(q, vecs, q_mask)
+    if stage.use_kernel:
+        return KOPS.maxsim_scores_chunked(q, vecs, q_mask, mask, scales,
+                                          chunk=stage.chunk, impl=impl,
+                                          interpret=interpret)
     if scales is not None:
-        stage_vecs = stage_vecs.astype(q.dtype) * scales[..., None].astype(
-            q.dtype)
-    if stage_vecs.shape[-1] < q.shape[-1]:            # Matryoshka stage
-        q = q[..., : stage_vecs.shape[-1]]
-    if stage_vecs.ndim == 2:                          # single-vector stage
-        return MS.maxsim_single_vector(q, stage_vecs.astype(q.dtype), q_mask)
-    return MS.maxsim_batched(q, stage_vecs.astype(q.dtype), q_mask,
-                             stage_mask)
+        # stream int8 through the chunked ref scorer: dequantisation happens
+        # per chunk inside the scan loop, never as a full [N, D, d] float
+        # copy of the corpus (that copy would undo the int8 HBM saving) —
+        # hence a bounded default chunk when the stage didn't set one
+        chunk = stage.chunk if stage.chunk > 0 else INT8_REF_CHUNK
+        return KOPS.maxsim_scores_chunked(q, vecs, q_mask, mask, scales,
+                                          chunk=chunk, impl="ref",
+                                          interpret=True)
+    return MS.maxsim_batched(q, vecs, q_mask, mask, chunk=stage.chunk)
+
+
+def _resolve_impl(stages: tuple) -> tuple:
+    """Pick (impl, interpret) for the scan stage once, at build time."""
+    if stages and stages[0].use_kernel and KOPS.pallas_available():
+        return "pallas", KOPS.default_interpret()
+    return "ref", True
 
 
 def _score_candidates(stage_vecs, stage_mask, q, q_mask, cand_local, valid):
@@ -94,11 +138,22 @@ def make_search_fn(mesh: Mesh | None, stages: tuple, n_docs: int,
 
     Returns fn(store_vectors: dict, q [B,Q,d], q_mask [B,Q]) ->
     (scores [B,k], ids [B,k]).
+
+    Matches the repro.core.multistage.search oracle bitwise when the scan
+    stage runs in ref mode on a bf16/f32 store (use_kernel dispatch and
+    int8 storage trade exactness for throughput; chunking does not).
     """
+    impl, interpret = _resolve_impl(stages)
+
+    def scan_scorer(stage, store, q, q_mask):
+        vecs, mask, scales = _scan_arrays(store, stage)
+        return _dispatch_scan(stage, vecs, mask, q, q_mask, scales,
+                              impl, interpret)
+
     if mesh is None:
-        from repro.core import multistage
         def local_fn(store, q, q_mask):
-            return multistage.search(store, q, stages, q_mask)
+            return MST.search(store, q, stages, q_mask,
+                              scan_scorer=scan_scorer)
         return jax.jit(local_fn)
 
     axes = _flat_axes(mesh)
@@ -116,12 +171,7 @@ def make_search_fn(mesh: Mesh | None, stages: tuple, n_docs: int,
             vecs = store[stage.vector]
             mask = store.get(stage.vector + "_mask")
             if cand is None:
-                scales = None
-                if stage.vector + "_int8" in store:   # scan stage only
-                    vecs = store[stage.vector + "_int8"]
-                    scales = store[stage.vector + "_scale"]
-                s_loc = _score_all_local(vecs, mask, q, q_mask,
-                                         scales)        # [B,n_loc]
+                s_loc = scan_scorer(stage, store, q, q_mask)    # [B,n_loc]
                 k = min(stage.k, n_docs)
                 scores, cand = allgather_topk(s_loc, k, axes, shard_idx,
                                               n_local)
@@ -140,8 +190,6 @@ def make_search_fn(mesh: Mesh | None, stages: tuple, n_docs: int,
                 k = min(stage.k, cand.shape[1])
                 scores, cand = merge_topk(sv, ov, k)
         return scores, cand
-
-    store_specs = {}
 
     def searcher(store, q, q_mask):
         specs = {k: P(axes) if v.ndim >= 1 else P()

@@ -1,0 +1,76 @@
+"""Serving facade: one object that owns the store + mesh + compiled fns.
+
+``Retriever`` is the single entry point the launcher and benchmark harness
+use. It wraps the mesh-sharded engine (``repro.retrieval.engine``) and
+caches the jitted search callable per ``(stages, corpus layout, mesh)`` key,
+so repeated queries against the same corpus never re-trace or re-wrap
+``shard_map`` — fn construction happens once, steady-state calls are pure
+dispatch.
+
+    store = build_store(cfg, pages, token_types)
+    r = Retriever(store, mesh=None, scan_chunk=4096)
+    scores, ids = r.search(q, q_mask, stages=MST.two_stage(256, 100))
+
+Scan-dispatch policy (``Stage.use_kernel`` / ``chunk`` / ``dtype``) rides on
+the stages tuple; ``scan_chunk`` supplies a default chunk for scan stages
+that don't set one, bounding the scan-stage score intermediate.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core import multistage as MST
+from repro.retrieval import engine
+from repro.retrieval.store import VectorStore
+
+
+class Retriever:
+    def __init__(self, store: VectorStore, mesh=None,
+                 rerank_overcommit: int = 8, scan_chunk: int = 0,
+                 place: bool = True):
+        """place=True device_puts the store with the mesh's shardings so the
+        corpus is laid out once, not re-sharded per call."""
+        self.mesh = mesh
+        self.rerank_overcommit = rerank_overcommit
+        self.scan_chunk = scan_chunk
+        self._fns: dict = {}
+        if mesh is not None and place:
+            sh = engine.store_shardings(mesh, store.vectors)
+            store = VectorStore(
+                {k: jax.device_put(v, sh[k]) for k, v in store.vectors.items()},
+                store.n_docs, store.store_dtype)
+        self.store = store
+        # the store is fixed at construction: key it once, not per call
+        self._corpus_key = tuple(sorted((k, v.shape, str(v.dtype))
+                                        for k, v in store.vectors.items()))
+
+    @property
+    def n_docs(self) -> int:
+        return self.store.n_docs
+
+    def _normalize(self, stages: tuple) -> tuple:
+        stages = tuple(stages)
+        if self.scan_chunk and stages and stages[0].chunk == 0:
+            stages = MST.with_scan_policy(stages, chunk=self.scan_chunk)
+        return stages
+
+    def search_fn(self, stages: tuple):
+        """The compiled cascade callable for ``stages``, built at most once
+        per (stages, corpus layout, mesh)."""
+        stages = self._normalize(stages)
+        key = (stages, self._corpus_key, self.mesh)
+        fn = self._fns.get(key)
+        if fn is None:
+            fn = engine.make_search_fn(self.mesh, stages, self.store.n_docs,
+                                       self.rerank_overcommit)
+            self._fns[key] = fn
+        return fn
+
+    def search(self, q: jax.Array, q_mask: jax.Array | None = None,
+               *, stages: tuple) -> tuple:
+        """Run the cascade: q [B,Q,d] -> (scores [B,k], ids [B,k])."""
+        if q_mask is None and self.mesh is not None:
+            # shard_map path expects a concrete mask array
+            import jax.numpy as jnp
+            q_mask = jnp.ones(q.shape[:2], bool)
+        return self.search_fn(stages)(self.store.vectors, q, q_mask)

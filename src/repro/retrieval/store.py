@@ -77,7 +77,7 @@ def build_store(cfg, page_embeds: jax.Array, token_types: jax.Array,
                                        if h_eff is None else h_eff))
         vectors["experimental"] = exp.astype(store_dtype)
         vectors["experimental_mask"] = exp_mask
-    return VectorStore(vectors, N, str(store_dtype))
+    return VectorStore(vectors, N, jnp.dtype(store_dtype).name)
 
 
 def quantize_store(store: VectorStore, names=("initial",)) -> VectorStore:

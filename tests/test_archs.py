@@ -170,12 +170,11 @@ def test_sharded_edges_match_local(rng):
     out_local = E.forward(cfg, params, local, feat, pos)
 
     # single-shard ShardedEdges: exchange is identity over a 1-device axis
-    import jax as _jax
     from jax.sharding import PartitionSpec as P
     from jax.experimental.shard_map import shard_map
+    from repro.launch.mesh import make_mesh
     parts = partition_edges(src, dst, N, 1)
-    mesh = _jax.make_mesh((1,), ("x",),
-                          axis_types=(_jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("x",))
 
     def run(feat, pos):
         def body(feat, pos):

@@ -1,0 +1,159 @@
+"""Kernel-dispatched serving path: Retriever/engine vs the multistage oracle.
+
+A/B contract for the tentpole dispatch path (Stage.use_kernel / chunk /
+dtype threaded core -> engine -> kernels):
+
+- ref mode (use_kernel=False, bf16 store, unchunked) is BITWISE equal to the
+  jitted ``repro.core.multistage.search`` oracle;
+- chunked == unchunked up to compilation-regime noise, ids exact, including
+  non-divisible N (padding edges);
+- kernel mode returns the exact ranking with tight score tolerance;
+- int8 storage stays within quantisation tolerance (1e-2 relative on this
+  unit-norm synthetic data);
+- a 1-shard mesh matches the local path;
+- the Retriever caches compiled fns per (stages, corpus, mesh).
+"""
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.core import multistage as MST
+from repro.data.synthetic import make_benchmark
+from repro.launch.mesh import make_mesh
+from repro.retrieval.retriever import Retriever
+from repro.retrieval.store import build_store, quantize_store
+
+BASE = MST.two_stage(24, 8)
+
+
+@pytest.fixture(scope="module")
+def bench():
+    cfg = get_config("colpali")
+    b = make_benchmark(cfg, (20, 16, 12), (6, 6, 4), seed=7)   # N=48, B=16
+    store = build_store(cfg, jnp.asarray(b.pages),
+                        jnp.asarray(b.token_types))
+    q = jnp.asarray(b.queries)
+    qm = jnp.asarray(b.query_mask)
+    oracle = jax.jit(functools.partial(MST.search, stages=BASE))
+    so, io = oracle(store.vectors, q, q_mask=qm)
+    return store, q, qm, np.asarray(so), np.asarray(io)
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+@pytest.mark.parametrize("chunk", [0, 7, 16])   # 48 % 7 != 0: padding edge
+def test_scan_dispatch_matches_oracle(bench, use_kernel, chunk):
+    store, q, qm, so, io = bench
+    stages = MST.with_scan_policy(BASE, use_kernel=use_kernel, chunk=chunk)
+    s, i = Retriever(store).search(q, qm, stages=stages)
+    np.testing.assert_array_equal(np.asarray(i), io)
+    if not use_kernel and chunk == 0:
+        # ref mode is the oracle's own math: bitwise
+        np.testing.assert_array_equal(np.asarray(s), so)
+    else:
+        np.testing.assert_allclose(np.asarray(s), so, rtol=2e-2, atol=2e-2)
+
+
+def test_chunked_matches_unchunked_kernel(bench):
+    store, q, qm, _, _ = bench
+    r = Retriever(store)
+    s0, i0 = r.search(q, qm, stages=MST.with_scan_policy(
+        BASE, use_kernel=True))
+    s1, i1 = r.search(q, qm, stages=MST.with_scan_policy(
+        BASE, use_kernel=True, chunk=7))
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_allclose(np.asarray(s0), np.asarray(s1),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_int8_scan_within_tolerance(bench, use_kernel):
+    """1-stage cascade so the final scores ARE the int8 scan scores
+    (quantize_store quantises "initial" — the 1-stage scan vector)."""
+    store, q, qm, _, _ = bench
+    base1 = MST.one_stage(8)
+    so1, io1 = MST.search(store.vectors, q, base1, qm)
+    so1 = np.asarray(so1)
+    r = Retriever(quantize_store(store))
+    stages = MST.with_scan_policy(base1, use_kernel=use_kernel, chunk=16)
+    s, i = r.search(q, qm, stages=stages)
+    # non-vacuous: the int8 path really ran (bf16 would match bitwise)
+    assert not np.array_equal(np.asarray(s), so1)
+    # sorted top-k scores within the int8 quantisation budget
+    np.testing.assert_allclose(np.asarray(s), so1, rtol=1e-2, atol=1e-1)
+    # ranking overlap: quantisation may swap near-ties, not the set
+    overlap = np.mean([len(set(a) & set(b)) / len(a)
+                       for a, b in zip(np.asarray(i), np.asarray(io1))])
+    assert overlap > 0.9
+
+
+def test_int8_prefetch_stage(bench):
+    """2-stage cascade with the PREFETCH vector quantised: candidates come
+    from the int8 scan, final scores from the exact bf16 rerank."""
+    store, q, qm, so, io = bench
+    r = Retriever(quantize_store(store, names=("mean_pooling",)))
+    assert r.store.vectors["mean_pooling_int8"].dtype == jnp.int8
+    stages = MST.with_scan_policy(BASE, use_kernel=True, chunk=16)
+    s, i = r.search(q, qm, stages=stages)
+    np.testing.assert_allclose(np.asarray(s), so, rtol=1e-2, atol=1e-1)
+    overlap = np.mean([len(set(a) & set(b)) / len(a)
+                       for a, b in zip(np.asarray(i), io)])
+    assert overlap > 0.9
+
+
+def test_single_vector_scan_ignores_kernel_flag(bench):
+    """3-stage: the scan stage is global_pooling (one GEMM); the kernel
+    flag must be a no-op, not a crash, and match the oracle ranking."""
+    store, q, qm, _, _ = bench
+    base3 = MST.three_stage(40, 24, 8)
+    so3, io3 = MST.search(store.vectors, q, base3, qm)
+    s, i = Retriever(store).search(
+        q, qm, stages=MST.with_scan_policy(base3, use_kernel=True))
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(io3))
+
+
+def test_scan_dtype_policy(bench):
+    """dtype="bfloat16" computes the scan in bf16: same ranking, scores
+    within bf16 tolerance of the f32 reference."""
+    store, q, qm, so, io = bench
+    s, i = Retriever(store).search(
+        q, qm, stages=MST.with_scan_policy(BASE, dtype="bfloat16"))
+    np.testing.assert_array_equal(np.asarray(i), io)
+    np.testing.assert_allclose(np.asarray(s).astype(np.float32), so,
+                               rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_sharded_matches_local(bench, use_kernel):
+    store, q, qm, so, io = bench
+    stages = MST.with_scan_policy(BASE, use_kernel=use_kernel, chunk=16)
+    mesh = make_mesh((1,), ("data",))
+    s, i = Retriever(store, mesh=mesh).search(q, qm, stages=stages)
+    np.testing.assert_array_equal(np.asarray(i), io)
+    np.testing.assert_allclose(np.asarray(s), so, rtol=2e-2, atol=2e-2)
+
+
+def test_retriever_caches_compiled_fn(bench):
+    store, q, qm, _, _ = bench
+    r = Retriever(store)
+    f1 = r.search_fn(BASE)
+    assert r.search_fn(MST.two_stage(24, 8)) is f1      # value-equal stages
+    assert r.search_fn(MST.two_stage(32, 8)) is not f1  # different cascade
+    assert r.search_fn(MST.with_scan_policy(BASE, use_kernel=True)) is not f1
+
+
+def test_retriever_default_scan_chunk(bench):
+    """Retriever(scan_chunk=...) bounds the scan intermediate without the
+    caller annotating stages; explicit stage.chunk wins."""
+    store, q, qm, so, io = bench
+    r = Retriever(store, scan_chunk=16)
+    s, i = r.search(q, qm, stages=BASE)
+    np.testing.assert_array_equal(np.asarray(i), io)
+    np.testing.assert_allclose(np.asarray(s), so, rtol=1e-5, atol=1e-5)
+    assert r.search_fn(BASE) is r.search_fn(
+        MST.with_scan_policy(BASE, chunk=16))
+    assert r.search_fn(MST.with_scan_policy(BASE, chunk=7)) is not \
+        r.search_fn(BASE)

@@ -32,6 +32,10 @@ def test_store_layout(colpali_bench):
     # token hygiene applied: masks exist, specials stripped from initial
     assert store.vectors["initial_mask"].shape == (store.n_docs,
                                                    cfg.n_patches)
+    # store_dtype records the canonical dtype name and round-trips
+    assert store.store_dtype == "bfloat16"
+    assert jnp.dtype(store.store_dtype) == jnp.bfloat16
+    assert store.vectors["initial"].dtype == jnp.dtype(store.store_dtype)
 
 
 def test_one_stage_quality(colpali_bench):
@@ -126,8 +130,8 @@ def test_engine_sharded_single_device_mesh(colpali_bench):
     """shard_map engine on a 1-device mesh == local oracle (multi-device
     equality is covered by launch-level tests with fake devices)."""
     cfg, bench, store = colpali_bench
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
     q = jnp.asarray(bench.queries)
     qm = jnp.asarray(bench.query_mask)
     stages = MST.two_stage(32, 10)
