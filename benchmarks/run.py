@@ -14,6 +14,9 @@ full result tables to stdout and benchmarks/results/paper_tables.json.
   hygiene_ablation     paper §2.1: clean vs dirty MaxSim quality
   kernel_micro         maxsim / pooling / embed_bag kernel timings (jnp ref
                        path on CPU; Pallas path is interpret-validated)
+  dynamic_corpus       live mutable corpus: search QPS at 25/50/75/100%
+                       segment fill, steady-state upsert/delete latency,
+                       retrace count asserted == 0 (beyond-paper serving)
 """
 from __future__ import annotations
 
@@ -74,8 +77,8 @@ def table2_quality_qps(table: dict):
         out[arch] = {}
         for name, stages in configs.items():
             fn = retriever.search_fn(stages)
-            dt = _t(fn, retriever.store.vectors, q, qm)
-            _, ids = fn(retriever.store.vectors, q, qm)
+            dt = _t(fn, retriever.store.stores(), q, qm)
+            _, ids = fn(retriever.store.stores(), q, qm)
             m = evaluate_ranking(np.asarray(ids), bench.qrels,
                                  ks=(5, 10, 100))
             qps = len(q) / dt
@@ -265,11 +268,78 @@ def kernel_vs_ref_scan(table: dict, quick: bool = False):
     out = {}
     for name, (r, stages) in variants.items():
         fn = r.search_fn(stages)
-        dt = _t(fn, r.store.vectors, q, qm)
+        dt = _t(fn, r.store.stores(), q, qm)
         qps = len(q) / dt
         out[name] = {"qps": qps, "us_per_query": dt / len(q) * 1e6}
         _emit(f"scan/{name}", dt, f"qps={qps:.1f}")
     table["scan_dispatch"] = out
+
+
+def dynamic_corpus(table: dict, quick: bool = False):
+    """Live-corpus serving: search QPS at 25/50/75/100% segment fill,
+    steady-state upsert/delete latency, and the no-retrace contract
+    (asserted — an ingestion-path regression that reintroduces retracing
+    fails this bench, and therefore CI, outright)."""
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.core import multistage as MST
+    from repro.data.synthetic import make_benchmark
+    from repro.retrieval import tracing
+    from repro.retrieval.retriever import Retriever
+    from repro.retrieval.store import build_store
+
+    cfg = get_config("colpali")
+    cap = 64 if quick else 256
+    batch = cap // 4
+    bench = make_benchmark(cfg, (cap // 2, cap // 4, cap // 4),
+                           (4, 4, 4) if quick else (10, 10, 10), seed=11)
+    pages = jnp.asarray(bench.pages)
+    tt = jnp.asarray(bench.token_types)
+    q = jnp.asarray(bench.queries)
+    qm = jnp.asarray(bench.query_mask)
+
+    def indexed(lo, hi):
+        return build_store(cfg, pages[lo:hi], tt)
+
+    r = Retriever(indexed(0, batch), capacity=cap)
+    stages = MST.two_stage(min(24, batch), 10)
+    fn = r.search_fn(stages)
+    out = {"capacity": cap, "batch": batch, "fill_qps": {}}
+
+    # warm-up: compile the search fn and the (batch-shaped) write/delete
+    # executables once; everything after this line must re-dispatch
+    fn(r.store.stores(), q, qm)
+    r.delete([0])
+    warm = tracing.trace_count()
+
+    dt = _t(fn, r.store.stores(), q, qm)
+    out["fill_qps"][25] = len(q) / dt
+    _emit("dynamic/fill25", dt, f"qps={len(q)/dt:.1f}")
+    up_times = []
+    for step in range(1, 4):
+        t0 = time.time()
+        ids = r.upsert(indexed(step * batch, (step + 1) * batch))
+        _block(r.store.stores())
+        up_times.append(time.time() - t0)
+        dt = _t(fn, r.store.stores(), q, qm)
+        fill = 25 * (step + 1)
+        out["fill_qps"][fill] = len(q) / dt
+        _emit(f"dynamic/fill{fill}", dt, f"qps={len(q)/dt:.1f}")
+    t0 = time.time()
+    r.delete(ids[:1])
+    _block(r.store.stores())
+    del_time = time.time() - t0
+    fn(r.store.stores(), q, qm)
+    out["upsert_s"] = float(np.mean(up_times))
+    out["delete_s"] = del_time
+    out["retraces"] = tracing.trace_count() - warm
+    _emit("dynamic/upsert", out["upsert_s"],
+          f"pages_per_s={batch/out['upsert_s']:.0f}")
+    _emit("dynamic/retrace", 0.0, f"count={out['retraces']}")
+    assert out["retraces"] == 0, (
+        f"steady-state mutation retraced {out['retraces']} times — "
+        "the no-retrace contract is broken")
+    table["dynamic_corpus"] = out
 
 
 def main() -> None:
@@ -284,6 +354,7 @@ def main() -> None:
     if args.quick:
         eq1_cost_model(table)
         kernel_vs_ref_scan(table, quick=True)
+        dynamic_corpus(table, quick=True)
         kernel_micro(table)
     else:
         table2_quality_qps(table)
@@ -293,6 +364,7 @@ def main() -> None:
         hygiene_ablation(table)
         kernel_micro(table)
         kernel_vs_ref_scan(table)
+        dynamic_corpus(table)
     name = "paper_tables_quick.json" if args.quick else "paper_tables.json"
     with open(os.path.join(RESULTS, name), "w") as f:
         json.dump(table, f, indent=1, default=float)

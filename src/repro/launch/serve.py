@@ -6,10 +6,19 @@
 Measures QPS for 1/2/3-stage configurations on the same corpus — the
 CPU-scale twin of the paper's Table 2 throughput columns (benchmarks/run.py
 does the full sweep). Search goes through the ``Retriever`` facade, which
-owns the store + mesh and caches the compiled cascade per stages config;
-``--use-kernel`` dispatches the scan stage to the Pallas MaxSim kernel,
-``--chunk`` bounds its per-launch corpus tile, ``--int8`` stores the scan
-vectors quantised.
+owns the segmented corpus + mesh and caches the compiled cascade per
+(stages, segment capacities); ``--use-kernel`` dispatches the scan stage to
+the Pallas MaxSim kernel, ``--chunk`` bounds its per-launch corpus tile,
+``--int8`` stores the scan vectors quantised.
+
+Dynamic-corpus mode:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch colpali --pages 100 \
+      --ingest-batches 8 --ingest-batch-size 32
+
+starts from a capacity-padded corpus and measures steady-state live
+ingestion: upsert throughput (pages/s), search-after-upsert QPS, and the
+no-retrace contract (retrace count printed, expected 0 after warm-up).
 """
 from __future__ import annotations
 
@@ -19,12 +28,104 @@ import time
 import numpy as np
 
 
+def _run_static(args, cfg, bench, store, stages, int8_on):
+    import jax.numpy as jnp
+    from repro.data.synthetic import evaluate_ranking
+    from repro.retrieval.retriever import Retriever
+
+    retriever = Retriever(store)
+    q = jnp.asarray(bench.queries)
+    qm = jnp.asarray(bench.query_mask)
+    retriever.search(q, qm, stages=stages)                    # compile
+    t0 = time.time()
+    for _ in range(3):
+        # time raw dispatch (device slot ids); translate once for metrics
+        scores, _ = retriever.search(q, qm, stages=stages,
+                                     translate_ids=False)
+    scores.block_until_ready()
+    dt = (time.time() - t0) / 3
+    qps = len(q) / dt
+    _, ids = retriever.search(q, qm, stages=stages)
+    metrics = evaluate_ranking(np.asarray(ids), bench.qrels, ks=(5, 10))
+    scan = ("kernel" if args.use_kernel else "ref") + \
+        (f"/chunk={args.chunk}" if args.chunk else "") + \
+        ("/int8" if int8_on else "")
+    print(f"{args.stages}-stage [{scan}]: QPS={qps:.1f}  " +
+          "  ".join(f"{k}={v:.3f}" for k, v in metrics.items()))
+
+
+def _run_ingest(args, cfg, bench, store, stages, int8_on):
+    """Steady-state live-corpus benchmark: upsert batches into preallocated
+    segment headroom, search after every upsert, count retraces."""
+    import jax
+    import jax.numpy as jnp
+    from repro.retrieval import tracing
+    from repro.retrieval.retriever import Retriever
+    from repro.retrieval.segments import bucket_capacity
+    from repro.retrieval.store import build_store, quantize_store
+
+    bs = args.ingest_batch_size
+    n_batches = args.ingest_batches
+    total = store.n_docs + (n_batches + 1) * bs
+    cap = args.capacity or bucket_capacity(total)
+    retriever = Retriever(store, capacity=cap, scan_chunk=args.chunk)
+    q = jnp.asarray(bench.queries)
+    qm = jnp.asarray(bench.query_mask)
+
+    rng = np.random.default_rng(13)
+    base = np.asarray(bench.pages)
+    tt = jnp.asarray(bench.token_types)
+
+    def make_batch():
+        # fresh synthetic pages with the same geometry (resampled + jittered
+        # real pages stand in for newly ingested PDFs)
+        sel = rng.integers(0, len(base), size=bs)
+        pages = base[sel] + 0.05 * rng.normal(size=base[sel].shape)
+        batch = build_store(cfg, jnp.asarray(pages, jnp.float32), tt)
+        if int8_on:
+            batch = quantize_store(batch, names=(stages[0].vector,))
+        return batch
+
+    # ---- warm-up: one upsert + delete + search compiles every executable
+    # (delete the same count as the steady-state delete below, so the
+    # padded slot-bucket shape — and thus the _invalidate executable —
+    # matches for any batch size)
+    ids = retriever.upsert(make_batch())
+    retriever.delete(ids[: max(1, bs // 8)])
+    s, _ = retriever.search(q, qm, stages=stages)
+    s.block_until_ready()
+    warm_traces = tracing.trace_count()
+
+    up_dt, search_dt = [], []
+    for _ in range(n_batches):
+        t0 = time.time()
+        ids = retriever.upsert(make_batch())
+        jax.block_until_ready(retriever.store.stores())
+        up_dt.append(time.time() - t0)
+        t0 = time.time()
+        s, _ = retriever.search(q, qm, stages=stages)
+        s.block_until_ready()
+        search_dt.append(time.time() - t0)
+    retriever.delete(ids[: max(1, bs // 8)])
+    s, _ = retriever.search(q, qm, stages=stages)
+    s.block_until_ready()
+    retraces = tracing.trace_count() - warm_traces
+
+    ingest_pps = bs / np.mean(up_dt)
+    qps = len(q) / np.mean(search_dt)
+    print(f"ingest [{n_batches} x {bs} pages into capacity {cap}]: "
+          f"{ingest_pps:.0f} pages/s upsert, "
+          f"search-after-upsert QPS={qps:.1f}, "
+          f"live docs={retriever.n_docs}, "
+          f"segments={retriever.store.capacities}, "
+          f"steady-state retraces={retraces} (expect 0)")
+
+
 def main():
     import jax.numpy as jnp
     from repro.configs import get_config
     from repro.core import multistage as MST
-    from repro.data.synthetic import evaluate_ranking, make_benchmark
-    from repro.retrieval.retriever import Retriever
+    from repro.data.synthetic import make_benchmark
     from repro.retrieval.store import build_store, quantize_store
 
     ap = argparse.ArgumentParser()
@@ -41,6 +142,14 @@ def main():
                     help="scan-stage corpus chunk (0 = unchunked)")
     ap.add_argument("--int8", action="store_true",
                     help="int8-quantise the scan-stage vectors")
+    ap.add_argument("--ingest-batches", type=int, default=0,
+                    help="dynamic-corpus mode: upsert this many batches "
+                         "into preallocated headroom, measuring steady-"
+                         "state ingestion + search-after-upsert")
+    ap.add_argument("--ingest-batch-size", type=int, default=32)
+    ap.add_argument("--capacity", type=int, default=0,
+                    help="preallocated corpus capacity (0 = bucketed "
+                         "power-of-two over the expected total)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -70,22 +179,10 @@ def main():
                   "skipping quantisation")
     print(f"indexed {store.n_docs} pages in {time.time()-t0:.2f}s "
           f"(named vectors: {sorted(store.dims())})")
-    retriever = Retriever(store)
-    q = jnp.asarray(bench.queries)
-    qm = jnp.asarray(bench.query_mask)
-    scores, ids = retriever.search(q, qm, stages=stages)      # compile
-    t0 = time.time()
-    for _ in range(3):
-        scores, ids = retriever.search(q, qm, stages=stages)
-    scores.block_until_ready()
-    dt = (time.time() - t0) / 3
-    qps = len(q) / dt
-    metrics = evaluate_ranking(np.asarray(ids), bench.qrels, ks=(5, 10))
-    scan = ("kernel" if args.use_kernel else "ref") + \
-        (f"/chunk={args.chunk}" if args.chunk else "") + \
-        ("/int8" if int8_on else "")
-    print(f"{args.stages}-stage [{scan}]: QPS={qps:.1f}  " +
-          "  ".join(f"{k}={v:.3f}" for k, v in metrics.items()))
+    if args.ingest_batches > 0:
+        _run_ingest(args, cfg, bench, store, stages, int8_on)
+    else:
+        _run_static(args, cfg, bench, store, stages, int8_on)
 
 
 if __name__ == "__main__":

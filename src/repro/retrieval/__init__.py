@@ -1,2 +1,3 @@
-from repro.retrieval import engine, store, topk
+from repro.retrieval import engine, segments, store, topk, tracing
 from repro.retrieval.retriever import Retriever
+from repro.retrieval.segments import SegmentedStore, bucket_capacity

@@ -1,4 +1,4 @@
-"""Mesh-sharded multi-stage MaxSim search engine.
+"""Mesh-sharded multi-stage MaxSim search engine over a segmented corpus.
 
 Executes the paper's prefetch->rerank cascade (§2.4) as ONE jitted XLA
 program over a corpus sharded across every chip (the "server-side single
@@ -12,15 +12,21 @@ API call", pod-scale edition). Design rules:
   bytes); pooling shrinks it 32-64x, int8 storage halves it again;
 - later stages score only each shard's members of the global candidate set,
   compacted to a fixed per-shard cap (exact when cap >= per-shard hits;
-  cap defaults to 8x the fair share).
+  cap defaults to 8x the fair share);
+- the corpus is a tuple of fixed-CAPACITY segments: arrays are padded to
+  stable shapes and a per-doc ``doc_valid`` mask NEGs dead slots (ingestion
+  headroom, deleted pages, the ragged tail of an uneven shard) at every
+  stage — mutation and raggedness never change compiled shapes, so
+  steady-state upsert/delete/search re-dispatches cached executables;
+- candidate ids live in a global SLOT space (segment offsets = cumulative
+  capacities); per-segment results merge via ``merge_topk``. There is no
+  divisibility constraint between corpus size and shard count: each shard
+  owns ``capacity / n_shards`` slots and ``doc_valid`` masks the tail.
 
 The single-device oracle is repro.core.multistage.search; tests assert
 equality on a 1-shard mesh and overlap on multi-shard CPU meshes.
 """
 from __future__ import annotations
-
-import functools
-from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
@@ -28,10 +34,10 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.core import maxsim as MS
-from repro.core import multistage as MST
 from repro.core.multistage import Stage
 from repro.kernels.maxsim import ops as KOPS
 from repro.retrieval.topk import allgather_topk, merge_topk
+from repro.retrieval.tracing import record_trace
 
 NEG = -1e30
 INT8_REF_CHUNK = 1024      # fallback scan chunk for int8 stores in ref mode
@@ -39,6 +45,15 @@ INT8_REF_CHUNK = 1024      # fallback scan chunk for int8 stores in ref mode
 
 def _flat_axes(mesh: Mesh) -> tuple:
     return tuple(mesh.axis_names)
+
+
+def _mesh_shards(mesh: Mesh | None) -> int:
+    if mesh is None:
+        return 1
+    n = 1
+    for a in mesh.axis_names:
+        n *= mesh.shape[a]
+    return n
 
 
 def _scan_arrays(store: dict, stage: Stage):
@@ -57,14 +72,16 @@ def _scan_arrays(store: dict, stage: Stage):
 
 
 def _dispatch_scan(stage: Stage, vecs, mask, q, q_mask, scales,
-                   impl: str, interpret: bool):
+                   impl: str, interpret: bool, doc_valid=None):
     """Score the full-corpus scan stage per the stage's dispatch policy.
 
     use_kernel routes to the Pallas streaming kernel (or its jnp twin when
     Pallas is unavailable — ``impl`` is resolved once at build time);
     otherwise the core.maxsim reference runs, chunked when stage.chunk > 0
     so the [B, N, Q, D] similarity intermediate is bounded at
-    [B, chunk, Q, D]. [n_docs, D, d] -> [B, n_docs].
+    [B, chunk, Q, D]. [n_docs, D, d] -> [B, n_docs]. ``doc_valid`` [N] bool
+    NEGs dead capacity-padding slots (threaded into the kernel wrappers, or
+    applied on the ref scores).
     """
     if stage.dtype is not None:
         q = q.astype(stage.dtype)
@@ -75,11 +92,14 @@ def _dispatch_scan(stage: Stage, vecs, mask, q, q_mask, scales,
     if vecs.ndim == 2:                        # single-vector stage: one GEMM
         if scales is not None:
             vecs = vecs.astype(q.dtype) * scales[..., None].astype(q.dtype)
-        return MS.maxsim_single_vector(q, vecs, q_mask)
+        s = MS.maxsim_single_vector(q, vecs, q_mask)
+        if doc_valid is not None:
+            s = jnp.where(doc_valid[None, :], s, NEG)
+        return s
     if stage.use_kernel:
         return KOPS.maxsim_scores_chunked(q, vecs, q_mask, mask, scales,
-                                          chunk=stage.chunk, impl=impl,
-                                          interpret=interpret)
+                                          doc_valid, chunk=stage.chunk,
+                                          impl=impl, interpret=interpret)
     if scales is not None:
         # stream int8 through the chunked ref scorer: dequantisation happens
         # per chunk inside the scan loop, never as a full [N, D, d] float
@@ -87,9 +107,12 @@ def _dispatch_scan(stage: Stage, vecs, mask, q, q_mask, scales,
         # hence a bounded default chunk when the stage didn't set one
         chunk = stage.chunk if stage.chunk > 0 else INT8_REF_CHUNK
         return KOPS.maxsim_scores_chunked(q, vecs, q_mask, mask, scales,
-                                          chunk=chunk, impl="ref",
+                                          doc_valid, chunk=chunk, impl="ref",
                                           interpret=True)
-    return MS.maxsim_batched(q, vecs, q_mask, mask, chunk=stage.chunk)
+    s = MS.maxsim_batched(q, vecs, q_mask, mask, chunk=stage.chunk)
+    if doc_valid is not None:
+        s = jnp.where(doc_valid[None, :], s, NEG)
+    return s
 
 
 def _resolve_impl(stages: tuple) -> tuple:
@@ -99,42 +122,187 @@ def _resolve_impl(stages: tuple) -> tuple:
     return "ref", True
 
 
-def _score_candidates(stage_vecs, stage_mask, q, q_mask, cand_local, valid):
-    """Score per-query candidate lists. cand_local [B, L] local ids."""
-    if stage_vecs.ndim == 2:
-        vecs = jnp.take(stage_vecs, cand_local, axis=0).astype(q.dtype)
-        if q_mask is not None:
-            qs = jnp.sum(q * q_mask[..., None].astype(q.dtype), axis=-2)
-        else:
-            qs = jnp.sum(q, axis=-2)
-        s = jnp.einsum("bd,bld->bl", qs, vecs)
-        return jnp.where(valid, s, NEG)
+def _score_candidates(stage_vecs, stage_mask, q, q_mask, rows, ok):
+    """Score per-query candidate lists against ONE segment's arrays.
 
-    def per_query(qi, qm, cl, vl):
-        dv = jnp.take(stage_vecs, cl, axis=0).astype(qi.dtype)   # [L, D, d]
-        dm = None if stage_mask is None else jnp.take(stage_mask, cl, axis=0)
-        s = MS.maxsim_scan(qi, dv, qm, dm)
-        return jnp.where(vl, s, NEG)
-
-    return jax.vmap(per_query)(q, q_mask, cand_local, valid)
-
-
-def _compact_local(cand: jax.Array, my_shard, n_local: int, cap: int):
-    """Select this shard's members of the global candidate list.
-
-    cand [B, K] global ids -> (local ids [B, L], valid [B, L], original
-    position [B, L]) with L = cap.
+    rows [B, L] in-range local slot ids; ok [B, L] marks candidates this
+    caller actually owns (in-segment, on-shard, doc_valid) — the rest score
+    NEG. Same math as the ``multistage._score_stage`` oracle (gather, then
+    ``maxsim_scan``) so the 1-segment ref path stays bitwise-comparable.
     """
-    mine = (cand // n_local) == my_shard
-    order = jnp.argsort(~mine, axis=1)[:, :cap]            # mine first
-    sel_cand = jnp.take_along_axis(cand, order, axis=1)
-    sel_mine = jnp.take_along_axis(mine, order, axis=1)
-    return sel_cand % n_local, sel_mine, order
+    if stage_vecs.shape[-1] < q.shape[-1]:    # Matryoshka rerank stage
+        q = q[..., : stage_vecs.shape[-1]]
+    if stage_vecs.ndim == 2:
+        vecs = jnp.take(stage_vecs, rows, axis=0)              # [B, L, d]
+        if q_mask is not None:
+            q = q * q_mask[..., None].astype(q.dtype)
+        qs = jnp.sum(q, axis=-2)
+        s = jnp.einsum("bd,bld->bl", qs, vecs.astype(qs.dtype))
+        return jnp.where(ok, s, NEG)
+
+    def per_query(qi, qm, cl):
+        dv = jnp.take(stage_vecs, cl, axis=0)                  # [L, D, d]
+        dm = None if stage_mask is None else jnp.take(stage_mask, cl, axis=0)
+        return MS.maxsim_scan(qi, dv, qm, dm)
+
+    qm_in = None if q_mask is None else 0
+    s = jax.vmap(per_query, in_axes=(0, qm_in, 0))(q, q_mask, rows)
+    return jnp.where(ok, s, NEG)
+
+
+def _offsets(capacities: tuple) -> tuple:
+    offs, off = [], 0
+    for cap in capacities:
+        offs.append(off)
+        off += cap
+    return tuple(offs)
+
+
+def _build_body(mesh: Mesh | None, stages: tuple, capacities: tuple,
+                rerank_overcommit: int):
+    """The (unjitted) cascade over a tuple of segment store dicts.
+
+    fn(stores: tuple[dict, ...], q [B,Q,d], q_mask [B,Q]) ->
+    (scores [B,k], global slot ids [B,k]).
+    """
+    assert capacities, "search needs at least one segment"
+    impl, interpret = _resolve_impl(stages)
+    offsets = _offsets(capacities)
+    total_cap = sum(capacities)
+
+    if mesh is None:
+        def local_body(stores, q, q_mask):
+            record_trace()
+            scores = cand = None
+            for si, stage in enumerate(stages):
+                if si == 0:
+                    parts_v, parts_i = [], []
+                    for store, cap, off in zip(stores, capacities, offsets):
+                        vecs, mask, scales = _scan_arrays(store, stage)
+                        s = _dispatch_scan(stage, vecs, mask, q, q_mask,
+                                           scales, impl, interpret,
+                                           doc_valid=store.get("doc_valid"))
+                        v, i = jax.lax.top_k(s, min(stage.k, cap))
+                        parts_v.append(v)
+                        parts_i.append(i + off)
+                    scores, cand = merge_topk(
+                        jnp.concatenate(parts_v, axis=1),
+                        jnp.concatenate(parts_i, axis=1),
+                        min(stage.k, total_cap))
+                else:
+                    s_all = None
+                    for store, cap, off in zip(stores, capacities, offsets):
+                        local = cand - off
+                        in_seg = (local >= 0) & (local < cap)
+                        rows = jnp.clip(local, 0, cap - 1)
+                        ok = in_seg
+                        dv = store.get("doc_valid")
+                        if dv is not None:
+                            ok = ok & jnp.take(dv, rows, axis=0)
+                        s = _score_candidates(store[stage.vector],
+                                              store.get(stage.vector + "_mask"),
+                                              q, q_mask, rows, ok)
+                        # each candidate lives in exactly one segment; the
+                        # others scored it NEG, so max == owner's score
+                        s_all = s if s_all is None else jnp.maximum(s_all, s)
+                    k = min(stage.k, cand.shape[1])
+                    scores, sel = jax.lax.top_k(s_all, k)
+                    cand = jnp.take_along_axis(cand, sel, axis=1)
+            return scores, cand
+        return local_body
+
+    axes = _flat_axes(mesh)
+    n_shards = _mesh_shards(mesh)
+    for cap in capacities:
+        # segment capacities are shard-padded at allocation; raw corpora are
+        # shard-padded by make_search_fn — there is NO n_docs divisibility
+        # constraint, only this internal invariant on padded capacities
+        assert cap % n_shards == 0, (cap, n_shards)
+
+    def body(stores, q, q_mask):
+        record_trace()
+        shard_idx = jax.lax.axis_index(axes)
+        scores = cand = None
+        for si, stage in enumerate(stages):
+            if si == 0:
+                parts_v, parts_i = [], []
+                for store, cap, off in zip(stores, capacities, offsets):
+                    n_local = cap // n_shards
+                    vecs, mask, scales = _scan_arrays(store, stage)
+                    s_loc = _dispatch_scan(stage, vecs, mask, q, q_mask,
+                                           scales, impl, interpret)
+                    v, i = allgather_topk(s_loc, min(stage.k, cap), axes,
+                                          shard_idx, n_local,
+                                          valid_local=store.get("doc_valid"),
+                                          seg_offset=off)
+                    parts_v.append(v)
+                    parts_i.append(i)
+                scores, cand = merge_topk(
+                    jnp.concatenate(parts_v, axis=1),
+                    jnp.concatenate(parts_i, axis=1),
+                    min(stage.k, total_cap))
+            else:
+                L = cand.shape[1]
+                cap_slots = min(L, max(1, -(-L // n_shards))
+                                * rerank_overcommit)
+                parts_v, parts_i = [], []
+                for store, cap, off in zip(stores, capacities, offsets):
+                    n_local = cap // n_shards
+                    local = cand - off
+                    in_seg = (local >= 0) & (local < cap)
+                    lclip = jnp.clip(local, 0, cap - 1)
+                    mine = in_seg & (lclip // n_local == shard_idx)
+                    order = jnp.argsort(~mine, axis=1)[:, :cap_slots]
+                    rows = jnp.take_along_axis(lclip % n_local, order, axis=1)
+                    ok = jnp.take_along_axis(mine, order, axis=1)
+                    dv = store.get("doc_valid")
+                    if dv is not None:
+                        ok = ok & jnp.take(dv, rows, axis=0)
+                    s = _score_candidates(store[stage.vector],
+                                          store.get(stage.vector + "_mask"),
+                                          q, q_mask, rows, ok)
+                    # merge shards/segments: each candidate scored real on
+                    # exactly one (shard, segment); NEG everywhere else
+                    parts_v.append(jax.lax.all_gather(s, axes, axis=1,
+                                                      tiled=True))
+                    parts_i.append(jax.lax.all_gather(
+                        jnp.take_along_axis(cand, order, axis=1), axes,
+                        axis=1, tiled=True))
+                scores, cand = merge_topk(
+                    jnp.concatenate(parts_v, axis=1),
+                    jnp.concatenate(parts_i, axis=1),
+                    min(stage.k, L))
+        return scores, cand
+
+    def searcher(stores, q, q_mask):
+        specs = tuple({k: P(axes) if v.ndim >= 1 else P()
+                       for k, v in store.items()} for store in stores)
+        fn = shard_map(body, mesh=mesh,
+                       in_specs=(specs, P(), P()),
+                       out_specs=(P(), P()),
+                       check_rep=False)
+        return fn(stores, q, q_mask)
+
+    return searcher
+
+
+def make_segmented_search_fn(mesh: Mesh | None, stages: tuple,
+                             capacities: tuple,
+                             rerank_overcommit: int = 8):
+    """Build the jitted multi-segment search callable.
+
+    Returns fn(stores: tuple[dict, ...], q [B,Q,d], q_mask [B,Q]) ->
+    (scores [B,k], global slot ids [B,k]). Compiled shapes depend only on
+    (stages, capacities, mesh) — never on fill level — which is what lets a
+    ``Retriever`` upsert/delete without retracing.
+    """
+    return jax.jit(_build_body(mesh, stages, tuple(capacities),
+                               rerank_overcommit))
 
 
 def make_search_fn(mesh: Mesh | None, stages: tuple, n_docs: int,
                    rerank_overcommit: int = 8):
-    """Build the jitted multi-stage search callable.
+    """Build the jitted search callable over a single raw store dict.
 
     Returns fn(store_vectors: dict, q [B,Q,d], q_mask [B,Q]) ->
     (scores [B,k], ids [B,k]).
@@ -142,65 +310,29 @@ def make_search_fn(mesh: Mesh | None, stages: tuple, n_docs: int,
     Matches the repro.core.multistage.search oracle bitwise when the scan
     stage runs in ref mode on a bf16/f32 store (use_kernel dispatch and
     int8 storage trade exactness for throughput; chunking does not).
+    Ragged corpora are fine on any mesh: arrays are shard-padded inside the
+    compiled fn and the tail masked via ``doc_valid`` (zero-copy when
+    ``n_docs`` already divides evenly).
     """
-    impl, interpret = _resolve_impl(stages)
+    n_shards = _mesh_shards(mesh)
+    cap = -(-n_docs // n_shards) * n_shards
+    body = _build_body(mesh, stages, (cap,), rerank_overcommit)
 
-    def scan_scorer(stage, store, q, q_mask):
-        vecs, mask, scales = _scan_arrays(store, stage)
-        return _dispatch_scan(stage, vecs, mask, q, q_mask, scales,
-                              impl, interpret)
+    def _pad_rows(v, n, to):
+        if v.ndim >= 1 and v.shape[0] == n and to != n:
+            return jnp.pad(v, ((0, to - n),) + ((0, 0),) * (v.ndim - 1))
+        return v
 
-    if mesh is None:
-        def local_fn(store, q, q_mask):
-            return MST.search(store, q, stages, q_mask,
-                              scan_scorer=scan_scorer)
-        return jax.jit(local_fn)
+    def fn(store, q, q_mask):
+        src = dict(store)
+        dv = src.pop("doc_valid", None)
+        if dv is None:
+            dv = jnp.ones((n_docs,), bool)
+        padded = {k: _pad_rows(v, n_docs, cap) for k, v in src.items()}
+        padded["doc_valid"] = _pad_rows(dv, n_docs, cap)  # pads False
+        return body((padded,), q, q_mask)
 
-    axes = _flat_axes(mesh)
-    n_shards = 1
-    for a in axes:
-        n_shards *= mesh.shape[a]
-    assert n_docs % n_shards == 0, (n_docs, n_shards)
-    n_local = n_docs // n_shards
-
-    def body(store, q, q_mask):
-        shard_idx = jax.lax.axis_index(axes)
-        cand = None
-        scores = None
-        for si, stage in enumerate(stages):
-            vecs = store[stage.vector]
-            mask = store.get(stage.vector + "_mask")
-            if cand is None:
-                s_loc = scan_scorer(stage, store, q, q_mask)    # [B,n_loc]
-                k = min(stage.k, n_docs)
-                scores, cand = allgather_topk(s_loc, k, axes, shard_idx,
-                                              n_local)
-            else:
-                cap = min(cand.shape[1],
-                          max(1, -(-cand.shape[1] // n_shards))
-                          * rerank_overcommit)
-                cl, valid, order = _compact_local(cand, shard_idx, n_local,
-                                                  cap)
-                s = _score_candidates(vecs, mask, q, q_mask, cl, valid)
-                # merge shards: each candidate scored on exactly one shard
-                sv = jax.lax.all_gather(s, axes, axis=1, tiled=True)
-                ov = jax.lax.all_gather(
-                    jnp.take_along_axis(cand, order, axis=1), axes,
-                    axis=1, tiled=True)
-                k = min(stage.k, cand.shape[1])
-                scores, cand = merge_topk(sv, ov, k)
-        return scores, cand
-
-    def searcher(store, q, q_mask):
-        specs = {k: P(axes) if v.ndim >= 1 else P()
-                 for k, v in store.items()}
-        fn = shard_map(body, mesh=mesh,
-                       in_specs=(specs, P(), P()),
-                       out_specs=(P(), P()),
-                       check_rep=False)
-        return fn(store, q, q_mask)
-
-    return jax.jit(searcher)
+    return jax.jit(fn)
 
 
 def store_shardings(mesh: Mesh | None, store_vectors: dict) -> dict | None:

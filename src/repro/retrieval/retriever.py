@@ -1,52 +1,102 @@
-"""Serving facade: one object that owns the store + mesh + compiled fns.
+"""Serving facade: one object that owns the corpus + mesh + compiled fns.
 
 ``Retriever`` is the single entry point the launcher and benchmark harness
-use. It wraps the mesh-sharded engine (``repro.retrieval.engine``) and
-caches the jitted search callable per ``(stages, corpus layout, mesh)`` key,
-so repeated queries against the same corpus never re-trace or re-wrap
-``shard_map`` — fn construction happens once, steady-state calls are pure
-dispatch.
+use. It wraps the mesh-sharded engine (``repro.retrieval.engine``) over a
+SEGMENTED, capacity-padded corpus (``repro.retrieval.segments``) and caches
+the jitted search callable per ``(stages, segment capacities, mesh)`` —
+NOT per exact corpus content or fill level. That key is the no-retrace
+contract: ``upsert`` writes into preallocated padding and ``delete`` flips
+validity bits, so steady-state mutation + search re-dispatches cached
+executables (assert with ``Retriever.trace_count()`` deltas). Only a
+new-segment allocation or ``compact()`` changes the layout key.
 
     store = build_store(cfg, pages, token_types)
-    r = Retriever(store, mesh=None, scan_chunk=4096)
+    r = Retriever(store, mesh=None, scan_chunk=4096,
+                  capacity=4096)                    # ingestion headroom
     scores, ids = r.search(q, q_mask, stages=MST.two_stage(256, 100))
+    r.upsert(build_store(cfg, new_pages, token_types))   # no retrace
+    r.delete([3, 17])                                    # no retrace
 
 Scan-dispatch policy (``Stage.use_kernel`` / ``chunk`` / ``dtype``) rides on
 the stages tuple; ``scan_chunk`` supplies a default chunk for scan stages
-that don't set one, bounding the scan-stage score intermediate.
+that don't set one, bounding the scan-stage score intermediate. Returned
+ids are STABLE page ids (assigned at upsert, survive compaction); slots
+that never matched (k > live docs) come back as -1.
 """
 from __future__ import annotations
 
+import numpy as np
 import jax
+import jax.numpy as jnp
 
 from repro.core import multistage as MST
-from repro.retrieval import engine
+from repro.retrieval import engine, tracing
+from repro.retrieval.segments import SegmentedStore
 from repro.retrieval.store import VectorStore
 
 
 class Retriever:
-    def __init__(self, store: VectorStore, mesh=None,
+    def __init__(self, store, mesh=None,
                  rerank_overcommit: int = 8, scan_chunk: int = 0,
-                 place: bool = True):
-        """place=True device_puts the store with the mesh's shardings so the
-        corpus is laid out once, not re-sharded per call."""
+                 place: bool = True, capacity: int | None = None):
+        """``store`` is a built ``VectorStore`` (wrapped as segment 0 —
+        exact-fit by default, or preallocated to ``capacity`` slots for
+        ingestion headroom) or an existing ``SegmentedStore``. place=True
+        lays the corpus out with the mesh's shardings once, not per call."""
         self.mesh = mesh
         self.rerank_overcommit = rerank_overcommit
         self.scan_chunk = scan_chunk
         self._fns: dict = {}
-        if mesh is not None and place:
-            sh = engine.store_shardings(mesh, store.vectors)
-            store = VectorStore(
-                {k: jax.device_put(v, sh[k]) for k, v in store.vectors.items()},
-                store.n_docs, store.store_dtype)
+        n_shards = engine._mesh_shards(mesh)
+        if isinstance(store, VectorStore):
+            store = SegmentedStore.from_store(
+                store, n_shards=n_shards, capacity=capacity,
+                mesh=mesh if place else None)
+        else:
+            for cap in store.capacities:
+                if cap % n_shards:
+                    raise ValueError(
+                        f"segment capacity {cap} not divisible by "
+                        f"{n_shards} shards — allocate with n_shards set")
+            store.n_shards = max(store.n_shards, n_shards)
+            if mesh is not None and place:
+                store.place_on(mesh)
         self.store = store
-        # the store is fixed at construction: key it once, not per call
-        self._corpus_key = tuple(sorted((k, v.shape, str(v.dtype))
-                                        for k, v in store.vectors.items()))
 
     @property
     def n_docs(self) -> int:
-        return self.store.n_docs
+        """Live (valid) documents — shrinks on delete, grows on upsert."""
+        return self.store.n_valid
+
+    # ------------------------------------------------------------------
+    # mutation (the no-retrace path)
+    # ------------------------------------------------------------------
+
+    def upsert(self, batch: VectorStore) -> np.ndarray:
+        """Ingest an indexed batch (``build_store``/``quantize_store``
+        output). Returns stable page ids. Never retraces while the batch
+        fits in existing segment headroom."""
+        return self.store.add_pages(batch)
+
+    def delete(self, ids) -> int:
+        """Invalidate pages by stable id (validity masking; no data moves).
+        Returns the number of pages deleted."""
+        return self.store.delete(ids)
+
+    def compact(self) -> None:
+        """Reclaim dead slots (amortised; changes the layout key, so the
+        next search per stages config recompiles)."""
+        self.store.compact()
+        self._fns.clear()
+
+    @staticmethod
+    def trace_count() -> int:
+        """Traces of repro-owned serving jits so far (see tracing module)."""
+        return tracing.trace_count()
+
+    # ------------------------------------------------------------------
+    # search
+    # ------------------------------------------------------------------
 
     def _normalize(self, stages: tuple) -> tuple:
         stages = tuple(stages)
@@ -56,21 +106,31 @@ class Retriever:
 
     def search_fn(self, stages: tuple):
         """The compiled cascade callable for ``stages``, built at most once
-        per (stages, corpus layout, mesh)."""
+        per (stages, segment capacities/layout, mesh). Signature:
+        fn(stores: tuple[dict, ...], q, q_mask) -> (scores, slot ids)."""
         stages = self._normalize(stages)
-        key = (stages, self._corpus_key, self.mesh)
+        key = (stages, self.store.layout_key(), self.mesh)
         fn = self._fns.get(key)
         if fn is None:
-            fn = engine.make_search_fn(self.mesh, stages, self.store.n_docs,
-                                       self.rerank_overcommit)
+            fn = engine.make_segmented_search_fn(
+                self.mesh, stages, self.store.capacities,
+                self.rerank_overcommit)
             self._fns[key] = fn
         return fn
 
     def search(self, q: jax.Array, q_mask: jax.Array | None = None,
-               *, stages: tuple) -> tuple:
-        """Run the cascade: q [B,Q,d] -> (scores [B,k], ids [B,k])."""
+               *, stages: tuple, translate_ids: bool = True) -> tuple:
+        """Run the cascade: q [B,Q,d] -> (scores [B,k], ids [B,k]).
+
+        ids are stable page ids (np.int64; -1 marks dead-slot filler when k
+        exceeds the live corpus); pass translate_ids=False for raw device
+        slot ids."""
         if q_mask is None and self.mesh is not None:
             # shard_map path expects a concrete mask array
-            import jax.numpy as jnp
             q_mask = jnp.ones(q.shape[:2], bool)
-        return self.search_fn(stages)(self.store.vectors, q, q_mask)
+        scores, slots = self.search_fn(stages)(self.store.stores(), q,
+                                               q_mask)
+        if not translate_ids:
+            return scores, slots
+        table = self.store.slot_doc_ids()
+        return scores, table[np.asarray(slots)]

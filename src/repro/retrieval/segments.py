@@ -1,0 +1,327 @@
+"""Segmented, capacity-padded mutable corpus (the live-index store).
+
+The static store built by ``repro.retrieval.store.build_store`` is indexed
+once and frozen; production corpora are not — collections grow page-by-page
+as PDFs are ingested and shrink when tenants delete documents. This module
+makes the corpus MUTABLE without ever changing array shapes:
+
+- a ``Segment`` is a fixed-``capacity`` slab of named-vector arrays padded
+  with zero slots, plus a ``doc_valid`` [capacity] bool mask (stored inside
+  the vectors dict so it shards/threads through the engine like any other
+  per-doc array) and a host-side ``doc_ids`` map from slot to user page id;
+- ``SegmentedStore.add_pages`` writes a freshly indexed batch into the
+  preallocated tail of the last segment via a shape-stable jitted
+  ``dynamic_update_slice`` — steady-state ingestion never retraces; when a
+  batch does not fit, a NEW segment is allocated at a bucketed power-of-two
+  capacity (rounded up to a shard multiple) so layouts — and therefore
+  compiled search fns — come from a small reusable family;
+- ``delete`` only flips ``doc_valid`` bits (validity masking, the
+  Nemotron-ColEmbed-style mutable index), it never moves a byte;
+- ``compact`` is the amortised reclaim: rebuilds the corpus from surviving
+  rows into a single right-sized segment (this DOES change the layout and
+  thus recompiles — run it off the serving path).
+
+Search-side, the engine scans each segment per stage and merges candidates
+in a global SLOT id space (segment offsets = cumulative capacities);
+``slot_doc_ids`` translates slots back to stable user page ids.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.retrieval.store import VectorStore
+from repro.retrieval.tracing import record_trace
+
+SEGMENT_MIN_CAPACITY = 64
+DELETE_BUCKET_MIN = 8
+
+
+def bucket_capacity(n: int, n_shards: int = 1,
+                    min_capacity: int = SEGMENT_MIN_CAPACITY) -> int:
+    """Smallest power-of-two >= n (and >= min_capacity), rounded up to a
+    multiple of ``n_shards`` so every shard owns an equal slab."""
+    cap = 1 << max(0, int(n - 1).bit_length())
+    cap = max(cap, min_capacity)
+    return -(-cap // n_shards) * n_shards
+
+
+def _round_up(n: int, mult: int) -> int:
+    return -(-n // mult) * mult
+
+
+# Both mutation primitives take only shape-stable arguments (the write
+# offset and slot list are traced values), so the jit cache is keyed purely
+# on (segment layout, batch shape): steady-state ingestion and deletion
+# re-dispatch cached executables. No donation: CPU does not implement it and
+# segments are modest; on TPU the update is in-place-able by XLA anyway.
+
+@jax.jit
+def _write_block(arr: jax.Array, block: jax.Array, start) -> jax.Array:
+    record_trace()
+    idx = (start,) + (0,) * (arr.ndim - 1)
+    return jax.lax.dynamic_update_slice(arr, block, idx)
+
+
+@jax.jit
+def _invalidate(valid: jax.Array, slots: jax.Array) -> jax.Array:
+    record_trace()
+    # slots are padded to a bucketed length with sentinel == capacity,
+    # which is out of bounds and dropped — one trace serves many counts
+    return valid.at[slots].set(False, mode="drop")
+
+
+@dataclass
+class Segment:
+    """One fixed-capacity slab. ``vectors`` holds every named array padded
+    to ``capacity`` rows (including ``doc_valid``); ``n_docs`` is the
+    high-water mark (next free tail slot); ``doc_ids`` maps slot -> stable
+    user page id, -1 for never-written or deleted slots."""
+    vectors: dict
+    capacity: int
+    n_docs: int
+    doc_ids: np.ndarray
+
+    @property
+    def free(self) -> int:
+        return self.capacity - self.n_docs
+
+    @property
+    def n_valid(self) -> int:
+        return int((self.doc_ids >= 0).sum())
+
+
+class SegmentedStore:
+    """A mutable corpus as a list of capacity-padded segments."""
+
+    def __init__(self, segments: list, store_dtype: str = "bfloat16",
+                 n_shards: int = 1, next_id: int = 0, mesh=None):
+        self.segments = list(segments)
+        self.store_dtype = store_dtype
+        self.n_shards = n_shards
+        self.next_id = next_id
+        self.mesh = mesh
+        self._slot_ids: np.ndarray | None = None   # slot->page-id cache
+
+    # ------------------------------------------------------------------
+    # construction
+    # ------------------------------------------------------------------
+
+    @classmethod
+    def from_store(cls, store: VectorStore, n_shards: int = 1,
+                   capacity: int | None = None, mesh=None):
+        """Wrap a built (immutable) store as segment 0.
+
+        Default capacity is EXACT fit rounded up to a shard multiple — a
+        frozen corpus pays zero padded-scan overhead and legacy behaviour
+        is unchanged; pass ``capacity`` (e.g. ``bucket_capacity``) to
+        preallocate ingestion headroom."""
+        cap = capacity if capacity is not None else \
+            _round_up(store.n_docs, n_shards)
+        if cap < store.n_docs:
+            raise ValueError(f"capacity {cap} < n_docs {store.n_docs}")
+        cap = _round_up(cap, n_shards)
+        out = cls([], store.store_dtype, n_shards, next_id=0, mesh=mesh)
+        out._alloc_segment(store.vectors, cap)
+        seg = out.segments[0]
+        n = store.n_docs
+        for k, v in store.vectors.items():
+            seg.vectors[k] = _write_block(seg.vectors[k],
+                                          v.astype(seg.vectors[k].dtype),
+                                          jnp.int32(0))
+        seg.vectors["doc_valid"] = _write_block(
+            seg.vectors["doc_valid"], jnp.ones((n,), bool), jnp.int32(0))
+        seg.doc_ids[:n] = np.arange(n)
+        seg.n_docs = n
+        out.next_id = n
+        return out
+
+    def place_on(self, mesh) -> None:
+        """Lay every segment array out with ``mesh``'s doc-sharded layout
+        (done once at placement, never per search call)."""
+        self.mesh = mesh
+        for seg in self.segments:
+            seg.vectors = {k: self._place(v) for k, v in seg.vectors.items()}
+
+    def _place(self, arr: jax.Array) -> jax.Array:
+        if self.mesh is None:
+            return arr
+        spec = P(tuple(self.mesh.axis_names))
+        return jax.device_put(arr, NamedSharding(self.mesh, spec))
+
+    def _alloc_segment(self, like_vectors: dict, capacity: int) -> Segment:
+        vecs = {}
+        for k, v in like_vectors.items():
+            if k == "doc_valid":
+                continue
+            vecs[k] = self._place(jnp.zeros((capacity,) + v.shape[1:],
+                                            v.dtype))
+        vecs["doc_valid"] = self._place(jnp.zeros((capacity,), bool))
+        seg = Segment(vecs, capacity, 0, np.full((capacity,), -1, np.int64))
+        self.segments.append(seg)
+        return seg
+
+    # ------------------------------------------------------------------
+    # mutation
+    # ------------------------------------------------------------------
+
+    def add_pages(self, batch: VectorStore) -> np.ndarray:
+        """Ingest an indexed batch (the output of ``build_store`` /
+        ``quantize_store``). Returns the assigned stable page ids.
+
+        Fits the WHOLE batch into the last segment's free tail when
+        possible; otherwise allocates a new bucketed segment sized to the
+        batch (batches are never split, so steady-state ingestion at a
+        fixed batch size reuses one write executable per vector name)."""
+        n = batch.n_docs
+        if self.segments:
+            names = {k for k in self.segments[0].vectors if k != "doc_valid"}
+            if set(batch.vectors) != names:
+                raise ValueError(
+                    f"batch vectors {sorted(batch.vectors)} != store "
+                    f"vectors {sorted(names)}")
+        seg = self.segments[-1] if self.segments else None
+        if seg is None or seg.free < n:
+            seg = self._alloc_segment(
+                batch.vectors, bucket_capacity(n, self.n_shards))
+        start = seg.n_docs
+        s32 = jnp.int32(start)
+        for k, v in batch.vectors.items():
+            seg.vectors[k] = _write_block(
+                seg.vectors[k], jnp.asarray(v).astype(seg.vectors[k].dtype),
+                s32)
+        seg.vectors["doc_valid"] = _write_block(
+            seg.vectors["doc_valid"], jnp.ones((n,), bool), s32)
+        ids = np.arange(self.next_id, self.next_id + n, dtype=np.int64)
+        seg.doc_ids[start:start + n] = ids
+        seg.n_docs = start + n
+        self.next_id += n
+        self._slot_ids = None
+        return ids
+
+    def delete(self, ids) -> int:
+        """Invalidate pages by stable id. Only flips ``doc_valid`` bits —
+        no data moves, no shapes change. Returns #pages deleted."""
+        ids = np.asarray(list(ids) if not isinstance(ids, np.ndarray)
+                         else ids, np.int64)
+        # search results use -1 as dead-slot filler; piping them back in
+        # must not match the -1 sentinel in doc_ids
+        ids = ids[ids >= 0]
+        deleted = 0
+        for seg in self.segments:
+            slots = np.flatnonzero(np.isin(seg.doc_ids, ids))
+            if slots.size == 0:
+                continue
+            width = bucket_capacity(slots.size, min_capacity=DELETE_BUCKET_MIN)
+            padded = np.full((width,), seg.capacity, np.int32)  # OOB sentinel
+            padded[:slots.size] = slots
+            seg.vectors["doc_valid"] = _invalidate(
+                seg.vectors["doc_valid"], jnp.asarray(padded))
+            seg.doc_ids[slots] = -1
+            deleted += int(slots.size)
+        if deleted:
+            self._slot_ids = None
+        return deleted
+
+    def compact(self):
+        """Rebuild the corpus from surviving rows into one right-sized
+        segment, preserving page ids and their relative order. Amortised
+        maintenance: the layout changes, so compiled search fns for the old
+        capacities no longer apply."""
+        if not self.segments:
+            return self
+        names = [k for k in self.segments[0].vectors if k != "doc_valid"]
+        like = {k: self.segments[0].vectors[k] for k in names}
+        rows = {k: [] for k in names}
+        ids = []
+        for seg in self.segments:
+            slots = np.flatnonzero(seg.doc_ids >= 0)
+            if slots.size == 0:
+                continue
+            idx = jnp.asarray(slots)
+            for k in names:
+                rows[k].append(jnp.take(seg.vectors[k], idx, axis=0))
+            ids.append(seg.doc_ids[slots])
+        total = int(sum(len(i) for i in ids))
+        cap = bucket_capacity(max(total, 1), self.n_shards)
+        self.segments = []
+        seg = self._alloc_segment(like, cap)
+        if total:
+            s32 = jnp.int32(0)
+            for k in names:
+                block = jnp.concatenate(rows[k], axis=0)
+                seg.vectors[k] = _write_block(
+                    seg.vectors[k], block.astype(seg.vectors[k].dtype), s32)
+            seg.vectors["doc_valid"] = _write_block(
+                seg.vectors["doc_valid"], jnp.ones((total,), bool), s32)
+            seg.doc_ids[:total] = np.concatenate(ids)
+        seg.n_docs = total
+        self._slot_ids = None
+        return self
+
+    # ------------------------------------------------------------------
+    # views
+    # ------------------------------------------------------------------
+
+    def stores(self) -> tuple:
+        """Per-segment vectors dicts, in slot order — the engine's input."""
+        return tuple(seg.vectors for seg in self.segments)
+
+    @property
+    def vectors(self) -> dict:
+        """Single-segment convenience view (the capacity-padded arrays,
+        ``doc_valid`` included). Multi-segment stores have no flat view —
+        use ``stores()``."""
+        if len(self.segments) != 1:
+            raise ValueError(
+                f"{len(self.segments)} segments have no flat vectors view; "
+                "use stores()")
+        return self.segments[0].vectors
+
+    @property
+    def capacities(self) -> tuple:
+        return tuple(seg.capacity for seg in self.segments)
+
+    @property
+    def n_valid(self) -> int:
+        return sum(seg.n_valid for seg in self.segments)
+
+    @property
+    def total_capacity(self) -> int:
+        return sum(self.capacities)
+
+    def layout_key(self) -> tuple:
+        """Everything a compiled search fn's shapes depend on — capacities
+        and per-name trailing dims/dtypes, NOT the fill level. Upserts into
+        existing padding and deletes leave this key unchanged (the
+        no-retrace contract); only new-segment allocation or compaction
+        changes it."""
+        return tuple(
+            (seg.capacity,
+             tuple(sorted((k, v.shape[1:], str(v.dtype))
+                          for k, v in seg.vectors.items())))
+            for seg in self.segments)
+
+    def slot_doc_ids(self) -> np.ndarray:
+        """Global slot -> stable page id (-1 = dead slot), concatenated in
+        segment order to match the engine's global slot id space. Cached:
+        rebuilt only after a mutation, not per search."""
+        if self._slot_ids is None:
+            if not self.segments:
+                self._slot_ids = np.zeros((0,), np.int64)
+            else:
+                self._slot_ids = np.concatenate(
+                    [seg.doc_ids for seg in self.segments])
+        return self._slot_ids
+
+    def dims(self) -> dict:
+        out = {}
+        for k, v in (self.segments[0].vectors if self.segments else {}).items():
+            if k == "doc_valid" or k.endswith("_mask") or k.endswith("_scale"):
+                continue
+            out[k] = v.shape[1] if v.ndim == 3 else 1
+        return out

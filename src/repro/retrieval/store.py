@@ -12,7 +12,8 @@ symmetric scales) halves corpus HBM bytes for the scan stage.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+import dataclasses
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
@@ -70,8 +71,7 @@ def build_store(cfg, page_embeds: jax.Array, token_types: jax.Array,
             store_dtype),
     }
     if experimental_smooth:
-        import dataclasses as _dc
-        cfg2 = _dc.replace(cfg, smooth=experimental_smooth)
+        cfg2 = dataclasses.replace(cfg, smooth=experimental_smooth)
         exp, exp_mask = PL.pool_pages(cfg2, vis, vis_mask,
                                       (jnp.full((N,), cfg.grid_h)
                                        if h_eff is None else h_eff))

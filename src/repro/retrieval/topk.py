@@ -22,14 +22,25 @@ def merge_topk(vals: jax.Array, ids: jax.Array, k: int) -> tuple:
 
 
 def allgather_topk(scores_local: jax.Array, k: int, axis_name,
-                   shard_index, n_local: int) -> tuple:
+                   shard_index, n_local: int,
+                   valid_local: jax.Array | None = None,
+                   seg_offset: int = 0) -> tuple:
     """Inside shard_map: per-shard top-k then all-gather + merge.
 
     scores_local [B, n_local]; returns identical (vals, global ids) [B, k]
     on every shard. Communication: S * B * k * 8 bytes (scores + ids), never
     the documents.
+
+    ``valid_local`` [n_local] bool masks dead/padding slots to NEG before the
+    local select (capacity-padded segmented stores: the tail of a ragged
+    shard and deleted documents must never win a top-k slot on merit).
+    ``seg_offset`` shifts the returned ids into the global slot space when
+    the scored array is one segment of a larger corpus.
     """
-    v, gi = local_topk_with_ids(scores_local, k, shard_index * n_local)
+    if valid_local is not None:
+        scores_local = jnp.where(valid_local[None, :], scores_local, NEG)
+    v, gi = local_topk_with_ids(scores_local, k,
+                                shard_index * n_local + seg_offset)
     av = jax.lax.all_gather(v, axis_name, axis=1, tiled=True)    # [B, S*k]
     ai = jax.lax.all_gather(gi, axis_name, axis=1, tiled=True)
     return merge_topk(av, ai, k)

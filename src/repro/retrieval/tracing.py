@@ -1,0 +1,25 @@
+"""Trace-count hook for the no-retrace contract.
+
+Every repro-owned jitted function on the serving mutation/search path calls
+``record_trace()`` from inside its traced body. The call is a Python side
+effect, so it fires exactly once per trace (never per execution): after
+compile warm-up, a steady-state upsert/delete/search sequence must leave the
+counter unchanged. Tests and ``benchmarks/run.py dynamic_corpus`` assert
+``trace_count()`` deltas == 0.
+"""
+from __future__ import annotations
+
+_TRACES = [0]
+
+
+def record_trace() -> None:
+    """Call from inside a traced function body (trace-time side effect)."""
+    _TRACES[0] += 1
+
+
+def trace_count() -> int:
+    return _TRACES[0]
+
+
+def reset_trace_count() -> None:
+    _TRACES[0] = 0
