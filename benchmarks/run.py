@@ -17,6 +17,11 @@ full result tables to stdout and benchmarks/results/paper_tables.json.
   dynamic_corpus       live mutable corpus: search QPS at 25/50/75/100%
                        segment fill, steady-state upsert/delete latency,
                        retrace count asserted == 0 (beyond-paper serving)
+  serving_tail_latency open-loop Poisson traffic of ragged single queries
+                       through the shape-bucketed micro-batching frontend:
+                       p50/p95/p99 latency, ragged QPS vs fixed-shape
+                       static QPS, query-shape retrace count asserted == 0
+                       (beyond-paper serving)
 """
 from __future__ import annotations
 
@@ -342,6 +347,74 @@ def dynamic_corpus(table: dict, quick: bool = False):
     table["dynamic_corpus"] = out
 
 
+def serving_tail_latency(table: dict, quick: bool = False):
+    """Ragged-traffic tail latency through the ServingFrontend: Poisson
+    arrivals of single queries with mixed token counts, shape-bucketed
+    padding + deadline micro-batching. Reports p50/p95/p99 latency and the
+    ragged-traffic QPS vs the fixed-shape static QPS on the same corpus;
+    asserts the steady-state query-shape retrace count is ZERO — a frontend
+    regression that reintroduces per-shape recompilation fails this bench,
+    and therefore CI, outright."""
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.core import multistage as MST
+    from repro.data.synthetic import make_benchmark
+    from repro.launch.serve import _make_ragged_requests
+    from repro.retrieval import tracing
+    from repro.retrieval.frontend import ServingFrontend, replay_open_loop
+    from repro.retrieval.retriever import Retriever
+    from repro.retrieval.store import build_store
+
+    cfg = get_config("colpali")
+    pages, queries, n_req, max_batch = \
+        ((16, 16, 16), (4, 4, 4), 48, 8) if quick else \
+        ((60, 50, 40), (10, 10, 10), 200, 16)
+    bench = make_benchmark(cfg, pages, queries, seed=12)
+    store = build_store(cfg, jnp.asarray(bench.pages),
+                        jnp.asarray(bench.token_types))
+    retriever = Retriever(store)
+    stages = MST.two_stage(24, 10)
+    q = jnp.asarray(bench.queries)
+    qm = jnp.asarray(bench.query_mask)
+
+    # fixed-shape static reference: one [B, Q] block, raw slot ids
+    fn = retriever.search_fn(stages)
+    dt = _t(fn, retriever.store.stores(), q, qm)
+    static_qps = len(q) / dt
+
+    fe = ServingFrontend(retriever, stages, max_batch=max_batch,
+                         max_q=bench.queries.shape[1], flush_ms=2.0)
+    n_warm = fe.warm()
+    rng = np.random.default_rng(21)
+    reqs = _make_ragged_requests(bench, n_req, rng)
+    rate = 0.8 * static_qps
+
+    warm_traces = tracing.trace_count()
+    served, wall = replay_open_loop(fe, reqs, rate, seed=22)
+    retraces = tracing.trace_count() - warm_traces
+
+    lat_ms = np.asarray([p.latency for p in served]) * 1e3
+    qps = len(served) / wall
+    p50, p95, p99 = (float(x) for x in
+                     np.percentile(lat_ms, (50, 95, 99)))
+    out = {"n_requests": n_req, "rate": rate, "buckets_warmed": n_warm,
+           "p50_ms": p50, "p95_ms": p95, "p99_ms": p99, "qps": qps,
+           "static_qps": static_qps, "qps_ratio": qps / static_qps,
+           "dispatches": fe.stats["dispatches"],
+           "rows_per_dispatch": fe.stats["rows_real"]
+           / fe.stats["dispatches"],
+           "retraces": retraces}
+    _emit("serving/p50", p50 / 1e3, f"p95={p95:.2f}ms;p99={p99:.2f}ms")
+    _emit("serving/qps", 1.0 / qps,
+          f"qps={qps:.1f};static={static_qps:.1f};"
+          f"ratio={qps/static_qps:.2f}")
+    _emit("serving/retrace", 0.0, f"count={retraces}")
+    assert retraces == 0, (
+        f"ragged traffic retraced {retraces} times after bucket warm-up — "
+        "the query-shape no-retrace contract is broken")
+    table["serving_tail_latency"] = out
+
+
 def main() -> None:
     import argparse
     ap = argparse.ArgumentParser()
@@ -355,6 +428,7 @@ def main() -> None:
         eq1_cost_model(table)
         kernel_vs_ref_scan(table, quick=True)
         dynamic_corpus(table, quick=True)
+        serving_tail_latency(table, quick=True)
         kernel_micro(table)
     else:
         table2_quality_qps(table)
@@ -365,6 +439,7 @@ def main() -> None:
         kernel_micro(table)
         kernel_vs_ref_scan(table)
         dynamic_corpus(table)
+        serving_tail_latency(table)
     name = "paper_tables_quick.json" if args.quick else "paper_tables.json"
     with open(os.path.join(RESULTS, name), "w") as f:
         json.dump(table, f, indent=1, default=float)

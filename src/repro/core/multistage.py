@@ -151,7 +151,7 @@ def search(store: dict, q: jax.Array, stages: tuple,
 
 
 def qps_cost_model(n_docs: int, q_tokens: int, dim: int, stages: tuple,
-                   store_dims: dict) -> int:
+                   store_dims: dict, vec_dims: dict | None = None) -> int:
     """Eq.-1 style multiply-add count for one query through a cascade.
 
     Counts MADDS, NOT BYTES: an int8 store halves the scan stage's HBM
@@ -161,11 +161,21 @@ def qps_cost_model(n_docs: int, q_tokens: int, dim: int, stages: tuple,
     term, making the "never bill more candidates than documents exist"
     invariant explicit even if a future stage type grows the candidate set
     (today ``min(stage.k, cand)`` alone already maintains it).
+
+    ``vec_dims`` maps vector name -> stored embedding dim. A Matryoshka
+    stage whose vectors are narrower than the query is scored against the
+    matching query PREFIX (``_score_stage``/``_dispatch_scan`` slice
+    ``q[..., :vec_dim]``), so it is billed at ``min(vec_dim, dim)`` — not
+    the full query ``dim``. Omitting ``vec_dims`` bills every stage at
+    ``dim`` (correct only for stores whose vectors all match the query
+    width; ``VectorStore.vec_dims()`` supplies the real widths).
     """
     total, cand = 0, n_docs
     for stage in stages:
         cand = min(cand, n_docs)
         d_vecs = store_dims[stage.vector]
-        total += q_tokens * d_vecs * cand * dim
+        stage_dim = dim if vec_dims is None else \
+            min(dim, vec_dims.get(stage.vector, dim))
+        total += q_tokens * d_vecs * cand * stage_dim
         cand = min(stage.k, cand)
     return total

@@ -19,6 +19,19 @@ Dynamic-corpus mode:
 starts from a capacity-padded corpus and measures steady-state live
 ingestion: upsert throughput (pages/s), search-after-upsert QPS, and the
 no-retrace contract (retrace count printed, expected 0 after warm-up).
+
+Streaming-traffic mode:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch colpali --pages 100 \
+      --traffic 200 --max-batch 16 --flush-ms 2
+
+replays an open-loop Poisson arrival process of single RAGGED queries
+(varying token counts) through the ``ServingFrontend``: shape-bucketed
+padding + deadline-based micro-batching. Prints p50/p95/p99 latency,
+ragged-traffic QPS vs the fixed-shape static QPS on the same corpus, and
+the steady-state query-shape retrace count (expected 0 after bucket
+warm-up). ``--arrival-rate 0`` (default) auto-sets the offered load to
+~0.8x the measured static QPS, keeping the system stable but busy.
 """
 from __future__ import annotations
 
@@ -54,6 +67,72 @@ def _run_static(args, cfg, bench, store, stages, int8_on):
           "  ".join(f"{k}={v:.3f}" for k, v in metrics.items()))
 
 
+def _make_ragged_requests(bench, n_req: int, rng, min_tokens: int = 3):
+    """Sample single-query requests with RAGGED token counts: each request
+    truncates a benchmark query to a random prefix of its valid tokens (a
+    short/long query mix, the shape mix real traffic has)."""
+    base_q = np.asarray(bench.queries)
+    base_m = np.asarray(bench.query_mask)
+    reqs = []
+    for _ in range(n_req):
+        j = int(rng.integers(len(base_q)))
+        q_len = int(base_m[j].sum())
+        keep = int(rng.integers(min(min_tokens, q_len), q_len + 1))
+        reqs.append((base_q[j, :keep], base_m[j, :keep]))
+    return reqs
+
+
+def _run_traffic(args, cfg, bench, store, stages, int8_on):
+    """Open-loop Poisson traffic of ragged single queries through the
+    shape-bucketed micro-batching frontend; tail latency + QPS report."""
+    import jax.numpy as jnp
+    from repro.retrieval import tracing
+    from repro.retrieval.frontend import ServingFrontend, replay_open_loop
+    from repro.retrieval.retriever import Retriever
+
+    retriever = Retriever(store, scan_chunk=args.chunk)
+    q = jnp.asarray(bench.queries)
+    qm = jnp.asarray(bench.query_mask)
+
+    # fixed-shape static reference on the same corpus (the _run_static
+    # protocol: one [B, Q] block, raw slot ids, timed after compile)
+    retriever.search(q, qm, stages=stages)
+    t0 = time.time()
+    for _ in range(3):
+        scores, _ = retriever.search(q, qm, stages=stages,
+                                     translate_ids=False)
+    scores.block_until_ready()
+    static_qps = len(q) / ((time.time() - t0) / 3)
+
+    fe = ServingFrontend(retriever, stages, max_batch=args.max_batch,
+                         max_q=bench.queries.shape[1],
+                         flush_ms=args.flush_ms,
+                         cache_size=args.result_cache)
+    n_warm = fe.warm()
+    rate = args.arrival_rate or 0.8 * static_qps
+    rng = np.random.default_rng(17)
+    reqs = _make_ragged_requests(bench, args.traffic, rng)
+
+    warm_traces = tracing.trace_count()
+    served, wall = replay_open_loop(fe, reqs, rate, seed=18)
+    retraces = tracing.trace_count() - warm_traces
+
+    lat_ms = np.asarray([p.latency for p in served]) * 1e3
+    qps = len(served) / wall
+    p50, p95, p99 = np.percentile(lat_ms, (50, 95, 99))
+    print(f"traffic [{args.traffic} ragged req, Poisson {rate:.0f}/s, "
+          f"buckets B<={fe.max_batch} Q<={fe.max_q} ({n_warm} warmed), "
+          f"flush {args.flush_ms:.1f}ms]:")
+    print(f"  p50={p50:.2f}ms  p95={p95:.2f}ms  p99={p99:.2f}ms  "
+          f"QPS={qps:.1f} (static fixed-shape QPS={static_qps:.1f}, "
+          f"ratio {qps/static_qps:.2f}x)")
+    print(f"  dispatches={fe.stats['dispatches']}  "
+          f"rows/dispatch={fe.stats['rows_real']/fe.stats['dispatches']:.1f}  "
+          f"padded rows={fe.stats['rows_padded']}  "
+          f"cache hits={fe.stats['cache_hits']}  "
+          f"steady-state retraces={retraces} (expect 0)")
+
+
 def _run_ingest(args, cfg, bench, store, stages, int8_on):
     """Steady-state live-corpus benchmark: upsert batches into preallocated
     segment headroom, search after every upsert, count retraces."""
@@ -83,7 +162,8 @@ def _run_ingest(args, cfg, bench, store, stages, int8_on):
         pages = base[sel] + 0.05 * rng.normal(size=base[sel].shape)
         batch = build_store(cfg, jnp.asarray(pages, jnp.float32), tt)
         if int8_on:
-            batch = quantize_store(batch, names=(stages[0].vector,))
+            batch = quantize_store(batch, names=(stages[0].vector,),
+                                   stages=stages)
         return batch
 
     # ---- warm-up: one upsert + delete + search compiles every executable
@@ -150,6 +230,22 @@ def main():
     ap.add_argument("--capacity", type=int, default=0,
                     help="preallocated corpus capacity (0 = bucketed "
                          "power-of-two over the expected total)")
+    ap.add_argument("--traffic", type=int, default=0,
+                    help="streaming-traffic mode: replay this many Poisson-"
+                         "arriving ragged single queries through the shape-"
+                         "bucketed micro-batching frontend and report "
+                         "p50/p95/p99 latency + QPS")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="offered load in req/s (0 = auto: ~0.8x the "
+                         "measured fixed-shape static QPS)")
+    ap.add_argument("--flush-ms", type=float, default=2.0,
+                    help="micro-batch deadline: flush when the oldest "
+                         "queued request has waited this long")
+    ap.add_argument("--max-batch", type=int, default=16,
+                    help="micro-batch row cap (= largest batch bucket; "
+                         "power of two)")
+    ap.add_argument("--result-cache", type=int, default=0,
+                    help="LRU result-cache entries (0 = off)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -172,14 +268,19 @@ def main():
         # (3-stage global_pooling) has nothing worth quantising
         scan_vec = stages[0].vector
         if store.vectors[scan_vec].ndim == 3:
-            store = quantize_store(store, names=(scan_vec,))
+            # stages-aware: drops the float copy when no later stage
+            # reranks with the scan vector, so int8 actually halves
+            # (not doubles) that vector's HBM
+            store = quantize_store(store, names=(scan_vec,), stages=stages)
             int8_on = True
         else:
             print(f"--int8: scan stage '{scan_vec}' is single-vector; "
                   "skipping quantisation")
     print(f"indexed {store.n_docs} pages in {time.time()-t0:.2f}s "
           f"(named vectors: {sorted(store.dims())})")
-    if args.ingest_batches > 0:
+    if args.traffic > 0:
+        _run_traffic(args, cfg, bench, store, stages, int8_on)
+    elif args.ingest_batches > 0:
         _run_ingest(args, cfg, bench, store, stages, int8_on)
     else:
         _run_static(args, cfg, bench, store, stages, int8_on)

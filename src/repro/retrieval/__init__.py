@@ -1,3 +1,4 @@
-from repro.retrieval import engine, segments, store, topk, tracing
+from repro.retrieval import engine, frontend, segments, store, topk, tracing
+from repro.retrieval.frontend import ServingFrontend
 from repro.retrieval.retriever import Retriever
 from repro.retrieval.segments import SegmentedStore, bucket_capacity

@@ -61,14 +61,14 @@ def _scan_arrays(store: dict, stage: Stage):
 
     int8 codes + per-vector scales are preferred when indexed — the scan
     stage is memory-bound, so streaming 1 byte/coord halves its roofline
-    term vs bf16."""
-    vecs = store[stage.vector]
+    term vs bf16. A quantised store may have DROPPED the float copy
+    entirely (``quantize_store(stages=...)``), so only fall back to the
+    float array when the codes are absent."""
     mask = store.get(stage.vector + "_mask")
-    scales = None
     if stage.vector + "_int8" in store:
-        vecs = store[stage.vector + "_int8"]
-        scales = store[stage.vector + "_scale"]
-    return vecs, mask, scales
+        return (store[stage.vector + "_int8"], mask,
+                store[stage.vector + "_scale"])
+    return store[stage.vector], mask, None
 
 
 def _dispatch_scan(stage: Stage, vecs, mask, q, q_mask, scales,

@@ -1,0 +1,373 @@
+"""Shape-bucketed streaming frontend: the query-side no-retrace contract.
+
+PR 2 made the CORPUS side of serving retrace-free (capacity-padded
+segments); this module does the same for the QUERY side. The compiled
+cascade's jit cache is keyed on the query's ``(B, Q)`` shape, and ColPali
+late-interaction traffic is ragged by construction — queries have varying
+token counts and arrive one at a time, not as fixed ``[B, Q, d]`` blocks.
+Hitting ``Retriever.search`` with raw traffic therefore recompiles the
+entire sharded cascade per new shape: a compile storm on the hot path.
+
+``ServingFrontend`` closes the gap with three layers:
+
+- **shape buckets** — requests are zero-padded into a static set of
+  power-of-two ``(B_bucket, Q_bucket)`` shapes (symmetric with the bucketed
+  segment capacities). Padded tokens are masked via ``q_mask`` — a masked
+  token contributes an exact ``+0.0`` to every MaxSim sum, so padding never
+  changes a ranking and scores match the exact-shape search to float ulp
+  (residual 1-ulp noise is XLA lowering the same contraction differently
+  per total shape, not the padding). Padded batch rows are dropped BEFORE
+  id translation. ``warm()`` traces each bucket's executable once; after
+  that, arbitrary traffic with ``B <= max_batch`` and ``Q <= max_q`` is
+  pure dispatch (``tracing.no_retrace`` holds).
+- **micro-batching** — an admission queue coalesces single/ragged requests
+  into one cascade dispatch per micro-batch. ``pump()`` flushes FIFO when
+  the queued rows fill ``max_batch`` or the oldest request has waited
+  ``flush_ms`` (deadline-based flush), so concurrent callers share an
+  executable launch instead of paying one each. Batch rows are independent
+  through every stage (row-wise einsum/top-k/gather), so micro-batched
+  results are bitwise those of per-request calls.
+- **result cache** (optional) — an LRU keyed on (stages, store
+  generation, query bytes, mask bytes) short-circuits repeated identical
+  queries without touching the device. The generation bumps on every
+  upsert/delete/compact, so a cached result can never outlive the corpus
+  it was computed against.
+
+Single-threaded by design: ``submit``/``pump`` are driven by the serving
+loop (see ``replay_open_loop`` and ``repro.launch.serve --traffic``), which
+keeps results deterministic and testable; nothing here blocks on a lock.
+"""
+from __future__ import annotations
+
+import time
+from collections import OrderedDict, deque
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def bucket_ladder(max_value: int, min_value: int = 1) -> tuple:
+    """Power-of-two ladder ``min_value.. >= max_value`` (both rounded up),
+    e.g. (1, 2, 4, 8, 16). The static bucket family per axis."""
+    if max_value < 1 or min_value < 1:
+        raise ValueError(f"ladder bounds must be >= 1, got "
+                         f"[{min_value}, {max_value}]")
+    hi = 1 << max(0, int(max_value - 1).bit_length())
+    lo = min(1 << max(0, int(min_value - 1).bit_length()), hi)
+    out, v = [], lo
+    while v <= hi:
+        out.append(v)
+        v <<= 1
+    return tuple(out)
+
+
+class PendingResult:
+    """Handle for a submitted request; filled in by the flush that serves
+    it. ``latency`` is seconds from admission to completed dispatch."""
+    __slots__ = ("scores", "ids", "t_submit", "t_done", "cached")
+
+    def __init__(self, t_submit: float):
+        self.scores = None
+        self.ids = None
+        self.t_submit = t_submit
+        self.t_done = None
+        self.cached = False
+
+    def done(self) -> bool:
+        return self.t_done is not None
+
+    @property
+    def latency(self) -> float:
+        if self.t_done is None:
+            raise ValueError("request not served yet — pump() the frontend")
+        return self.t_done - self.t_submit
+
+
+class ServingFrontend:
+    """Shape-bucketed, micro-batching serving frontend over a Retriever.
+
+    ``stages`` is fixed per frontend (one executable family); run several
+    frontends for several cascades — they share the retriever's corpus and
+    compiled-fn cache. Queries are normalized to float32 and bool masks so
+    dtype drift can never split the executable cache.
+    """
+
+    def __init__(self, retriever, stages: tuple, *, max_batch: int = 16,
+                 max_q: int = 32, min_q: int = 8, flush_ms: float = 2.0,
+                 cache_size: int = 0, clock=time.perf_counter):
+        self.retriever = retriever
+        self.stages = retriever._normalize(tuple(stages))
+        self.b_buckets = bucket_ladder(max_batch)
+        self.q_buckets = bucket_ladder(max_q, min_q)
+        self.max_batch = self.b_buckets[-1]
+        self.max_q = self.q_buckets[-1]
+        self.flush_s = flush_ms / 1e3
+        self.cache_size = cache_size
+        self.clock = clock
+        self._queue: deque = deque()         # (PendingResult, q, qm) triples
+        self._queued_rows = 0
+        self._cache: OrderedDict = OrderedDict()
+        self.stats = {"requests": 0, "dispatches": 0, "cache_hits": 0,
+                      "rows_real": 0, "rows_padded": 0}
+
+    # ------------------------------------------------------------------
+    # buckets
+    # ------------------------------------------------------------------
+
+    def bucket_for(self, b: int, q_len: int) -> tuple:
+        """Smallest ``(B_bucket, Q_bucket)`` covering a ``[b, q_len]``
+        request block; raises when the request exceeds the bucket maxima
+        (split oversized batches caller-side — the bucket set is static)."""
+        if not 1 <= b <= self.max_batch:
+            raise ValueError(f"batch rows {b} outside [1, {self.max_batch}]")
+        if not 1 <= q_len <= self.max_q:
+            raise ValueError(f"query tokens {q_len} outside [1, {self.max_q}]")
+        bb = next(x for x in self.b_buckets if x >= b)
+        qb = next(x for x in self.q_buckets if x >= q_len)
+        return bb, qb
+
+    def warm(self) -> int:
+        """Trace every ``(B_bucket, Q_bucket)`` executable once, off the
+        serving path. Returns the number of bucket shapes warmed; after
+        this, in-bounds traffic causes zero retraces. Warm-up dispatches
+        are excluded from ``stats`` — those report traffic only."""
+        d = self._query_dim()
+        snapshot = dict(self.stats)
+        n = 0
+        for bb in self.b_buckets:
+            for qb in self.q_buckets:
+                q = np.zeros((bb, qb, d), np.float32)
+                qm = np.ones((bb, qb), bool)
+                self._dispatch(q, qm, rows=bb)
+                n += 1
+        self.stats = snapshot
+        return n
+
+    def _query_dim(self) -> int:
+        """Query embedding dim = widest stored dim among the cascade's
+        vectors (Matryoshka stages slice the query DOWN to theirs)."""
+        vec_dims = self.retriever.store.vec_dims()
+        return max(vec_dims[s.vector] for s in self.stages)
+
+    # ------------------------------------------------------------------
+    # direct path (one request = one dispatch, still bucketed)
+    # ------------------------------------------------------------------
+
+    def search(self, q, q_mask=None) -> tuple:
+        """Serve one request now: pad to its bucket, dispatch, strip.
+        ``q`` is ``[q_len, d]`` (single query) or ``[b, q_len, d]``.
+        Returns host ``(scores [b, k], stable page ids [b, k])``."""
+        q, qm = self._admit(q, q_mask)
+        self.stats["requests"] += 1
+        hit = self._cache_get(q, qm)
+        if hit is not None:
+            return hit
+        scores, ids = self._run_block([(q, qm)])
+        self._cache_put(q, qm, (scores, ids))
+        return scores, ids
+
+    # ------------------------------------------------------------------
+    # micro-batching path
+    # ------------------------------------------------------------------
+
+    def submit(self, q, q_mask=None, t_submit: float | None = None) -> \
+            PendingResult:
+        """Queue one request for the next micro-batch. Returns a
+        ``PendingResult`` filled in by a later ``pump``/``flush``
+        (immediately, on a result-cache hit).
+
+        ``t_submit`` is the request's TRUE arrival time on this frontend's
+        clock (default: now). Replay loops must pass the scheduled arrival
+        time, not the admission time — otherwise queueing delay accrued
+        while the loop was blocked inside a dispatch is silently excluded
+        from the measured latency (coordinated omission)."""
+        q, qm = self._admit(q, q_mask)
+        self.stats["requests"] += 1
+        pr = PendingResult(self.clock() if t_submit is None else t_submit)
+        hit = self._cache_get(q, qm)
+        if hit is not None:
+            pr.scores, pr.ids = hit
+            pr.t_done = self.clock()
+            pr.cached = True
+            return pr
+        self._queue.append((pr, q, qm))
+        self._queued_rows += q.shape[0]
+        return pr
+
+    @property
+    def pending(self) -> int:
+        """Queued (unserved) requests."""
+        return len(self._queue)
+
+    def next_deadline(self) -> float | None:
+        """Absolute clock time the oldest queued request must flush by."""
+        if not self._queue:
+            return None
+        return self._queue[0][0].t_submit + self.flush_s
+
+    def pump(self, now: float | None = None) -> int:
+        """Flush micro-batches whose trigger has fired: queued rows fill
+        ``max_batch``, or the oldest request's deadline passed. The serving
+        loop calls this between admissions. Returns requests completed."""
+        done = 0
+        while self._queue:
+            now = self.clock() if now is None else now
+            full = self._queued_rows >= self.max_batch
+            due = now >= self._queue[0][0].t_submit + self.flush_s
+            if not (full or due):
+                break
+            done += self.flush()
+            now = None                       # re-read the clock per batch
+        return done
+
+    def flush(self) -> int:
+        """Serve ONE micro-batch now: pop FIFO requests up to ``max_batch``
+        rows, dispatch once, scatter results. Returns requests served."""
+        if not self._queue:
+            return 0
+        take = []
+        rows = 0
+        while self._queue and rows + self._queue[0][1].shape[0] \
+                <= self.max_batch:
+            item = self._queue.popleft()
+            take.append(item)
+            rows += item[1].shape[0]
+        scores, ids = self._run_block([(q, qm) for _, q, qm in take])
+        r0 = 0
+        t_done = self.clock()
+        for pr, q, qm in take:
+            b = q.shape[0]
+            pr.scores, pr.ids = scores[r0:r0 + b], ids[r0:r0 + b]
+            pr.t_done = t_done
+            self._cache_put(q, qm, (pr.scores, pr.ids))
+            r0 += b
+        self._queued_rows -= rows
+        return len(take)
+
+    def drain(self) -> int:
+        """Flush until the queue is empty. Returns requests served."""
+        done = 0
+        while self._queue:
+            done += self.flush()
+        return done
+
+    # ------------------------------------------------------------------
+    # internals
+    # ------------------------------------------------------------------
+
+    def _admit(self, q, q_mask) -> tuple:
+        """Normalize a request to (float32 [b, q_len, d], bool [b, q_len])
+        and bounds-check it against the bucket maxima."""
+        q = np.asarray(q, np.float32)
+        if q.ndim == 2:
+            q = q[None]
+        if q.ndim != 3:
+            raise ValueError(f"query must be [q_len, d] or [b, q_len, d], "
+                             f"got shape {q.shape}")
+        b, q_len, _ = q.shape
+        if q_mask is None:
+            qm = np.ones((b, q_len), bool)
+        else:
+            qm = np.asarray(q_mask, bool).reshape(b, q_len)
+        self.bucket_for(b, q_len)            # bounds check only
+        return q, qm
+
+    def _run_block(self, reqs: list) -> tuple:
+        """Pad a list of admitted requests into one bucket block and
+        dispatch it. Returns host (scores [rows, k], page ids [rows, k])."""
+        rows = sum(q.shape[0] for q, _ in reqs)
+        q_len = max(q.shape[1] for q, _ in reqs)
+        d = reqs[0][0].shape[2]
+        bb, qb = self.bucket_for(rows, q_len)
+        qp = np.zeros((bb, qb, d), np.float32)
+        qmp = np.zeros((bb, qb), bool)
+        r0 = 0
+        for q, qm in reqs:
+            b, ql, _ = q.shape
+            qp[r0:r0 + b, :ql] = q
+            qmp[r0:r0 + b, :ql] = qm
+            r0 += b
+        return self._dispatch(qp, qmp, rows=rows)
+
+    def _dispatch(self, qp: np.ndarray, qmp: np.ndarray, rows: int) -> tuple:
+        """One cascade launch on a padded bucket block. Padded batch rows
+        are dropped BEFORE id translation (their scores rank dead/zero
+        content; translating them would be wasted host work)."""
+        self.stats["dispatches"] += 1
+        self.stats["rows_real"] += rows
+        self.stats["rows_padded"] += qp.shape[0] - rows
+        scores, slots = self.retriever.search(
+            jnp.asarray(qp), jnp.asarray(qmp), stages=self.stages,
+            translate_ids=False)
+        scores = np.asarray(scores)[:rows]
+        slots = np.asarray(slots)[:rows]
+        table = self.retriever.store.slot_doc_ids()
+        return scores, table[slots]
+
+    def _cache_key(self, q: np.ndarray, qm: np.ndarray):
+        # the store generation invalidates every entry on corpus mutation
+        # (upsert/delete/compact) — a cached result must never outlive the
+        # corpus it was computed against
+        return (self.stages, self.retriever.store.generation,
+                q.shape, q.tobytes(), qm.tobytes())
+
+    def _cache_get(self, q, qm):
+        if not self.cache_size:
+            return None
+        key = self._cache_key(q, qm)
+        hit = self._cache.get(key)
+        if hit is not None:
+            self._cache.move_to_end(key)
+            self.stats["cache_hits"] += 1
+        return hit
+
+    def _cache_put(self, q, qm, result) -> None:
+        if not self.cache_size:
+            return
+        key = self._cache_key(q, qm)
+        self._cache[key] = result
+        self._cache.move_to_end(key)
+        while len(self._cache) > self.cache_size:
+            self._cache.popitem(last=False)
+
+
+def replay_open_loop(frontend: ServingFrontend, requests: list,
+                     rate: float, seed: int = 0) -> tuple:
+    """Drive an open-loop Poisson arrival process through the frontend in
+    real time: exponential inter-arrival gaps at ``rate`` req/s, admissions
+    via ``submit``, flushes via ``pump`` (deadline- or fill-triggered).
+
+    ``requests`` is a list of ``(q, q_mask)`` pairs. Returns
+    ``(pending: list[PendingResult], wall_seconds)`` — all served, each
+    carrying its own arrival-to-completion latency. Latency is measured
+    from the SCHEDULED Poisson arrival time, not the admission call: a
+    request that fell due while the loop was blocked inside a dispatch is
+    billed for that wait too (no coordinated omission — tail percentiles
+    stay honest under load).
+    """
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=len(requests)))
+    clock = frontend.clock
+    out = []
+    i, n = 0, len(requests)
+    t0 = clock()
+    while i < n or frontend.pending:
+        now = clock() - t0
+        while i < n and arrivals[i] <= now:
+            q, qm = requests[i]
+            out.append(frontend.submit(q, qm, t_submit=t0 + arrivals[i]))
+            i += 1
+        if frontend.pump():
+            continue
+        # idle: sleep to the next event (arrival or oldest flush deadline)
+        waits = []
+        if i < n:
+            waits.append(t0 + arrivals[i] - clock())
+        deadline = frontend.next_deadline()
+        if deadline is not None:
+            waits.append(deadline - clock())
+        if waits:
+            wait = min(waits)
+            if wait > 0:
+                time.sleep(min(wait, 0.005))
+    return out, clock() - t0

@@ -4,11 +4,26 @@
 use. It wraps the mesh-sharded engine (``repro.retrieval.engine``) over a
 SEGMENTED, capacity-padded corpus (``repro.retrieval.segments``) and caches
 the jitted search callable per ``(stages, segment capacities, mesh)`` —
-NOT per exact corpus content or fill level. That key is the no-retrace
-contract: ``upsert`` writes into preallocated padding and ``delete`` flips
-validity bits, so steady-state mutation + search re-dispatches cached
-executables (assert with ``Retriever.trace_count()`` deltas). Only a
-new-segment allocation or ``compact()`` changes the layout key.
+NOT per exact corpus content or fill level.
+
+The no-retrace contract spans BOTH serving axes:
+
+- **corpus mutation** — ``upsert`` writes into preallocated padding and
+  ``delete`` flips validity bits, so steady-state mutation + search
+  re-dispatches cached executables. Only a new-segment allocation or
+  ``compact()`` changes the layout key.
+- **query traffic** — the compiled fn's jit cache is still keyed on the
+  query's ``(B, Q)`` shape, so RAGGED traffic hitting ``search`` directly
+  retraces per new shape. The query-side half of the contract lives in
+  ``repro.retrieval.frontend.ServingFrontend`` (``Retriever.frontend``):
+  it pads requests into a static power-of-two bucket set (symmetric with
+  the bucketed segment capacities), warms each bucket once, and after that
+  arbitrary traffic with ``B``/``Q`` under the bucket maxima is pure
+  dispatch.
+
+Either way, assert with ``Retriever.trace_count()`` deltas — every serving
+jit body calls ``tracing.record_trace()``, so corpus-shape AND query-shape
+retraces are both counted.
 
     store = build_store(cfg, pages, token_types)
     r = Retriever(store, mesh=None, scan_chunk=4096,
@@ -94,6 +109,13 @@ class Retriever:
         """Traces of repro-owned serving jits so far (see tracing module)."""
         return tracing.trace_count()
 
+    def frontend(self, stages: tuple, **kwargs):
+        """A ``ServingFrontend`` over this retriever: shape-bucketed query
+        padding, micro-batching, optional result cache. See
+        ``repro.retrieval.frontend`` for the knobs."""
+        from repro.retrieval.frontend import ServingFrontend
+        return ServingFrontend(self, stages, **kwargs)
+
     # ------------------------------------------------------------------
     # search
     # ------------------------------------------------------------------
@@ -125,9 +147,17 @@ class Retriever:
         ids are stable page ids (np.int64; -1 marks dead-slot filler when k
         exceeds the live corpus); pass translate_ids=False for raw device
         slot ids."""
-        if q_mask is None and self.mesh is not None:
-            # shard_map path expects a concrete mask array
+        # ALWAYS normalize to a concrete bool mask: the shard_map path
+        # requires an array, and on the local path alternating None/array
+        # (or bool/float-mask) callers would split the executable cache and
+        # double-trace the same logical query shape. A ones mask is bitwise
+        # the no-mask math, so this costs nothing.
+        if q_mask is None:
             q_mask = jnp.ones(q.shape[:2], bool)
+        else:
+            q_mask = jnp.asarray(q_mask)
+            if q_mask.dtype != jnp.bool_:
+                q_mask = q_mask.astype(bool)
         scores, slots = self.search_fn(stages)(self.store.stores(), q,
                                                q_mask)
         if not translate_ids:

@@ -34,7 +34,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.retrieval.store import VectorStore
+from repro.retrieval.store import VectorStore, base_vectors
 from repro.retrieval.tracing import record_trace
 
 SEGMENT_MIN_CAPACITY = 64
@@ -106,6 +106,9 @@ class SegmentedStore:
         self.next_id = next_id
         self.mesh = mesh
         self._slot_ids: np.ndarray | None = None   # slot->page-id cache
+        # bumped on every content mutation (upsert/delete/compact) so
+        # result caches keyed on it can never serve pre-mutation answers
+        self.generation = 0
 
     # ------------------------------------------------------------------
     # construction
@@ -201,6 +204,7 @@ class SegmentedStore:
         seg.n_docs = start + n
         self.next_id += n
         self._slot_ids = None
+        self.generation += 1
         return ids
 
     def delete(self, ids) -> int:
@@ -225,6 +229,7 @@ class SegmentedStore:
             deleted += int(slots.size)
         if deleted:
             self._slot_ids = None
+            self.generation += 1
         return deleted
 
     def compact(self):
@@ -261,6 +266,7 @@ class SegmentedStore:
             seg.doc_ids[:total] = np.concatenate(ids)
         seg.n_docs = total
         self._slot_ids = None
+        self.generation += 1
         return self
 
     # ------------------------------------------------------------------
@@ -319,9 +325,12 @@ class SegmentedStore:
         return self._slot_ids
 
     def dims(self) -> dict:
-        out = {}
-        for k, v in (self.segments[0].vectors if self.segments else {}).items():
-            if k == "doc_valid" or k.endswith("_mask") or k.endswith("_scale"):
-                continue
-            out[k] = v.shape[1] if v.ndim == 3 else 1
-        return out
+        vecs = self.segments[0].vectors if self.segments else {}
+        return {k: (v.shape[1] if v.ndim == 3 else 1)
+                for k, v in base_vectors(vecs).items()}
+
+    def vec_dims(self) -> dict:
+        """Stored embedding dim per named vector (``VectorStore.vec_dims``
+        twin, so ``qps_cost_model`` works from a live corpus too)."""
+        vecs = self.segments[0].vectors if self.segments else {}
+        return {k: v.shape[-1] for k, v in base_vectors(vecs).items()}

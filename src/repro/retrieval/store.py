@@ -24,6 +24,24 @@ from repro.core.pooling import global_pool
 from repro.kernels.maxsim.ops import quantize_int8
 
 
+def base_vectors(vectors: dict) -> dict:
+    """Collapse a raw vectors dict to {base name: representative array}:
+    skips ``_mask``/``_scale``/``doc_valid`` companions and folds int8
+    codes onto the name they quantise (the float copy wins when both
+    exist). The ONE place that knows the store's key-suffix schema —
+    ``dims``/``vec_dims`` here, ``SegmentedStore.dims`` and the serving
+    frontend's query-dim inference all go through it."""
+    out: dict = {}
+    for k, v in vectors.items():
+        if k == "doc_valid" or k.endswith("_mask") or k.endswith("_scale"):
+            continue
+        if k.endswith("_int8"):
+            out.setdefault(k[:-len("_int8")], v)
+        else:
+            out[k] = v                       # float copy wins over codes
+    return out
+
+
 @dataclass
 class VectorStore:
     vectors: dict
@@ -31,12 +49,13 @@ class VectorStore:
     store_dtype: str = "bfloat16"
 
     def dims(self) -> dict:
-        out = {}
-        for k, v in self.vectors.items():
-            if k.endswith("_mask") or k.endswith("_scale"):
-                continue
-            out[k] = v.shape[1] if v.ndim == 3 else 1
-        return out
+        return {k: (v.shape[1] if v.ndim == 3 else 1)
+                for k, v in base_vectors(self.vectors).items()}
+
+    def vec_dims(self) -> dict:
+        """Stored embedding dim per named vector (int8 codes report the
+        name they quantise) — the per-stage dims ``qps_cost_model`` bills."""
+        return {k: v.shape[-1] for k, v in base_vectors(self.vectors).items()}
 
 
 def build_store(cfg, page_embeds: jax.Array, token_types: jax.Array,
@@ -80,12 +99,25 @@ def build_store(cfg, page_embeds: jax.Array, token_types: jax.Array,
     return VectorStore(vectors, N, jnp.dtype(store_dtype).name)
 
 
-def quantize_store(store: VectorStore, names=("initial",)) -> VectorStore:
+def quantize_store(store: VectorStore, names=("initial",),
+                   stages: tuple | None = None) -> VectorStore:
     """Add int8 codes + scales for the given named vectors (beyond-paper:
-    halves scan-stage HBM bytes; composable with pooling per paper §7(iii))."""
+    halves scan-stage HBM bytes; composable with pooling per paper §7(iii)).
+
+    The serving scan always prefers the int8 codes once they exist
+    (``engine._scan_arrays``), which makes the float copy DEAD WEIGHT unless
+    something else still reads it. Pass the cascade as ``stages`` to drop
+    the float copy of every quantised name that no later (rerank) stage
+    scores — that is what actually halves (rather than doubles) the
+    vector's HBM. The default ``stages=None`` keeps the float copy, for the
+    ref-oracle path (``multistage.search`` scores float arrays) and for
+    stores shared across cascades."""
     vecs = dict(store.vectors)
+    rerank_names = {s.vector for s in (stages or ())[1:]}
     for name in names:
         codes, scales = quantize_int8(vecs[name].astype(jnp.float32))
         vecs[name + "_int8"] = codes
         vecs[name + "_scale"] = scales
+        if stages is not None and name not in rerank_names:
+            del vecs[name]                   # dead float copy: scan reads
     return VectorStore(vecs, store.n_docs, store.store_dtype)

@@ -2,12 +2,26 @@
 
 Every repro-owned jitted function on the serving mutation/search path calls
 ``record_trace()`` from inside its traced body. The call is a Python side
-effect, so it fires exactly once per trace (never per execution): after
-compile warm-up, a steady-state upsert/delete/search sequence must leave the
-counter unchanged. Tests and ``benchmarks/run.py dynamic_corpus`` assert
-``trace_count()`` deltas == 0.
+effect, so it fires exactly once per trace (never per execution) — and a
+jit retraces per DISTINCT ARGUMENT SHAPE, so the counter covers BOTH halves
+of the contract:
+
+- **corpus-shape retraces** — a mutation that changes segment layout
+  (new-segment allocation, ``compact()``) forces a retrace; steady-state
+  upsert/delete into preallocated padding must not.
+- **query-shape retraces** — a search with a new ``(B, Q)`` query shape
+  forces a retrace of the same cascade body; bucketed traffic through
+  ``repro.retrieval.frontend.ServingFrontend`` must not (after each
+  bucket's one warm-up trace).
+
+After warm-up, a steady-state upsert/delete/search/traffic sequence must
+leave the counter unchanged. Tests, ``benchmarks/run.py dynamic_corpus``
+and ``benchmarks/run.py serving_tail_latency`` assert ``trace_count()``
+deltas == 0 (the latter fails CI on a nonzero steady-state count).
 """
 from __future__ import annotations
+
+from contextlib import contextmanager
 
 _TRACES = [0]
 
@@ -23,3 +37,22 @@ def trace_count() -> int:
 
 def reset_trace_count() -> None:
     _TRACES[0] = 0
+
+
+@contextmanager
+def no_retrace(what: str = "steady state"):
+    """Assert that zero serving jits are traced inside the block.
+
+    The acceptance-test idiom for the no-retrace contract::
+
+        frontend.warm()
+        with tracing.no_retrace("ragged traffic"):
+            for q, qm in traffic:
+                frontend.search(q, qm)
+    """
+    before = _TRACES[0]
+    yield
+    delta = _TRACES[0] - before
+    assert delta == 0, (
+        f"{what}: {delta} retrace(s) of serving jits — the no-retrace "
+        "contract is broken")

@@ -124,6 +124,27 @@ def test_multistage_cost_model():
     assert c1 / c2 > 10          # paper: large multiplicative saving
 
 
+def test_cost_model_bills_matryoshka_stage_at_its_own_dim():
+    """Regression: a Matryoshka stage whose vectors are narrower than the
+    query is scored against the matching query PREFIX (``_score_stage``
+    slices ``q[..., :vec_dim]``), so it must be billed at its own vector
+    dim — not the full query dim."""
+    stages = multistage.two_stage(100, 10)
+    dims = {"initial": 16, "mean_pooling": 16}
+    vec_dims = {"initial": 128, "mean_pooling": 64}   # pooled stage is MRL-64
+    c = multistage.qps_cost_model(1000, 10, 128, stages, dims, vec_dims)
+    expected = (10 * 16 * 1000 * 64        # scan: pooled vectors at dim 64
+                + 10 * 16 * 100 * 128)     # rerank: full vectors at dim 128
+    assert c == expected
+    # the old behaviour (bill everything at the query dim) overcounted
+    assert multistage.qps_cost_model(1000, 10, 128, stages, dims) > c
+    # a vec dim WIDER than the query can't be billed above the query dim
+    # (queries are never padded up; the scorer contracts over min(d, d_q))
+    wide = multistage.qps_cost_model(
+        1000, 10, 128, stages, dims, {"initial": 256, "mean_pooling": 128})
+    assert wide == multistage.qps_cost_model(1000, 10, 128, stages, dims)
+
+
 @pytest.mark.parametrize("arch", ["colpali", "colsmol", "colqwen"])
 def test_pool_page_shapes(rng, arch):
     cfg = get_config(arch)

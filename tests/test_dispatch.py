@@ -104,6 +104,34 @@ def test_int8_prefetch_stage(bench):
     assert overlap > 0.9
 
 
+def test_quantize_store_drops_dead_float_copy(bench):
+    """Regression: the scan always prefers int8 codes once indexed, so
+    when no later stage reranks with the quantised name the float copy is
+    dead HBM — quantize_store(stages=...) must drop it, and search must
+    behave identically without it (same candidates, same rerank scores)."""
+    store, q, qm, _, _ = bench
+    kept = quantize_store(store, names=("mean_pooling",))
+    dropped = quantize_store(store, names=("mean_pooling",), stages=BASE)
+    # BASE reranks with "initial" only -> mean_pooling float copy is dead
+    assert "mean_pooling" in kept.vectors
+    assert "mean_pooling" not in dropped.vectors
+    assert "mean_pooling_mask" in dropped.vectors        # scan still masks
+    # a name a later stage DOES rerank with keeps its float copy
+    both = quantize_store(store, names=("mean_pooling", "initial"),
+                          stages=BASE)
+    assert "initial" in both.vectors
+    assert "mean_pooling" not in both.vectors
+    # dims()/vec_dims() report the quantised name from its codes
+    assert dropped.dims()["mean_pooling"] == kept.dims()["mean_pooling"]
+    assert dropped.vec_dims()["mean_pooling"] == \
+        store.vectors["mean_pooling"].shape[-1]
+    # identical search results: both stores scan the SAME int8 codes
+    s0, i0 = Retriever(kept).search(q, qm, stages=BASE)
+    s1, i1 = Retriever(dropped).search(q, qm, stages=BASE)
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+
+
 def test_single_vector_scan_ignores_kernel_flag(bench):
     """3-stage: the scan stage is global_pooling (one GEMM); the kernel
     flag must be a no-op, not a crash, and match the oracle ranking."""

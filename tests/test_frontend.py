@@ -1,0 +1,274 @@
+"""Shape-bucketed streaming frontend: the query-side no-retrace contract.
+
+Contracts under test (ISSUE 3 tentpole):
+
+- after ``warm()`` traces the static bucket set once, ragged traffic with
+  arbitrary ``B <= max_batch`` and ``Q <= max_q`` causes ZERO retraces of
+  any serving jit (query-shape acceptance test), while the same traffic
+  through the raw ``Retriever`` retraces per shape (the bug being fixed);
+- padding a ragged query to its bucket with ``q_mask`` is BITWISE the
+  exact-shape search (masked tokens contribute an exact +0.0);
+- padded batch rows are dropped before id translation;
+- micro-batched results are bitwise the per-request results, FIFO order
+  preserved, deadline/fill flush triggers fire;
+- the LRU result cache short-circuits repeated queries and evicts;
+- ``Retriever.search`` normalizes ``q_mask=None`` to a concrete mask, so
+  alternating None/array callers share one executable (satellite bugfix);
+- chunked int8 ``maxsim_scores_chunked`` parity at a non-chunk-divisible N.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import multistage as MST
+from repro.retrieval import tracing
+from repro.retrieval.frontend import (PendingResult, ServingFrontend,
+                                      bucket_ladder)
+from repro.retrieval.retriever import Retriever
+from repro.retrieval.store import VectorStore
+
+D, DP, DIM = 4, 2, 8
+STAGES = MST.two_stage(8, 4)
+
+
+def _batch(n: int, seed: int) -> VectorStore:
+    r = np.random.default_rng(seed)
+
+    def unit(*s):
+        x = r.normal(size=s).astype(np.float32)
+        return x / np.maximum(np.linalg.norm(x, axis=-1, keepdims=True), 1e-9)
+
+    ini = unit(n, D, DIM)
+    return VectorStore({
+        "initial": jnp.asarray(ini),
+        "initial_mask": jnp.ones((n, D), bool),
+        "mean_pooling": jnp.asarray(ini[:, :DP]),
+        "mean_pooling_mask": jnp.ones((n, DP), bool),
+        "global_pooling": jnp.asarray(ini.mean(1)),
+    }, n, "float32")
+
+
+@pytest.fixture()
+def frontend():
+    r = Retriever(_batch(24, 0))
+    return ServingFrontend(r, STAGES, max_batch=4, max_q=8, min_q=2,
+                           flush_ms=1.0)
+
+
+def _ragged(rng, b=None, q_hi=8):
+    b = b or int(rng.integers(1, 5))
+    ql = int(rng.integers(1, q_hi + 1))
+    return rng.normal(size=(b, ql, DIM)).astype(np.float32)
+
+
+def test_bucket_ladder():
+    assert bucket_ladder(16) == (1, 2, 4, 8, 16)
+    assert bucket_ladder(20, 5) == (8, 16, 32)      # both ends round up
+    assert bucket_ladder(1) == (1,)
+    with pytest.raises(ValueError):
+        bucket_ladder(0)
+
+
+def test_bucket_for_bounds(frontend):
+    assert frontend.bucket_for(3, 5) == (4, 8)
+    assert frontend.bucket_for(1, 1) == (1, 2)      # min_q floor
+    assert frontend.bucket_for(4, 8) == (4, 8)
+    for b, q in ((5, 4), (1, 9), (0, 4)):
+        with pytest.raises(ValueError):
+            frontend.bucket_for(b, q)
+
+
+def test_query_shape_zero_retrace_acceptance(frontend):
+    """THE acceptance test: warm the bucket set, then arbitrary in-bounds
+    ragged traffic — mixed batch sizes AND token counts, direct and
+    micro-batched — reports a trace_count() delta of 0."""
+    warmed = frontend.warm()
+    assert warmed == len(frontend.b_buckets) * len(frontend.q_buckets)
+    rng = np.random.default_rng(1)
+    with tracing.no_retrace("ragged traffic"):
+        for _ in range(25):
+            frontend.search(_ragged(rng))
+        pending = [frontend.submit(_ragged(rng, b=1)) for _ in range(9)]
+        frontend.drain()
+    assert all(p.done() for p in pending)
+
+
+def test_raw_retriever_retraces_per_shape():
+    """Contrast (the bug this PR fixes): the same ragged traffic on the
+    raw Retriever retraces per new (B, Q) shape."""
+    r = Retriever(_batch(24, 0))
+    rng = np.random.default_rng(2)
+    r.search(jnp.asarray(_ragged(rng)), stages=STAGES)
+    before = tracing.trace_count()
+    for b, ql in ((1, 3), (2, 5), (3, 7)):
+        q = rng.normal(size=(b, ql, DIM)).astype(np.float32)
+        r.search(jnp.asarray(q), stages=STAGES)
+    assert tracing.trace_count() - before == 3
+
+
+def test_padded_vs_exact_score_parity(frontend):
+    """A ragged query padded to its bucket matches the exact-shape search:
+    identical ranking, scores equal to float ulp. (Masked padding tokens
+    contribute an exact +0.0 to every MaxSim sum; the residual ulp noise is
+    XLA lowering the SAME contraction differently per total shape, not the
+    padding — so ids must be exactly equal, scores allclose at ~1e-7.)"""
+    rng = np.random.default_rng(3)
+    for _ in range(5):
+        q = _ragged(rng)
+        s_f, i_f = frontend.search(q)
+        s_e, i_e = frontend.retriever.search(jnp.asarray(q), stages=STAGES)
+        np.testing.assert_array_equal(i_f, np.asarray(i_e))
+        np.testing.assert_allclose(s_f, np.asarray(s_e),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_padded_batch_rows_dropped(frontend):
+    """Results carry exactly the request's rows — bucket-padding rows never
+    leak into (or get billed for) id translation."""
+    rng = np.random.default_rng(4)
+    q = _ragged(rng, b=3)                           # bucket pads to B=4
+    s, i = frontend.search(q)
+    assert s.shape[0] == 3 and i.shape[0] == 3
+    assert (i >= 0).all()                           # all real live pages
+
+
+def test_micro_batch_bitwise_equals_per_request(frontend):
+    """Coalesced micro-batches return exactly what per-request dispatches
+    would — shared executable launches are semantically invisible."""
+    frontend.warm()
+    rng = np.random.default_rng(5)
+    reqs = [_ragged(rng, b=1) for _ in range(7)] + [_ragged(rng, b=2)]
+    d0 = frontend.stats["dispatches"]
+    pending = [frontend.submit(q) for q in reqs]
+    frontend.drain()
+    # micro-batching actually happened: fewer dispatches than requests
+    assert frontend.stats["dispatches"] - d0 < len(reqs)
+    for q, pr in zip(reqs, pending):
+        s1, i1 = frontend.search(q)
+        np.testing.assert_array_equal(pr.scores, s1)
+        np.testing.assert_array_equal(pr.ids, i1)
+
+
+def test_flush_triggers():
+    """pump() flushes on fill (queued rows reach max_batch) immediately,
+    on deadline only after flush_ms, otherwise never."""
+    t = [0.0]
+    fe = ServingFrontend(Retriever(_batch(16, 0)), STAGES, max_batch=4,
+                         max_q=4, min_q=4, flush_ms=5.0, clock=lambda: t[0])
+    rng = np.random.default_rng(6)
+    one = lambda: fe.submit(rng.normal(size=(1, 4, DIM)).astype(np.float32))
+    one()
+    assert fe.pump() == 0 and fe.pending == 1       # neither trigger fired
+    t[0] += 0.006                                   # past the 5ms deadline
+    assert fe.pump() == 1 and fe.pending == 0
+    prs = [one() for _ in range(4)]                 # fills max_batch=4 rows
+    assert fe.pump() == 4 and all(p.done() for p in prs)
+    assert fe.next_deadline() is None
+
+
+def test_result_cache_lru():
+    fe = ServingFrontend(Retriever(_batch(16, 0)), STAGES, max_batch=2,
+                         max_q=4, min_q=4, cache_size=2)
+    rng = np.random.default_rng(7)
+    qs = [rng.normal(size=(1, 4, DIM)).astype(np.float32) for _ in range(3)]
+    s0, i0 = fe.search(qs[0])
+    d0 = fe.stats["dispatches"]
+    s0b, i0b = fe.search(qs[0])                     # hit: no new dispatch
+    assert fe.stats["dispatches"] == d0 and fe.stats["cache_hits"] == 1
+    np.testing.assert_array_equal(s0, s0b)
+    np.testing.assert_array_equal(i0, i0b)
+    pr = fe.submit(qs[0])                           # hit on the queue path
+    assert pr.done() and pr.cached and fe.pending == 0
+    np.testing.assert_array_equal(pr.scores, s0)
+    fe.search(qs[1])
+    fe.search(qs[2])                                # evicts qs[0] (LRU, 2)
+    fe.search(qs[0])
+    assert fe.stats["cache_hits"] == 2              # miss after eviction
+
+
+def test_result_cache_invalidated_on_corpus_mutation():
+    """A cached result must never outlive the corpus it was computed
+    against: upsert/delete/compact bump the store generation, which is
+    part of the cache key."""
+    r = Retriever(_batch(12, 0), capacity=64)
+    fe = ServingFrontend(r, STAGES, max_batch=2, max_q=4, min_q=4,
+                         cache_size=8)
+    rng = np.random.default_rng(10)
+    q = rng.normal(size=(1, 4, DIM)).astype(np.float32)
+    s0, i0 = fe.search(q)
+    r.delete([int(i0[0, 0])])                       # kill the top hit
+    s1, i1 = fe.search(q)                           # must NOT come cached
+    assert fe.stats["cache_hits"] == 0
+    assert int(i0[0, 0]) not in i1[0]
+    r.upsert(_batch(3, 1))
+    fe.search(q)
+    assert fe.stats["cache_hits"] == 0              # invalidated again
+    fe.search(q)
+    assert fe.stats["cache_hits"] == 1              # stable corpus: hits
+
+
+def test_warm_does_not_pollute_traffic_stats(frontend):
+    """stats report TRAFFIC only; warm-up's synthetic bucket dispatches
+    must not skew dispatches / rows-per-dispatch in the benchmark report."""
+    frontend.warm()
+    assert frontend.stats["dispatches"] == 0
+    assert frontend.stats["rows_real"] == 0 and \
+        frontend.stats["rows_padded"] == 0
+
+
+def test_submit_honors_scheduled_arrival_time():
+    """Replay loops pass the scheduled Poisson arrival as t_submit, so
+    latency includes queueing delay accrued while the loop was blocked in
+    a dispatch (no coordinated omission)."""
+    t = [10.0]
+    fe = ServingFrontend(Retriever(_batch(8, 0)), STAGES, max_batch=1,
+                         max_q=4, min_q=4, clock=lambda: t[0])
+    rng = np.random.default_rng(11)
+    q = rng.normal(size=(1, 4, DIM)).astype(np.float32)
+    pr = fe.submit(q, t_submit=7.5)                 # fell due 2.5s "ago"
+    t[0] = 10.5
+    fe.flush()
+    assert pr.latency == pytest.approx(10.5 - 7.5)
+
+
+def test_retriever_mask_normalization_no_cache_split():
+    """Satellite bugfix: q_mask=None, an all-ones bool mask, and an
+    all-ones float mask must all hit ONE executable on the local path —
+    and return bitwise-identical results."""
+    r = Retriever(_batch(16, 0))
+    rng = np.random.default_rng(8)
+    q = jnp.asarray(rng.normal(size=(2, 4, DIM)).astype(np.float32))
+    s0, i0 = r.search(q, None, stages=STAGES)       # traces once
+    with tracing.no_retrace("mask-normalization"):
+        s1, i1 = r.search(q, jnp.ones((2, 4), bool), stages=STAGES)
+        s2, i2 = r.search(q, jnp.ones((2, 4), jnp.float32), stages=STAGES)
+    for s, i in ((s1, i1), (s2, i2)):
+        np.testing.assert_array_equal(np.asarray(s), np.asarray(s0))
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(i0))
+
+
+def test_chunked_int8_nondivisible_n():
+    """maxsim_scores_chunked with int8 codes + scales at N not divisible by
+    the chunk: parity with the unchunked int8 scan (padding edge)."""
+    from repro.kernels.maxsim import ops as KOPS
+
+    rng = np.random.default_rng(9)
+    q = jnp.asarray(rng.normal(size=(3, 5, DIM)).astype(np.float32))
+    qm = jnp.ones((3, 5), bool)
+    docs = jnp.asarray(rng.normal(size=(21, D, DIM)).astype(np.float32))
+    dm = jnp.ones((21, D), bool)
+    codes, scales = KOPS.quantize_int8(docs)
+    full = KOPS.maxsim_scores(q, codes, qm, dm, scales, impl="ref")
+    for chunk in (8, 5):                            # 21 % 8, 21 % 5 != 0
+        part = KOPS.maxsim_scores_chunked(q, codes, qm, dm, scales,
+                                          chunk=chunk, impl="ref")
+        np.testing.assert_allclose(np.asarray(part), np.asarray(full),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_pending_result_latency():
+    pr = PendingResult(t_submit=1.0)
+    with pytest.raises(ValueError):
+        pr.latency
+    pr.t_done = 1.25
+    assert pr.latency == pytest.approx(0.25)
