@@ -22,6 +22,11 @@ full result tables to stdout and benchmarks/results/paper_tables.json.
                        p50/p95/p99 latency, ragged QPS vs fixed-shape
                        static QPS, query-shape retrace count asserted == 0
                        (beyond-paper serving)
+  ingest_throughput    device-resident ingest pipeline: pages/sec per
+                       batch bucket, fused-kernel vs ref pooling, int8
+                       on/off, vs legacy build_store+upsert; mixed-size
+                       steady-state retrace count asserted == 0
+                       (beyond-paper serving)
 """
 from __future__ import annotations
 
@@ -347,6 +352,187 @@ def dynamic_corpus(table: dict, quick: bool = False):
     table["dynamic_corpus"] = out
 
 
+def ingest_throughput(table: dict, quick: bool = False):
+    """Device-resident ingest pipeline, three measurements per
+    power-of-two ingest batch bucket:
+
+    - POOLING-STAGE dispatch A/B (pages/sec through the component
+      ``use_kernel`` actually switches): the fused pooling operator vs
+      the functional reference chain — ``kernel_vs_ref`` comes from here;
+    - INDEX throughput (pages/sec through the whole fused hygiene ->
+      pooling -> quantise jit): kernel vs ref x int8 on/off, as context
+      (the shared hygiene/cast/write work dilutes the dispatch delta);
+    - end-to-end INGEST (index + segment write): the pipeline vs the
+      legacy host-driven ``build_store``+``upsert`` path. After one
+      warm-up trace per bucket, a MIXED-size ingest sequence through the
+      pipeline must cause zero retraces — asserted, so an ingest-path
+      regression that reintroduces per-shape recompilation fails this
+      bench (and CI). The legacy path's retrace count on the same mixed
+      sizes is reported as the contrast (its write executables key on the
+      exact block shape).
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.core import multistage as MST
+    from repro.data.synthetic import make_benchmark
+    from repro.kernels.pooling import ops as POPS
+    from repro.retrieval import tracing
+    from repro.retrieval.ingest import IngestPipeline
+    from repro.retrieval.retriever import Retriever
+    from repro.retrieval.segments import bucket_capacity
+    from repro.retrieval.store import build_store, quantize_store
+
+    cfg = get_config("colpali")
+    buckets = (16, 32) if quick else (16, 32, 64)
+    # the fused operator targets index-time BULK batches (the paper's
+    # indexing shape is 256 pages/step); measure its dispatch A/B in that
+    # regime — tiny batches are write-/overhead-bound either way
+    index_buckets = (64,) if quick else (64, 128)
+    reps = 3 if quick else 5
+    index_rounds = 11 if quick else 13
+    stages = MST.two_stage(24, 10)
+    bench = make_benchmark(cfg, (16, 8, 8) if quick else (24, 12, 12),
+                           (4, 4, 4), seed=14)
+    base = np.asarray(bench.pages)
+    tt = jnp.asarray(bench.token_types)
+    rng = np.random.default_rng(15)
+    # odd sizes that land inside already-warmed buckets
+    mixed = [max(1, b - 3) for b in buckets] + [buckets[-1] // 2 + 1]
+
+    def pages_for(n):
+        sel = rng.integers(0, len(base), size=n)
+        return jnp.asarray(base[sel], jnp.float32)
+
+    def timed(fn, b):
+        dts = []
+        for _ in range(reps):
+            p = pages_for(b)
+            t0 = time.time()
+            jax.block_until_ready(fn(p))
+            dts.append(time.time() - t0)
+        return float(np.median(dts))           # robust to scheduler noise
+
+    out = {"buckets": list(buckets), "index_pages_per_s": {},
+           "ingest_pages_per_s": {},
+           "pallas_pooling_available": POPS.pallas_available(),
+           "pool_impl": POPS.resolve_impl(True)[0]}
+    # OBSERVE (not infer from config) that the kernel-mode pipeline's
+    # pooling really routes to a fused operator: tracing its body must
+    # bump the fused-pool trace counter. A regression that silently falls
+    # back to the reference chain leaves the counter untouched — the CI
+    # gate asserts on this
+    kpipe = IngestPipeline.for_config(cfg, use_kernel=True)
+    before_fused = POPS.fused_pool_trace_count()
+    jax.eval_shape(
+        lambda p, t: kpipe._index_arrays(p, t, None),
+        jax.ShapeDtypeStruct((8, cfg.seq_len, cfg.out_dim), jnp.float32),
+        jax.ShapeDtypeStruct((cfg.seq_len,), jnp.int32))
+    out["kernel_fused_pool_traces"] = \
+        POPS.fused_pool_trace_count() - before_fused
+    out["kernel_pool_path"] = kpipe.pool_path
+
+    # ---- section 1: pooling-stage dispatch A/B ----
+    # timed INTERLEAVED (one call each per round, min over rounds) so the
+    # A/B sees identical machine conditions — the noise-robust protocol
+    # for this host's scheduler jitter
+    import functools
+    from repro.core.pooling import pool_pages_batch
+    g, p2, _ = POPS.pooling_factors(cfg)
+    p2 = jnp.asarray(p2)
+    pool_fns = {
+        "ref": jax.jit(lambda x, m: pool_pages_batch(cfg, x, m)[0]),
+        "kernel": jax.jit(functools.partial(
+            POPS.pool_pages_grouped, p2=p2, n_groups=g)),
+    }
+    out["pool_pages_per_s"] = {name: {} for name in pool_fns}
+    for b in index_buckets:
+        x = pages_for(b)[:, -cfg.n_patches:]
+        m = jnp.ones((b, cfg.n_patches), jnp.float32)
+        for fn in pool_fns.values():
+            jax.block_until_ready(fn(x, m))    # warm
+        dts = {name: [] for name in pool_fns}
+        for _ in range(index_rounds):
+            for name, fn in pool_fns.items():
+                t0 = time.time()
+                jax.block_until_ready(fn(x, m))
+                dts[name].append(time.time() - t0)
+        for name in pool_fns:
+            dt = float(np.min(dts[name]))
+            out["pool_pages_per_s"][name][b] = b / dt
+            _emit(f"ingest/pool/{name}/b{b}", dt / b,
+                  f"pages_per_s={b/dt:.0f}")
+
+    # ---- section 1b: whole-index throughput, kernel vs ref x int8 ----
+    pipes = {name: IngestPipeline.for_config(
+        cfg, use_kernel=name.startswith("kernel"),
+        quantize=("mean_pooling",) if name.endswith("-int8") else (),
+        stages=stages if name.endswith("-int8") else None)
+        for name in ("ref", "kernel", "ref-int8", "kernel-int8")}
+    for b in index_buckets:
+        for pipe in pipes.values():
+            pipe.index(pages_for(b), tt)       # warm the bucket
+        dts = {name: [] for name in pipes}
+        for _ in range(index_rounds):
+            for name, pipe in pipes.items():
+                p = pages_for(b)
+                t0 = time.time()
+                jax.block_until_ready(pipe.index(p, tt).vectors)
+                dts[name].append(time.time() - t0)
+        for name in pipes:
+            dt = float(np.min(dts[name]))
+            out["index_pages_per_s"].setdefault(name, {})[b] = b / dt
+            _emit(f"ingest/index/{name}/b{b}", dt / b,
+                  f"pages_per_s={b/dt:.0f}")
+
+    # ---- section 2: end-to-end ingest, pipeline vs legacy write path ----
+    cap = bucket_capacity(
+        (2 + reps) * sum(buckets) + sum(mixed) + buckets[-1] + 8)
+    retrace_counts = {}
+    for name in ("legacy", "pipeline"):
+        pipe = (IngestPipeline.for_config(cfg, use_kernel=True)
+                if name == "pipeline" else None)
+        seed = (pipe.index(pages_for(4), tt) if pipe is not None
+                else build_store(cfg, pages_for(4), tt))
+        r = Retriever(seed, capacity=cap, ingest=pipe)
+
+        def ingest(p):
+            if pipe is not None:
+                return r.ingest(p, tt)
+            return r.upsert(build_store(cfg, p, tt))
+        for b in buckets:                      # warm each bucket once
+            ingest(pages_for(b))
+        jax.block_until_ready(r.store.stores())
+        warm = tracing.trace_count()
+        res = {}
+        for b in buckets:
+            dt = timed(lambda p: (ingest(p), r.store.stores())[1], b)
+            res[b] = b / dt
+            _emit(f"ingest/write/{name}/b{b}", dt / b,
+                  f"pages_per_s={b/dt:.0f}")
+        for n in mixed:                        # mixed sizes, warmed buckets
+            ingest(pages_for(n))
+        jax.block_until_ready(r.store.stores())
+        retrace_counts[name] = tracing.trace_count() - warm
+        out["ingest_pages_per_s"][name] = res
+
+    out["retraces"] = retrace_counts["pipeline"]
+    out["legacy_retraces"] = retrace_counts["legacy"]
+    out["kernel_vs_ref"] = {
+        b: out["pool_pages_per_s"]["kernel"][b]
+        / out["pool_pages_per_s"]["ref"][b] for b in index_buckets}
+    out["pipeline_vs_legacy"] = {
+        b: out["ingest_pages_per_s"]["pipeline"][b]
+        / out["ingest_pages_per_s"]["legacy"][b] for b in buckets}
+    _emit("ingest/retrace", 0.0,
+          f"count={out['retraces']};legacy={out['legacy_retraces']}")
+    assert out["retraces"] == 0, (
+        f"steady-state pipeline ingestion retraced {out['retraces']} "
+        "times across mixed batch sizes — the ingest no-retrace contract "
+        "is broken")
+    table["ingest_throughput"] = out
+
+
 def serving_tail_latency(table: dict, quick: bool = False):
     """Ragged-traffic tail latency through the ServingFrontend: Poisson
     arrivals of single queries with mixed token counts, shape-bucketed
@@ -429,6 +615,7 @@ def main() -> None:
         kernel_vs_ref_scan(table, quick=True)
         dynamic_corpus(table, quick=True)
         serving_tail_latency(table, quick=True)
+        ingest_throughput(table, quick=True)
         kernel_micro(table)
     else:
         table2_quality_qps(table)
@@ -440,6 +627,7 @@ def main() -> None:
         kernel_vs_ref_scan(table)
         dynamic_corpus(table)
         serving_tail_latency(table)
+        ingest_throughput(table)
     name = "paper_tables_quick.json" if args.quick else "paper_tables.json"
     with open(os.path.join(RESULTS, name), "w") as f:
         json.dump(table, f, indent=1, default=float)

@@ -11,6 +11,7 @@ Token-type convention (emitted by our processors / synthetic pipeline):
 """
 from __future__ import annotations
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
@@ -50,3 +51,29 @@ def retained_counts(mask: jax.Array) -> jax.Array:
     """Number of retained (visual) tokens per page — the paper reports e.g.
     ColPali 1024/1030 and ColQwen 720–768 (mean 743)."""
     return jnp.sum(mask.astype(jnp.int32), axis=-1)
+
+
+def require_visual_tail(token_types, n_vis: int) -> None:
+    """Validate the static token layout the index path assumes.
+
+    ``build_store``/``IngestPipeline`` physically separate visual tokens as
+    the TRAILING ``n_vis`` sequence positions (specials/prompt lead). A
+    ``token_types`` row that disagrees used to be silently mis-indexed —
+    special tokens kept as patches, or real patches dropped. Host-side
+    check (call before dispatch, not inside a jit)."""
+    tt = np.asarray(token_types)
+    tail = tt[..., tt.shape[-1] - n_vis:]
+    if not (tail == VISUAL).all():
+        bad = int((tail != VISUAL).sum())
+        raise ValueError(
+            f"token_types must mark the trailing n_patches={n_vis} "
+            f"positions as visual (type {VISUAL}); {bad} tail position(s) "
+            "are non-visual. The index path assumes specials lead the "
+            "sequence — reorder the processor output or fix token_types.")
+    lead = tt[..., : tt.shape[-1] - n_vis]
+    if (lead == VISUAL).any():
+        bad = int((lead == VISUAL).sum())
+        raise ValueError(
+            f"{bad} visual token(s) outside the trailing n_patches={n_vis} "
+            "window would be silently dropped at index time; the index "
+            "path assumes specials lead the sequence.")

@@ -27,10 +27,14 @@ def truncate_dims(vecs: jax.Array, d_prime: int,
 
 def add_truncated_stage(store: dict, source: str, d_prime: int,
                         name: str | None = None) -> dict:
-    """Register a truncated named vector derived from an existing one."""
+    """Register a truncated named vector derived from an existing one.
+    The derived vector inherits ``source``'s companion arrays (same
+    [N, D] geometry) via the store schema's helper — retrieval depends on
+    core, hence the call-time import (cycle-free: this is plain host
+    code run long after both packages import)."""
+    from repro.retrieval.store import companion_entries
     name = name or f"{source}_mrl{d_prime}"
     out = dict(store)
     out[name] = truncate_dims(store[source], d_prime)
-    if source + "_mask" in store:
-        out[name + "_mask"] = store[source + "_mask"]
+    out.update(companion_entries(store, source, name))
     return out

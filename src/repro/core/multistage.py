@@ -82,19 +82,34 @@ def one_stage(top_k: int = 100) -> tuple:
     return (Stage("initial", top_k),)
 
 
+_ACCESSORS: list = []
+
+
+def _store_accessors():
+    """The store's key schema (which dict keys hold masks / validity) is
+    owned by ``repro.retrieval.store.VectorSchema``; retrieval depends on
+    core, so the oracle borrows the accessors with a call-time import —
+    it runs at trace time only and cannot cycle (core is fully imported
+    long before any search is traced). Cached after the first trace."""
+    if not _ACCESSORS:
+        from repro.retrieval.store import rerank_arrays, validity
+        _ACCESSORS.append((rerank_arrays, validity))
+    return _ACCESSORS[0]
+
+
 def _score_stage(stage: Stage, store: dict, q: jax.Array,
                  q_mask: jax.Array | None,
                  cand: jax.Array | None) -> jax.Array:
     """Scores for one stage. q [B,Q,d]; cand [B,C] doc ids or None (=all).
 
-    Returns [B, C] (or [B, N] when cand is None). A ``doc_valid`` [N] bool
+    Returns [B, C] (or [B, N] when cand is None). A per-document validity
     entry in ``store`` marks live documents of a capacity-padded segment:
     dead slots (preallocated padding, deleted pages) score NEG at every
     stage so they can never enter a top-k on merit.
     """
-    vecs = store[stage.vector]
-    mask = store.get(stage.vector + "_mask")
-    valid = store.get("doc_valid")
+    rerank_arrays, validity = _store_accessors()
+    vecs, mask = rerank_arrays(store, stage.vector)
+    valid = validity(store)
     if vecs.shape[-1] < q.shape[-1]:
         # Matryoshka stage: score with the matching query dim prefix
         q = q[..., : vecs.shape[-1]]

@@ -215,3 +215,14 @@ def pool_page(cfg, patches: jax.Array, mask: jax.Array | None = None,
 
 
 pool_pages = jax.vmap(pool_page, in_axes=(None, 0, 0, 0), out_axes=0)
+
+
+def pool_pages_batch(cfg, patches: jax.Array, mask: jax.Array,
+                     h_eff: jax.Array | None = None):
+    """``pool_pages`` with the default effective-height handling: pages
+    without a per-page ``h_eff`` pool at the full static grid height. The
+    one batch entry point the index paths (``build_store`` and the ingest
+    pipeline's reference mode) share."""
+    if h_eff is None:
+        h_eff = jnp.full((patches.shape[0],), cfg.grid_h)
+    return pool_pages(cfg, patches, mask, h_eff)

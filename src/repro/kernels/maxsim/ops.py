@@ -144,10 +144,31 @@ def maxsim_scores_chunked(q: jax.Array, docs: jax.Array,
     return out
 
 
-def quantize_int8(docs: jax.Array, eps: float = 1e-9):
-    """Per-vector symmetric int8 quantisation: docs [N,D,d] ->
-    (int8 codes [N,D,d], scales [N,D])."""
-    amax = jnp.max(jnp.abs(docs.astype(jnp.float32)), axis=-1)
+@jax.jit
+def _quantize_block(docs: jax.Array, eps) -> tuple:
+    # math in f32 WITHOUT an eager full-size f32 copy: under jit the
+    # upcasts fuse into the elementwise chains (abs -> reduce-max;
+    # divide -> round -> clip -> int8), so the largest live buffer is the
+    # int8 output, not a 4-byte shadow of the corpus
+    amax = jnp.max(jnp.abs(docs).astype(jnp.float32), axis=-1)
     scales = jnp.maximum(amax, eps) / 127.0
-    codes = jnp.clip(jnp.round(docs / scales[..., None]), -127, 127)
+    codes = jnp.clip(jnp.round(docs.astype(jnp.float32)
+                               / scales[..., None]), -127, 127)
     return codes.astype(jnp.int8), scales
+
+
+def quantize_int8(docs: jax.Array, eps: float = 1e-9, chunk: int = 0):
+    """Per-vector symmetric int8 quantisation: docs [N,D,d] ->
+    (int8 codes [N,D,d], scales [N,D]). Accepts any float dtype — the
+    store dtype goes in directly; quantising a bf16 array is bitwise the
+    old quantise-a-f32-copy behaviour (the bf16->f32 upcast is exact) but
+    never materialises that copy, so ``--int8`` ingest no longer briefly
+    triples HBM for the largest named vector. ``chunk`` > 0 additionally
+    processes N in row slabs, bounding even the transient at
+    [chunk, D, d]."""
+    if chunk > 0 and chunk < docs.shape[0]:
+        parts = [_quantize_block(docs[i:i + chunk], eps)
+                 for i in range(0, docs.shape[0], chunk)]
+        return (jnp.concatenate([c for c, _ in parts], axis=0),
+                jnp.concatenate([s for _, s in parts], axis=0))
+    return _quantize_block(docs, eps)

@@ -96,12 +96,139 @@ def global_matrix(s: int) -> np.ndarray:
     return np.ones((1, s), np.float32)
 
 
+def pooling_matrix_static(cfg) -> tuple:
+    """``pooling_matrix`` padded to the store's STATIC pooled-vector count:
+    (matrix [cfg.n_pooled, n_patches], row_valid [cfg.n_pooled] bool).
+
+    The dynamic geometry's adaptive matrix has ``min(grid_h, max_rows)``
+    rows but the store holds ``max_rows`` slots with a validity mask
+    (``adaptive_row_pool`` pads, it never upsamples); zero matrix rows
+    reproduce those empty trailing slots (0-vectors, mask False), so the
+    fused path emits exactly the reference layout."""
+    p = pooling_matrix(cfg)
+    n_out = cfg.n_pooled
+    if p.shape[0] < n_out:
+        p = np.concatenate(
+            [p, np.zeros((n_out - p.shape[0], p.shape[1]), p.dtype)])
+    return p, p.sum(axis=1) > 0
+
+
+def pooling_factors(cfg) -> tuple:
+    """Factor the composed pooling stack as ``P = P2 @ G``: a uniform
+    GROUP indicator ``G`` [n_groups, S] (grid rows / tile groups — never
+    materialised, it evaluates as a reshape-sum) followed by a small dense
+    stage-2 matrix ``P2`` [cfg.n_pooled, n_groups] (smoothing / conv1d /
+    adaptive binning; identity when the stack is a plain group mean).
+
+    Returns (n_groups, P2, row_valid). ``P2 @ G == pooling_matrix_static``
+    exactly (indicator compositions), so the factored evaluation computes
+    the same single-normalisation operator while skipping the structural
+    zeros a full [n_out, S] matmul would multiply through — the fast jnp
+    twin of the Pallas kernel off-TPU (see ``pool_pages_grouped``)."""
+    if cfg.geometry == "tiles":
+        g = cfg.n_tiles
+        p2 = np.eye(g, dtype=np.float32)
+    else:
+        g = cfg.grid_h
+        if cfg.geometry == "grid":
+            if cfg.smooth == "conv1d":
+                p2 = conv1d_matrix(g)
+            elif cfg.smooth in ("gaussian", "triangular"):
+                p2 = smooth_matrix(g, cfg.smooth)
+            else:
+                p2 = np.eye(g, dtype=np.float32)
+        else:                                  # dynamic
+            p2 = adaptive_matrix(g, cfg.max_rows)
+            if cfg.smooth in ("gaussian", "triangular"):
+                p2 = p2 @ smooth_matrix(g, cfg.smooth)
+    n_out = cfg.n_pooled
+    if p2.shape[0] < n_out:
+        p2 = np.concatenate(
+            [p2, np.zeros((n_out - p2.shape[0], p2.shape[1]), p2.dtype)])
+    return g, np.asarray(p2, np.float32), p2.sum(axis=1) > 0
+
+
+def pool_pages_grouped(x: jax.Array, mask: jax.Array, p2: jax.Array,
+                       n_groups: int, l2_norm: bool = True) -> jax.Array:
+    """Factored evaluation of the fused pooling operator:
+    x [B,S,d] + mask [B,S] + p2 [n_out, n_groups] -> pooled [B,n_out,d].
+
+    Same masked single-normalisation semantics as
+    ``pool_ref(x, mask, p2 @ G)`` — numerator and denominator both factor
+    through the group sums — with the group stage evaluated as a
+    reshape-sum instead of a matmul against indicator rows."""
+    _FUSED_POOL_TRACES[0] += 1
+    B, S, d = x.shape
+    w = S // n_groups
+    assert S == n_groups * w, (S, n_groups)
+    m = mask.astype(jnp.float32)
+    xf = x.astype(jnp.float32) * m[..., None]
+    gx = xf.reshape(B, n_groups, w, d).sum(axis=2)          # [B, G, d]
+    gm = m.reshape(B, n_groups, w).sum(axis=2)              # [B, G]
+    p2 = p2.astype(jnp.float32)
+    num = jnp.einsum("og,bgd->bod", p2, gx)
+    den = jnp.einsum("og,bg->bo", p2, gm)
+    out = num / jnp.maximum(den, 1e-9)[..., None]
+    if l2_norm:
+        out = out / jnp.maximum(
+            jnp.linalg.norm(out, axis=-1, keepdims=True), 1e-9)
+    return out
+
+
+def default_interpret() -> bool:
+    """Pallas compiles natively on TPU; everywhere else it interprets."""
+    return jax.default_backend() != "tpu"
+
+
+@functools.lru_cache(maxsize=1)
+def pallas_available() -> bool:
+    """Probe whether the fused pooling kernel can execute on this
+    host/backend (same contract as ``kernels.maxsim.ops.pallas_available``:
+    callers fall back to the jnp twin when False)."""
+    try:
+        x = jnp.zeros((1, 8, 128), jnp.float32)
+        m = jnp.ones((1, 8), jnp.float32)
+        pm = jnp.ones((2, 8), jnp.float32)
+        out = pool_pages_fused(x, m, pm, impl="pallas", block_s=8,
+                               interpret=default_interpret())
+        jax.block_until_ready(out)
+        return True
+    except Exception:
+        return False
+
+
+def resolve_impl(use_kernel: bool) -> tuple:
+    """Pick (impl, interpret) for the fused pooling operator once, at
+    pipeline-build time — the mirror of the scan path's
+    ``engine._resolve_impl``. On TPU the Pallas kernel compiles natively;
+    everywhere else the operator runs its jnp twin (``pool_ref`` — the
+    same single-matmul formulation) because interpret-mode Pallas is a
+    correctness tool, not an ingest path. use_kernel=False is the
+    functional ``core.pooling`` reference."""
+    if use_kernel and not default_interpret() and pallas_available():
+        return "pallas", False
+    return "ref", True
+
+
+# trace-time counter for the fused pooling operator (both the Pallas
+# kernel and its jnp twins bump it) — an OBSERVATIONAL signal that a
+# kernel-dispatch code path really routed here, used by the ingest
+# benchmark's CI gate (a config-derived flag could not catch a silent
+# fallback to the reference chain)
+_FUSED_POOL_TRACES = [0]
+
+
+def fused_pool_trace_count() -> int:
+    return _FUSED_POOL_TRACES[0]
+
+
 @functools.partial(jax.jit, static_argnames=("impl", "block_s", "l2_norm",
                                              "interpret"))
 def pool_pages_fused(x: jax.Array, mask: jax.Array, pool_mat: jax.Array,
                      *, impl: str = "pallas", block_s: int = 0,
                      l2_norm: bool = True, interpret: bool = True):
     """x [B,S,d] + mask [B,S] + pool_mat [n_out,S] -> pooled [B,n_out,d]."""
+    _FUSED_POOL_TRACES[0] += 1
     if impl == "ref":
         return pool_ref(x, mask, pool_mat, l2_norm=l2_norm)
     S = x.shape[1]

@@ -613,17 +613,18 @@ def build_retriever_cell(arch: str, shape, mesh, variant: str = "base",
     n_shards = ndev
     N_pad = -(-N // max(n_shards, 1)) * max(n_shards, 1)
     Dfull, Dp, d = cfg.n_patches, cfg.n_pooled, cfg.out_dim
+    from repro.retrieval.store import codes_key, mask_key, scale_key
     store_sds = {
         "initial": _sds((N_pad, Dfull, d), jnp.bfloat16),
-        "initial_mask": _sds((N_pad, Dfull), bool),
+        mask_key("initial"): _sds((N_pad, Dfull), bool),
         "mean_pooling": _sds((N_pad, Dp, d), jnp.bfloat16),
-        "mean_pooling_mask": _sds((N_pad, Dp), bool),
+        mask_key("mean_pooling"): _sds((N_pad, Dp), bool),
         "global_pooling": _sds((N_pad, d), jnp.bfloat16),
     }
     if variant == "opt":
         first = stages[0].vector
-        store_sds[first + "_int8"] = _sds(store_sds[first].shape, jnp.int8)
-        store_sds[first + "_scale"] = _sds(store_sds[first].shape[:2],
+        store_sds[codes_key(first)] = _sds(store_sds[first].shape, jnp.int8)
+        store_sds[scale_key(first)] = _sds(store_sds[first].shape[:2],
                                            jnp.float32)
     fn = make_search_fn(mesh, stages, N_pad)
     # underlying searcher is already jitted; unwrap for uniform handling

@@ -19,6 +19,11 @@ Dynamic-corpus mode:
 starts from a capacity-padded corpus and measures steady-state live
 ingestion: upsert throughput (pages/s), search-after-upsert QPS, and the
 no-retrace contract (retrace count printed, expected 0 after warm-up).
+Add ``--ingest-pipeline`` to ingest RAW pages through the device-resident
+``IngestPipeline`` (fused hygiene -> pooling -> quantise -> segment write,
+one jit per power-of-two batch bucket; ``--use-kernel`` also dispatches
+the pooling to the fused operator) instead of host-driven ``build_store``
++ ``upsert``.
 
 Streaming-traffic mode:
 
@@ -135,10 +140,15 @@ def _run_traffic(args, cfg, bench, store, stages, int8_on):
 
 def _run_ingest(args, cfg, bench, store, stages, int8_on):
     """Steady-state live-corpus benchmark: upsert batches into preallocated
-    segment headroom, search after every upsert, count retraces."""
+    segment headroom, search after every upsert, count retraces.
+
+    ``--ingest-pipeline`` switches the write path from host-driven
+    ``build_store`` + ``upsert`` to the device-resident ``IngestPipeline``
+    (raw pages in, one fused dispatch per batch)."""
     import jax
     import jax.numpy as jnp
     from repro.retrieval import tracing
+    from repro.retrieval.ingest import IngestPipeline, batch_bucket
     from repro.retrieval.retriever import Retriever
     from repro.retrieval.segments import bucket_capacity
     from repro.retrieval.store import build_store, quantize_store
@@ -146,8 +156,18 @@ def _run_ingest(args, cfg, bench, store, stages, int8_on):
     bs = args.ingest_batch_size
     n_batches = args.ingest_batches
     total = store.n_docs + (n_batches + 1) * bs
-    cap = args.capacity or bucket_capacity(total)
-    retriever = Retriever(store, capacity=cap, scan_chunk=args.chunk)
+    # the pipeline writes full bucket-wide blocks, so its last batch needs
+    # batch_bucket(bs) free tail slots, not just bs — size the default
+    # capacity for that or the steady state would allocate a new segment
+    # (and retrace) right at the end
+    slack = batch_bucket(bs) if args.ingest_pipeline else 0
+    cap = args.capacity or bucket_capacity(total + slack)
+    quantize = (stages[0].vector,) if int8_on else ()
+    pipe = IngestPipeline.for_config(
+        cfg, quantize=quantize, stages=stages if int8_on else None,
+        use_kernel=args.use_kernel) if args.ingest_pipeline else None
+    retriever = Retriever(store, capacity=cap, scan_chunk=args.chunk,
+                          ingest=pipe)
     q = jnp.asarray(bench.queries)
     qm = jnp.asarray(bench.query_mask)
 
@@ -155,22 +175,27 @@ def _run_ingest(args, cfg, bench, store, stages, int8_on):
     base = np.asarray(bench.pages)
     tt = jnp.asarray(bench.token_types)
 
-    def make_batch():
+    def make_pages():
         # fresh synthetic pages with the same geometry (resampled + jittered
         # real pages stand in for newly ingested PDFs)
         sel = rng.integers(0, len(base), size=bs)
-        pages = base[sel] + 0.05 * rng.normal(size=base[sel].shape)
-        batch = build_store(cfg, jnp.asarray(pages, jnp.float32), tt)
+        return jnp.asarray(base[sel] + 0.05 * rng.normal(
+            size=base[sel].shape), jnp.float32)
+
+    def ingest_batch():
+        if pipe is not None:
+            return retriever.ingest(make_pages(), tt)   # fused device path
+        batch = build_store(cfg, make_pages(), tt)
         if int8_on:
             batch = quantize_store(batch, names=(stages[0].vector,),
                                    stages=stages)
-        return batch
+        return retriever.upsert(batch)
 
     # ---- warm-up: one upsert + delete + search compiles every executable
     # (delete the same count as the steady-state delete below, so the
     # padded slot-bucket shape — and thus the _invalidate executable —
     # matches for any batch size)
-    ids = retriever.upsert(make_batch())
+    ids = ingest_batch()
     retriever.delete(ids[: max(1, bs // 8)])
     s, _ = retriever.search(q, qm, stages=stages)
     s.block_until_ready()
@@ -179,7 +204,7 @@ def _run_ingest(args, cfg, bench, store, stages, int8_on):
     up_dt, search_dt = [], []
     for _ in range(n_batches):
         t0 = time.time()
-        ids = retriever.upsert(make_batch())
+        ids = ingest_batch()
         jax.block_until_ready(retriever.store.stores())
         up_dt.append(time.time() - t0)
         t0 = time.time()
@@ -191,10 +216,11 @@ def _run_ingest(args, cfg, bench, store, stages, int8_on):
     s.block_until_ready()
     retraces = tracing.trace_count() - warm_traces
 
+    mode = "pipeline" if pipe is not None else "host build_store"
     ingest_pps = bs / np.mean(up_dt)
     qps = len(q) / np.mean(search_dt)
-    print(f"ingest [{n_batches} x {bs} pages into capacity {cap}]: "
-          f"{ingest_pps:.0f} pages/s upsert, "
+    print(f"ingest [{n_batches} x {bs} pages into capacity {cap}, "
+          f"{mode}]: {ingest_pps:.0f} pages/s upsert, "
           f"search-after-upsert QPS={qps:.1f}, "
           f"live docs={retriever.n_docs}, "
           f"segments={retriever.store.capacities}, "
@@ -227,6 +253,11 @@ def main():
                          "into preallocated headroom, measuring steady-"
                          "state ingestion + search-after-upsert")
     ap.add_argument("--ingest-batch-size", type=int, default=32)
+    ap.add_argument("--ingest-pipeline", action="store_true",
+                    help="ingest raw pages through the device-resident "
+                         "IngestPipeline (fused hygiene/pooling/quantise/"
+                         "write, one jit per batch bucket) instead of "
+                         "host-driven build_store + upsert")
     ap.add_argument("--capacity", type=int, default=0,
                     help="preallocated corpus capacity (0 = bucketed "
                          "power-of-two over the expected total)")

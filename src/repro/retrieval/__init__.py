@@ -1,4 +1,7 @@
-from repro.retrieval import engine, frontend, segments, store, topk, tracing
+from repro.retrieval import (engine, frontend, ingest, segments, store, topk,
+                             tracing)
 from repro.retrieval.frontend import ServingFrontend
+from repro.retrieval.ingest import IngestPipeline
 from repro.retrieval.retriever import Retriever
 from repro.retrieval.segments import SegmentedStore, bucket_capacity
+from repro.retrieval.store import NamedVector, VectorSchema

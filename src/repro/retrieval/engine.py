@@ -36,6 +36,8 @@ from jax.experimental.shard_map import shard_map
 from repro.core import maxsim as MS
 from repro.core.multistage import Stage
 from repro.kernels.maxsim import ops as KOPS
+from repro.retrieval.store import (VALIDITY_KEY, rerank_arrays, scan_arrays,
+                                   validity)
 from repro.retrieval.topk import allgather_topk, merge_topk
 from repro.retrieval.tracing import record_trace
 
@@ -57,18 +59,11 @@ def _mesh_shards(mesh: Mesh | None) -> int:
 
 
 def _scan_arrays(store: dict, stage: Stage):
-    """Resolve the scan stage's arrays: (vecs, mask, scales).
-
-    int8 codes + per-vector scales are preferred when indexed — the scan
-    stage is memory-bound, so streaming 1 byte/coord halves its roofline
-    term vs bf16. A quantised store may have DROPPED the float copy
-    entirely (``quantize_store(stages=...)``), so only fall back to the
-    float array when the codes are absent."""
-    mask = store.get(stage.vector + "_mask")
-    if stage.vector + "_int8" in store:
-        return (store[stage.vector + "_int8"], mask,
-                store[stage.vector + "_scale"])
-    return store[stage.vector], mask, None
+    """Resolve the scan stage's arrays: (vecs, mask, scales) — the typed
+    ``VectorSchema`` accessor ``store.scan_arrays`` does the key work
+    (int8 codes + scales preferred when indexed; float fallback only when
+    the codes are absent — see its docstring for the roofline argument)."""
+    return scan_arrays(store, stage.vector)
 
 
 def _dispatch_scan(stage: Stage, vecs, mask, q, q_mask, scales,
@@ -181,7 +176,7 @@ def _build_body(mesh: Mesh | None, stages: tuple, capacities: tuple,
                         vecs, mask, scales = _scan_arrays(store, stage)
                         s = _dispatch_scan(stage, vecs, mask, q, q_mask,
                                            scales, impl, interpret,
-                                           doc_valid=store.get("doc_valid"))
+                                           doc_valid=validity(store))
                         v, i = jax.lax.top_k(s, min(stage.k, cap))
                         parts_v.append(v)
                         parts_i.append(i + off)
@@ -196,12 +191,12 @@ def _build_body(mesh: Mesh | None, stages: tuple, capacities: tuple,
                         in_seg = (local >= 0) & (local < cap)
                         rows = jnp.clip(local, 0, cap - 1)
                         ok = in_seg
-                        dv = store.get("doc_valid")
+                        dv = validity(store)
                         if dv is not None:
                             ok = ok & jnp.take(dv, rows, axis=0)
-                        s = _score_candidates(store[stage.vector],
-                                              store.get(stage.vector + "_mask"),
-                                              q, q_mask, rows, ok)
+                        s = _score_candidates(
+                            *rerank_arrays(store, stage.vector),
+                            q, q_mask, rows, ok)
                         # each candidate lives in exactly one segment; the
                         # others scored it NEG, so max == owner's score
                         s_all = s if s_all is None else jnp.maximum(s_all, s)
@@ -233,7 +228,7 @@ def _build_body(mesh: Mesh | None, stages: tuple, capacities: tuple,
                                            scales, impl, interpret)
                     v, i = allgather_topk(s_loc, min(stage.k, cap), axes,
                                           shard_idx, n_local,
-                                          valid_local=store.get("doc_valid"),
+                                          valid_local=validity(store),
                                           seg_offset=off)
                     parts_v.append(v)
                     parts_i.append(i)
@@ -255,12 +250,12 @@ def _build_body(mesh: Mesh | None, stages: tuple, capacities: tuple,
                     order = jnp.argsort(~mine, axis=1)[:, :cap_slots]
                     rows = jnp.take_along_axis(lclip % n_local, order, axis=1)
                     ok = jnp.take_along_axis(mine, order, axis=1)
-                    dv = store.get("doc_valid")
+                    dv = validity(store)
                     if dv is not None:
                         ok = ok & jnp.take(dv, rows, axis=0)
-                    s = _score_candidates(store[stage.vector],
-                                          store.get(stage.vector + "_mask"),
-                                          q, q_mask, rows, ok)
+                    s = _score_candidates(
+                        *rerank_arrays(store, stage.vector),
+                        q, q_mask, rows, ok)
                     # merge shards/segments: each candidate scored real on
                     # exactly one (shard, segment); NEG everywhere else
                     parts_v.append(jax.lax.all_gather(s, axes, axis=1,
@@ -325,11 +320,11 @@ def make_search_fn(mesh: Mesh | None, stages: tuple, n_docs: int,
 
     def fn(store, q, q_mask):
         src = dict(store)
-        dv = src.pop("doc_valid", None)
+        dv = src.pop(VALIDITY_KEY, None)
         if dv is None:
             dv = jnp.ones((n_docs,), bool)
         padded = {k: _pad_rows(v, n_docs, cap) for k, v in src.items()}
-        padded["doc_valid"] = _pad_rows(dv, n_docs, cap)  # pads False
+        padded[VALIDITY_KEY] = _pad_rows(dv, n_docs, cap)  # pads False
         return body((padded,), q, q_mask)
 
     return jax.jit(fn)

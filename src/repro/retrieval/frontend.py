@@ -145,9 +145,10 @@ class ServingFrontend:
 
     def _query_dim(self) -> int:
         """Query embedding dim = widest stored dim among the cascade's
-        vectors (Matryoshka stages slice the query DOWN to theirs)."""
-        vec_dims = self.retriever.store.vec_dims()
-        return max(vec_dims[s.vector] for s in self.stages)
+        vectors (Matryoshka stages slice the query DOWN to theirs) —
+        read off the store's typed ``VectorSchema`` records."""
+        schema = self.retriever.store.schema()
+        return max(schema[s.vector].vec_dim for s in self.stages)
 
     # ------------------------------------------------------------------
     # direct path (one request = one dispatch, still bucketed)

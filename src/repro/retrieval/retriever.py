@@ -6,7 +6,7 @@ SEGMENTED, capacity-padded corpus (``repro.retrieval.segments``) and caches
 the jitted search callable per ``(stages, segment capacities, mesh)`` —
 NOT per exact corpus content or fill level.
 
-The no-retrace contract spans BOTH serving axes:
+The no-retrace contract spans ALL THREE serving axes:
 
 - **corpus mutation** — ``upsert`` writes into preallocated padding and
   ``delete`` flips validity bits, so steady-state mutation + search
@@ -20,6 +20,12 @@ The no-retrace contract spans BOTH serving axes:
   the bucketed segment capacities), warms each bucket once, and after that
   arbitrary traffic with ``B``/``Q`` under the bucket maxima is pure
   dispatch.
+- **ingestion** — ``ingest`` (backed by an attached
+  ``repro.retrieval.ingest.IngestPipeline``) fuses hygiene -> pooling ->
+  quantisation -> segment write under one jit per power-of-two ingest
+  BATCH BUCKET, so steady-state indexing of raw encoder output is pure
+  dispatch too — mixed batch sizes land in warmed buckets instead of
+  retracing.
 
 Either way, assert with ``Retriever.trace_count()`` deltas — every serving
 jit body calls ``tracing.record_trace()``, so corpus-shape AND query-shape
@@ -46,6 +52,7 @@ import jax.numpy as jnp
 
 from repro.core import multistage as MST
 from repro.retrieval import engine, tracing
+from repro.retrieval.frontend import ServingFrontend
 from repro.retrieval.segments import SegmentedStore
 from repro.retrieval.store import VectorStore
 
@@ -53,14 +60,18 @@ from repro.retrieval.store import VectorStore
 class Retriever:
     def __init__(self, store, mesh=None,
                  rerank_overcommit: int = 8, scan_chunk: int = 0,
-                 place: bool = True, capacity: int | None = None):
+                 place: bool = True, capacity: int | None = None,
+                 ingest=None):
         """``store`` is a built ``VectorStore`` (wrapped as segment 0 —
         exact-fit by default, or preallocated to ``capacity`` slots for
         ingestion headroom) or an existing ``SegmentedStore``. place=True
-        lays the corpus out with the mesh's shardings once, not per call."""
+        lays the corpus out with the mesh's shardings once, not per call.
+        ``ingest`` is an optional ``IngestPipeline`` enabling
+        ``Retriever.ingest`` (raw pages in, stable ids out)."""
         self.mesh = mesh
         self.rerank_overcommit = rerank_overcommit
         self.scan_chunk = scan_chunk
+        self._ingest = ingest
         self._fns: dict = {}
         n_shards = engine._mesh_shards(mesh)
         if isinstance(store, VectorStore):
@@ -93,6 +104,20 @@ class Retriever:
         fits in existing segment headroom."""
         return self.store.add_pages(batch)
 
+    def ingest(self, pages, token_types) -> np.ndarray:
+        """Device-resident ingestion: raw encoder output ``[N, S, d]`` in,
+        stable page ids out. One fused dispatch per batch (hygiene ->
+        pooling -> quantise -> segment write under a single jit per ingest
+        batch bucket), no host round-trip of the indexed arrays. Requires
+        an ``IngestPipeline`` attached at construction."""
+        if self._ingest is None:
+            raise ValueError(
+                "no ingest pipeline attached — construct the retriever as "
+                "Retriever(store, ingest=IngestPipeline.for_config(cfg, "
+                "...)) to ingest raw pages (or use upsert(build_store(...))"
+                " for host-driven batches)")
+        return self._ingest.ingest(self.store, pages, token_types)
+
     def delete(self, ids) -> int:
         """Invalidate pages by stable id (validity masking; no data moves).
         Returns the number of pages deleted."""
@@ -113,7 +138,6 @@ class Retriever:
         """A ``ServingFrontend`` over this retriever: shape-bucketed query
         padding, micro-batching, optional result cache. See
         ``repro.retrieval.frontend`` for the knobs."""
-        from repro.retrieval.frontend import ServingFrontend
         return ServingFrontend(self, stages, **kwargs)
 
     # ------------------------------------------------------------------

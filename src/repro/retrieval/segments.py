@@ -24,6 +24,19 @@ makes the corpus MUTABLE without ever changing array shapes:
 Search-side, the engine scans each segment per stage and merges candidates
 in a global SLOT id space (segment offsets = cumulative capacities);
 ``slot_doc_ids`` translates slots back to stable user page ids.
+
+Which arrays a segment holds — named vectors, their per-token masks, int8
+codes + scales, the per-document validity mask — is described by the typed
+``repro.retrieval.store.VectorSchema``; this module never interprets key
+strings itself (``VALIDITY_KEY`` and the accessors are imported from the
+store module, the one owner of that layout).
+
+The device write primitives come in two flavours: ``add_pages`` copies an
+already-indexed ``VectorStore`` batch into headroom (one
+``dynamic_update_slice`` per array), while the device-resident
+``repro.retrieval.ingest.IngestPipeline`` computes AND writes a raw batch
+in one fused jit, using the shared ``reserve``/``commit`` slot
+bookkeeping below.
 """
 from __future__ import annotations
 
@@ -34,7 +47,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.retrieval.store import VectorStore, base_vectors
+from repro.retrieval.store import (VALIDITY_KEY, VectorSchema, VectorStore)
 from repro.retrieval.tracing import record_trace
 
 SEGMENT_MIN_CAPACITY = 64
@@ -136,8 +149,8 @@ class SegmentedStore:
             seg.vectors[k] = _write_block(seg.vectors[k],
                                           v.astype(seg.vectors[k].dtype),
                                           jnp.int32(0))
-        seg.vectors["doc_valid"] = _write_block(
-            seg.vectors["doc_valid"], jnp.ones((n,), bool), jnp.int32(0))
+        seg.vectors[VALIDITY_KEY] = _write_block(
+            seg.vectors[VALIDITY_KEY], jnp.ones((n,), bool), jnp.int32(0))
         seg.doc_ids[:n] = np.arange(n)
         seg.n_docs = n
         out.next_id = n
@@ -159,11 +172,11 @@ class SegmentedStore:
     def _alloc_segment(self, like_vectors: dict, capacity: int) -> Segment:
         vecs = {}
         for k, v in like_vectors.items():
-            if k == "doc_valid":
+            if k == VALIDITY_KEY:
                 continue
             vecs[k] = self._place(jnp.zeros((capacity,) + v.shape[1:],
                                             v.dtype))
-        vecs["doc_valid"] = self._place(jnp.zeros((capacity,), bool))
+        vecs[VALIDITY_KEY] = self._place(jnp.zeros((capacity,), bool))
         seg = Segment(vecs, capacity, 0, np.full((capacity,), -1, np.int64))
         self.segments.append(seg)
         return seg
@@ -171,6 +184,45 @@ class SegmentedStore:
     # ------------------------------------------------------------------
     # mutation
     # ------------------------------------------------------------------
+
+    def reserve(self, n: int, like: dict | None = None,
+                min_free: int | None = None) -> tuple:
+        """Find (or allocate) room for ``n`` new pages at the tail of the
+        corpus. Returns ``(segment index, start slot)`` — the slots are
+        NOT claimed until ``commit`` runs, so a failed device write leaves
+        the store untouched. Batches are never split: when the last
+        segment's free tail is too small, a NEW segment is allocated at a
+        bucketed power-of-two capacity (``like`` supplies the layout when
+        the store is still empty). ``min_free`` asks for extra tail
+        headroom beyond ``n`` — the ingest pipeline writes full
+        bucket-wide blocks, so its block must fit even though only ``n``
+        slots are claimed."""
+        need = max(n, min_free or 0)
+        seg = self.segments[-1] if self.segments else None
+        if seg is None or seg.free < need:
+            if seg is None and like is None:
+                raise ValueError("reserve() on an empty store needs `like` "
+                                 "arrays for the segment layout")
+            seg = self._alloc_segment(
+                like if like is not None else self.segments[-1].vectors,
+                bucket_capacity(need, self.n_shards))
+        return len(self.segments) - 1, seg.n_docs
+
+    def commit(self, seg_i: int, new_vectors: dict, n: int) -> np.ndarray:
+        """Adopt device-side written arrays and do the host bookkeeping
+        shared by ``add_pages`` and the ingest pipeline: assign stable
+        page ids to the ``n`` reserved tail slots, advance the high-water
+        mark, bump the generation. Returns the assigned ids."""
+        seg = self.segments[seg_i]
+        seg.vectors = new_vectors
+        start = seg.n_docs
+        ids = np.arange(self.next_id, self.next_id + n, dtype=np.int64)
+        seg.doc_ids[start:start + n] = ids
+        seg.n_docs = start + n
+        self.next_id += n
+        self._slot_ids = None
+        self.generation += 1
+        return ids
 
     def add_pages(self, batch: VectorStore) -> np.ndarray:
         """Ingest an indexed batch (the output of ``build_store`` /
@@ -182,30 +234,21 @@ class SegmentedStore:
         fixed batch size reuses one write executable per vector name)."""
         n = batch.n_docs
         if self.segments:
-            names = {k for k in self.segments[0].vectors if k != "doc_valid"}
+            names = {k for k in self.segments[0].vectors if k != VALIDITY_KEY}
             if set(batch.vectors) != names:
                 raise ValueError(
                     f"batch vectors {sorted(batch.vectors)} != store "
                     f"vectors {sorted(names)}")
-        seg = self.segments[-1] if self.segments else None
-        if seg is None or seg.free < n:
-            seg = self._alloc_segment(
-                batch.vectors, bucket_capacity(n, self.n_shards))
-        start = seg.n_docs
+        seg_i, start = self.reserve(n, like=batch.vectors)
+        seg = self.segments[seg_i]
         s32 = jnp.int32(start)
         for k, v in batch.vectors.items():
             seg.vectors[k] = _write_block(
                 seg.vectors[k], jnp.asarray(v).astype(seg.vectors[k].dtype),
                 s32)
-        seg.vectors["doc_valid"] = _write_block(
-            seg.vectors["doc_valid"], jnp.ones((n,), bool), s32)
-        ids = np.arange(self.next_id, self.next_id + n, dtype=np.int64)
-        seg.doc_ids[start:start + n] = ids
-        seg.n_docs = start + n
-        self.next_id += n
-        self._slot_ids = None
-        self.generation += 1
-        return ids
+        seg.vectors[VALIDITY_KEY] = _write_block(
+            seg.vectors[VALIDITY_KEY], jnp.ones((n,), bool), s32)
+        return self.commit(seg_i, seg.vectors, n)
 
     def delete(self, ids) -> int:
         """Invalidate pages by stable id. Only flips ``doc_valid`` bits —
@@ -223,8 +266,8 @@ class SegmentedStore:
             width = bucket_capacity(slots.size, min_capacity=DELETE_BUCKET_MIN)
             padded = np.full((width,), seg.capacity, np.int32)  # OOB sentinel
             padded[:slots.size] = slots
-            seg.vectors["doc_valid"] = _invalidate(
-                seg.vectors["doc_valid"], jnp.asarray(padded))
+            seg.vectors[VALIDITY_KEY] = _invalidate(
+                seg.vectors[VALIDITY_KEY], jnp.asarray(padded))
             seg.doc_ids[slots] = -1
             deleted += int(slots.size)
         if deleted:
@@ -239,7 +282,7 @@ class SegmentedStore:
         capacities no longer apply."""
         if not self.segments:
             return self
-        names = [k for k in self.segments[0].vectors if k != "doc_valid"]
+        names = [k for k in self.segments[0].vectors if k != VALIDITY_KEY]
         like = {k: self.segments[0].vectors[k] for k in names}
         rows = {k: [] for k in names}
         ids = []
@@ -261,8 +304,8 @@ class SegmentedStore:
                 block = jnp.concatenate(rows[k], axis=0)
                 seg.vectors[k] = _write_block(
                     seg.vectors[k], block.astype(seg.vectors[k].dtype), s32)
-            seg.vectors["doc_valid"] = _write_block(
-                seg.vectors["doc_valid"], jnp.ones((total,), bool), s32)
+            seg.vectors[VALIDITY_KEY] = _write_block(
+                seg.vectors[VALIDITY_KEY], jnp.ones((total,), bool), s32)
             seg.doc_ids[:total] = np.concatenate(ids)
         seg.n_docs = total
         self._slot_ids = None
@@ -324,13 +367,15 @@ class SegmentedStore:
                     [seg.doc_ids for seg in self.segments])
         return self._slot_ids
 
+    def schema(self) -> VectorSchema:
+        """Typed layout of the live corpus (``VectorStore.schema`` twin)."""
+        return VectorSchema.infer(
+            self.segments[0].vectors if self.segments else {})
+
     def dims(self) -> dict:
-        vecs = self.segments[0].vectors if self.segments else {}
-        return {k: (v.shape[1] if v.ndim == 3 else 1)
-                for k, v in base_vectors(vecs).items()}
+        return self.schema().dims()
 
     def vec_dims(self) -> dict:
         """Stored embedding dim per named vector (``VectorStore.vec_dims``
         twin, so ``qps_cost_model`` works from a live corpus too)."""
-        vecs = self.segments[0].vectors if self.segments else {}
-        return {k: v.shape[-1] for k, v in base_vectors(vecs).items()}
+        return self.schema().vec_dims()

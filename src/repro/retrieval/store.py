@@ -1,46 +1,253 @@
-"""Named-vector page store (the Qdrant-collection analogue, in JAX arrays).
+"""Named-vector page store + the typed ``VectorSchema`` that describes it.
 
-Each page is stored under named vectors (paper §2.4):
-  initial        [N, D, d]   full multi-vector set  (+ initial_mask [N, D])
-  mean_pooling   [N, D', d]  model-aware pooled     (+ mask)
-  experimental   [N, D'', d] smoothed variant       (+ mask)
+Each page is stored under named vectors (the Qdrant-collection analogue,
+paper §2.4):
+  initial        [N, D, d]   full multi-vector set
+  mean_pooling   [N, D', d]  model-aware pooled
+  experimental   [N, D'', d] smoothed variant
   global_pooling [N, d]      one vector per page
+
+On disk (well, in device memory) every named vector may carry COMPANION
+arrays — a per-token validity mask, int8 codes and their per-vector scales —
+and the store as a whole may carry a per-document validity mask. Those
+companions live in the flat ``vectors`` dict under suffixed keys, but the
+suffix convention is an implementation detail OWNED BY THIS MODULE: every
+other consumer (the engine's scan/rerank array resolution, segment
+allocation, the serving frontend's query-dim inference, the multistage
+oracle, launch cells) goes through ``VectorSchema`` / the accessor helpers
+below instead of re-deriving ``name + "_mask"``-style strings.
 
 Token hygiene (§2.1) is applied AT INDEX TIME: the masks mark visual tokens
 only, and masked slots are zeroed. Optional int8 storage (per-vector
 symmetric scales) halves corpus HBM bytes for the scan stage.
+
+``build_store`` / ``quantize_store`` are thin wrappers over the
+device-resident ``repro.retrieval.ingest.IngestPipeline`` (the fused
+hygiene -> pooling -> quantize path); they keep the original eager-call
+signatures for existing callers.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import hygiene as HG
-from repro.core import pooling as PL
-from repro.core.pooling import global_pool
 from repro.kernels.maxsim.ops import quantize_int8
 
+# ---------------------------------------------------------------------------
+# key-suffix schema — THE one place these strings exist
+# ---------------------------------------------------------------------------
+
+VALIDITY_KEY = "doc_valid"           # [N] bool, per-document liveness
+_MASK, _INT8, _SCALE = "_mask", "_int8", "_scale"
+
+
+def mask_key(name: str) -> str:
+    """Key of ``name``'s per-token validity mask ([N, D] bool)."""
+    return name + _MASK
+
+
+def codes_key(name: str) -> str:
+    """Key of ``name``'s int8 quantised codes (same shape, int8)."""
+    return name + _INT8
+
+
+def scale_key(name: str) -> str:
+    """Key of ``name``'s per-vector dequantisation scales ([N, D] f32)."""
+    return name + _SCALE
+
+
+def is_companion(key: str) -> bool:
+    """True for keys that describe another vector (masks, scales, codes)
+    or the store itself (``doc_valid``) rather than naming a vector."""
+    return (key == VALIDITY_KEY or key.endswith(_MASK)
+            or key.endswith(_SCALE) or key.endswith(_INT8))
+
+
+# ---------------------------------------------------------------------------
+# typed schema
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class NamedVector:
+    """One named vector's layout record.
+
+    role      "multi" ([N, D, d] per-token sets) or "single" ([N, d])
+    vec_dim   stored embedding dim d
+    n_vecs    vectors per page D (1 for role == "single")
+    quantized int8 codes + scales indexed alongside (or instead of) floats
+    has_float the float/bf16 copy is present (False once
+              ``quantize_store(stages=...)`` dropped a dead copy)
+    has_mask  a per-token validity mask is indexed with it
+    """
+    name: str
+    role: str
+    vec_dim: int
+    n_vecs: int
+    quantized: bool
+    has_float: bool = True
+    has_mask: bool = False
+
+    @property
+    def key(self) -> str:
+        """Key of the representative array (float copy when present,
+        otherwise the int8 codes)."""
+        return self.name if self.has_float else codes_key(self.name)
+
+
+@dataclass(frozen=True)
+class VectorSchema:
+    """Typed description of a raw ``vectors`` dict: which named vectors
+    exist, their geometry, and which companions ride along. Inferred from
+    keys + shapes only, so it works on concrete arrays, tracers, and
+    ``ShapeDtypeStruct`` specs alike."""
+    vectors: tuple          # NamedVector records, sorted by name
+    has_validity: bool = False
+
+    @classmethod
+    def infer(cls, vectors: dict) -> "VectorSchema":
+        out = []
+        for k in sorted(vectors):
+            if is_companion(k):
+                continue
+            v = vectors[k]
+            out.append(NamedVector(
+                name=k,
+                role="multi" if v.ndim == 3 else "single",
+                vec_dim=v.shape[-1],
+                n_vecs=v.shape[1] if v.ndim == 3 else 1,
+                quantized=codes_key(k) in vectors,
+                has_float=True,
+                has_mask=mask_key(k) in vectors))
+        # quantised names whose float copy was dropped: codes are the
+        # representative array
+        for k in sorted(vectors):
+            if not k.endswith(_INT8):
+                continue
+            base = k[: -len(_INT8)]
+            if base in vectors:
+                continue
+            v = vectors[k]
+            out.append(NamedVector(
+                name=base,
+                role="multi" if v.ndim == 3 else "single",
+                vec_dim=v.shape[-1],
+                n_vecs=v.shape[1] if v.ndim == 3 else 1,
+                quantized=True,
+                has_float=False,
+                has_mask=mask_key(base) in vectors))
+        return cls(tuple(sorted(out, key=lambda nv: nv.name)),
+                   has_validity=VALIDITY_KEY in vectors)
+
+    def __iter__(self):
+        return iter(self.vectors)
+
+    def __contains__(self, name: str) -> bool:
+        return any(nv.name == name for nv in self.vectors)
+
+    def __getitem__(self, name: str) -> NamedVector:
+        for nv in self.vectors:
+            if nv.name == name:
+                return nv
+        raise KeyError(name)
+
+    @property
+    def names(self) -> tuple:
+        return tuple(nv.name for nv in self.vectors)
+
+    def dims(self) -> dict:
+        """Vectors-per-page D per named vector (1 for single-vector)."""
+        return {nv.name: nv.n_vecs for nv in self.vectors}
+
+    def vec_dims(self) -> dict:
+        """Stored embedding dim per named vector (int8 codes report the
+        name they quantise) — the per-stage dims ``qps_cost_model`` bills
+        and the serving frontend's query-dim inference consumes."""
+        return {nv.name: nv.vec_dim for nv in self.vectors}
+
+    def keys_for(self, name: str) -> tuple:
+        """Every dict key belonging to ``name`` (representative + masks +
+        codes + scales), in a stable order."""
+        nv = self[name]
+        keys = []
+        if nv.has_float:
+            keys.append(nv.name)
+        if nv.has_mask:
+            keys.append(mask_key(nv.name))
+        if nv.quantized:
+            keys += [codes_key(nv.name), scale_key(nv.name)]
+        return tuple(keys)
+
+
+# ---------------------------------------------------------------------------
+# dict accessors (all schema consumers funnel through these)
+# ---------------------------------------------------------------------------
 
 def base_vectors(vectors: dict) -> dict:
     """Collapse a raw vectors dict to {base name: representative array}:
-    skips ``_mask``/``_scale``/``doc_valid`` companions and folds int8
-    codes onto the name they quantise (the float copy wins when both
-    exist). The ONE place that knows the store's key-suffix schema —
-    ``dims``/``vec_dims`` here, ``SegmentedStore.dims`` and the serving
-    frontend's query-dim inference all go through it."""
-    out: dict = {}
-    for k, v in vectors.items():
-        if k == "doc_valid" or k.endswith("_mask") or k.endswith("_scale"):
-            continue
-        if k.endswith("_int8"):
-            out.setdefault(k[:-len("_int8")], v)
-        else:
-            out[k] = v                       # float copy wins over codes
+    skips companion arrays and folds int8 codes onto the name they quantise
+    (the float copy wins when both exist)."""
+    sch = VectorSchema.infer(vectors)
+    return {nv.name: vectors[nv.key] for nv in sch}
+
+
+def validity(vectors: dict):
+    """The per-document liveness mask ([N] bool), or None for an
+    always-live (non-segmented) store."""
+    return vectors.get(VALIDITY_KEY)
+
+
+def scan_arrays(vectors: dict, name: str) -> tuple:
+    """Resolve the scan stage's arrays for ``name``: (vecs, mask, scales).
+
+    int8 codes + per-vector scales are preferred when indexed — the scan
+    stage is memory-bound, so streaming 1 byte/coord halves its roofline
+    term vs bf16. A quantised store may have DROPPED the float copy
+    entirely (``quantize_store(stages=...)``), so only fall back to the
+    float array when the codes are absent."""
+    mask = vectors.get(mask_key(name))
+    if codes_key(name) in vectors:
+        return vectors[codes_key(name)], mask, vectors[scale_key(name)]
+    return vectors[name], mask, None
+
+
+def rerank_arrays(vectors: dict, name: str) -> tuple:
+    """Resolve a rerank stage's arrays for ``name``: (float vecs, mask).
+    Rerank stages always score the float copy (gather + exact MaxSim)."""
+    return vectors[name], vectors.get(mask_key(name))
+
+
+def companion_entries(vectors: dict, source: str, name: str) -> dict:
+    """Companion arrays a vector DERIVED from ``source`` (same [N, D]
+    geometry, e.g. a Matryoshka dim-truncation) should be indexed with,
+    re-keyed for ``name``."""
+    out = {}
+    if mask_key(source) in vectors:
+        out[mask_key(name)] = vectors[mask_key(source)]
     return out
 
+
+def quantize_vectors(vectors: dict, names: tuple,
+                     stages: tuple | None = None) -> dict:
+    """Add int8 codes + scales for ``names``; with ``stages`` given, drop
+    the float copy of every quantised name no later (rerank) stage scores.
+    The shared policy behind ``quantize_store`` and the ingest pipeline's
+    in-jit quantisation (it traces cleanly)."""
+    vecs = dict(vectors)
+    rerank_names = {s.vector for s in (stages or ())[1:]}
+    for name in names:
+        codes, scales = quantize_int8(vecs[name])
+        vecs[codes_key(name)] = codes
+        vecs[scale_key(name)] = scales
+        if stages is not None and name not in rerank_names:
+            del vecs[name]                   # dead float copy: scan reads
+    return vecs
+
+
+# ---------------------------------------------------------------------------
+# the store
+# ---------------------------------------------------------------------------
 
 @dataclass
 class VectorStore:
@@ -48,14 +255,14 @@ class VectorStore:
     n_docs: int
     store_dtype: str = "bfloat16"
 
+    def schema(self) -> VectorSchema:
+        return VectorSchema.infer(self.vectors)
+
     def dims(self) -> dict:
-        return {k: (v.shape[1] if v.ndim == 3 else 1)
-                for k, v in base_vectors(self.vectors).items()}
+        return self.schema().dims()
 
     def vec_dims(self) -> dict:
-        """Stored embedding dim per named vector (int8 codes report the
-        name they quantise) — the per-stage dims ``qps_cost_model`` bills."""
-        return {k: v.shape[-1] for k, v in base_vectors(self.vectors).items()}
+        return self.schema().vec_dims()
 
 
 def build_store(cfg, page_embeds: jax.Array, token_types: jax.Array,
@@ -67,36 +274,19 @@ def build_store(cfg, page_embeds: jax.Array, token_types: jax.Array,
     page_embeds [N, S, d] raw encoder output (special tokens included);
     token_types [S] or [N, S]. Hygiene strips non-visual tokens; pooling is
     model-aware per cfg (RetrieverConfig).
+
+    Thin wrapper over the device-resident ``IngestPipeline`` (reference-
+    pooling mode, so results are the historical pure-jnp semantics): one
+    fused jit per (cfg, batch bucket) — repeated calls at steady-state
+    batch shapes are pure dispatch.
     """
-    N, S, d = page_embeds.shape
-    if token_types.ndim == 1:
-        token_types = jnp.broadcast_to(token_types[None], (N, S))
-    emb, keep = HG.apply_hygiene(page_embeds, token_types)
-
-    # physically separate visual tokens (static layout: specials lead)
-    n_vis = cfg.n_patches
-    vis = emb[:, S - n_vis:]                      # [N, n_vis, d]
-    vis_mask = keep[:, S - n_vis:]
-
-    pooled, pooled_mask = PL.pool_pages(cfg, vis, vis_mask,
-                                        (jnp.full((N,), cfg.grid_h)
-                                         if h_eff is None else h_eff))
-    vectors = {
-        "initial": vis.astype(store_dtype),
-        "initial_mask": vis_mask,
-        "mean_pooling": pooled.astype(store_dtype),
-        "mean_pooling_mask": pooled_mask,
-        "global_pooling": jax.vmap(global_pool)(vis, vis_mask).astype(
-            store_dtype),
-    }
-    if experimental_smooth:
-        cfg2 = dataclasses.replace(cfg, smooth=experimental_smooth)
-        exp, exp_mask = PL.pool_pages(cfg2, vis, vis_mask,
-                                      (jnp.full((N,), cfg.grid_h)
-                                       if h_eff is None else h_eff))
-        vectors["experimental"] = exp.astype(store_dtype)
-        vectors["experimental_mask"] = exp_mask
-    return VectorStore(vectors, N, jnp.dtype(store_dtype).name)
+    # store -> ingest layering: ingest BUILDS ON the store types defined
+    # here, so the wrapper imports it at call time (no import cycle)
+    from repro.retrieval.ingest import IngestPipeline
+    pipe = IngestPipeline.for_config(
+        cfg, store_dtype=store_dtype, use_kernel=False,
+        experimental_smooth=experimental_smooth)
+    return pipe.index(page_embeds, token_types, h_eff=h_eff)
 
 
 def quantize_store(store: VectorStore, names=("initial",),
@@ -105,19 +295,12 @@ def quantize_store(store: VectorStore, names=("initial",),
     halves scan-stage HBM bytes; composable with pooling per paper §7(iii)).
 
     The serving scan always prefers the int8 codes once they exist
-    (``engine._scan_arrays``), which makes the float copy DEAD WEIGHT unless
+    (``scan_arrays``), which makes the float copy DEAD WEIGHT unless
     something else still reads it. Pass the cascade as ``stages`` to drop
     the float copy of every quantised name that no later (rerank) stage
     scores — that is what actually halves (rather than doubles) the
     vector's HBM. The default ``stages=None`` keeps the float copy, for the
     ref-oracle path (``multistage.search`` scores float arrays) and for
     stores shared across cascades."""
-    vecs = dict(store.vectors)
-    rerank_names = {s.vector for s in (stages or ())[1:]}
-    for name in names:
-        codes, scales = quantize_int8(vecs[name].astype(jnp.float32))
-        vecs[name + "_int8"] = codes
-        vecs[name + "_scale"] = scales
-        if stages is not None and name not in rerank_names:
-            del vecs[name]                   # dead float copy: scan reads
-    return VectorStore(vecs, store.n_docs, store.store_dtype)
+    return VectorStore(quantize_vectors(store.vectors, names, stages),
+                       store.n_docs, store.store_dtype)

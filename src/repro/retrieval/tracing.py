@@ -1,10 +1,10 @@
 """Trace-count hook for the no-retrace contract.
 
-Every repro-owned jitted function on the serving mutation/search path calls
-``record_trace()`` from inside its traced body. The call is a Python side
-effect, so it fires exactly once per trace (never per execution) — and a
-jit retraces per DISTINCT ARGUMENT SHAPE, so the counter covers BOTH halves
-of the contract:
+Every repro-owned jitted function on the serving mutation/search/ingest
+path calls ``record_trace()`` from inside its traced body. The call is a
+Python side effect, so it fires exactly once per trace (never per
+execution) — and a jit retraces per DISTINCT ARGUMENT SHAPE, so the
+counter covers ALL THREE axes of the contract:
 
 - **corpus-shape retraces** — a mutation that changes segment layout
   (new-segment allocation, ``compact()``) forces a retrace; steady-state
@@ -13,11 +13,16 @@ of the contract:
   forces a retrace of the same cascade body; bucketed traffic through
   ``repro.retrieval.frontend.ServingFrontend`` must not (after each
   bucket's one warm-up trace).
+- **ingest-shape retraces** — the device-resident
+  ``repro.retrieval.ingest.IngestPipeline`` pads batches into power-of-two
+  ingest buckets; after each bucket's one warm-up trace, mixed batch
+  sizes must index + write as pure dispatch.
 
-After warm-up, a steady-state upsert/delete/search/traffic sequence must
-leave the counter unchanged. Tests, ``benchmarks/run.py dynamic_corpus``
-and ``benchmarks/run.py serving_tail_latency`` assert ``trace_count()``
-deltas == 0 (the latter fails CI on a nonzero steady-state count).
+After warm-up, a steady-state upsert/delete/search/traffic/ingest sequence
+must leave the counter unchanged. Tests, ``benchmarks/run.py
+dynamic_corpus``, ``serving_tail_latency`` and ``ingest_throughput``
+assert ``trace_count()`` deltas == 0 (the latter two fail CI on a nonzero
+steady-state count).
 """
 from __future__ import annotations
 

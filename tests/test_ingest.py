@@ -1,0 +1,332 @@
+"""Device-resident ingest pipeline + typed vector schema (ISSUE 4).
+
+Contracts under test:
+
+- pipeline parity: ``IngestPipeline`` (reference-pooling mode) writing
+  into segment headroom leaves the segment arrays BITWISE identical to
+  the legacy ``build_store`` (+ ``quantize_store``) + ``upsert`` path —
+  every named vector, every mask, scales/codes, ``doc_valid`` — across
+  all three pooling geometries (grid / tiles / dynamic), int8 on and off;
+- the fused-operator (kernel) mode matches the reference semantics to
+  float tolerance, including the dynamic geometry's padded pooled rows;
+- zero-retrace ingestion: after one warm-up per power-of-two batch
+  bucket, MIXED batch sizes ingest + search without a single new trace;
+- ``VectorSchema`` round-trips a quantised store: records carry
+  role/dims/quantised flags, ``keys_for`` enumerates exactly the dict
+  keys, dims()/vec_dims() match the legacy suffix-derived values;
+- satellites: ``quantize_int8`` store-dtype/chunked parity (the
+  peak-memory fix must not change a single code), and the
+  ``token_types`` visual-tail validation raising on misordered layouts.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import RetrieverConfig
+from repro.core import multistage as MST
+from repro.core.hygiene import PAD, SPECIAL, VISUAL
+from repro.kernels.maxsim.ops import quantize_int8
+from repro.retrieval import tracing
+from repro.retrieval.ingest import IngestPipeline, batch_bucket
+from repro.retrieval.retriever import Retriever
+from repro.retrieval.store import (VectorSchema, build_store, codes_key,
+                                   mask_key, quantize_store, scale_key)
+
+_BASE = dict(d_model=64, n_layers=1, n_heads=1, d_ff=64, out_dim=16,
+             n_special=3, max_query_tokens=8)
+MINI = {
+    "grid": RetrieverConfig(name="mini-grid", geometry="grid", grid_h=8,
+                            grid_w=8, smooth="conv1d", **_BASE),
+    "tiles": RetrieverConfig(name="mini-tiles", geometry="tiles", n_tiles=4,
+                             tile_patches=8, smooth="none", **_BASE),
+    # grid_h < max_rows: the store pads pooled rows with a validity mask
+    "dynamic": RetrieverConfig(name="mini-dyn", geometry="dynamic", grid_h=6,
+                               grid_w=6, max_rows=8, smooth="gaussian",
+                               **_BASE),
+}
+
+
+def _pages(cfg, n, seed):
+    r = np.random.default_rng(seed)
+    x = r.normal(size=(n, cfg.seq_len, cfg.out_dim)).astype(np.float32)
+    return jnp.asarray(x / np.linalg.norm(x, axis=-1, keepdims=True))
+
+
+def _types(cfg):
+    return jnp.asarray([SPECIAL] * cfg.n_special + [VISUAL] * cfg.n_patches)
+
+
+def _assert_stores_bitwise(r1, r2):
+    assert len(r1.store.segments) == len(r2.store.segments)
+    for s1, s2 in zip(r1.store.segments, r2.store.segments):
+        assert set(s1.vectors) == set(s2.vectors)
+        assert s1.n_docs == s2.n_docs
+        np.testing.assert_array_equal(s1.doc_ids, s2.doc_ids)
+        for k in s1.vectors:
+            np.testing.assert_array_equal(
+                np.asarray(s1.vectors[k], np.float32),
+                np.asarray(s2.vectors[k], np.float32), err_msg=k)
+
+
+@pytest.mark.parametrize("geom", ["grid", "tiles", "dynamic"])
+@pytest.mark.parametrize("int8", [False, True])
+def test_pipeline_parity_bitwise(geom, int8):
+    """Pipeline ingest == build_store(+quantize_store)+upsert, bitwise on
+    every stored array (including never-claimed padding slots)."""
+    cfg = MINI[geom]
+    tt = _types(cfg)
+    stages = MST.two_stage(6, 3)
+    quantize = ("mean_pooling",) if int8 else ()
+    pipe = IngestPipeline.for_config(
+        cfg, use_kernel=False, quantize=quantize,
+        stages=stages if int8 else None)
+
+    def legacy(pages):
+        batch = build_store(cfg, pages, tt)
+        if int8:
+            batch = quantize_store(batch, names=quantize, stages=stages)
+        return batch
+
+    r1 = Retriever(pipe.index(_pages(cfg, 6, 0), tt), capacity=32,
+                   ingest=pipe)
+    r2 = Retriever(legacy(_pages(cfg, 6, 0)), capacity=32)
+    for seed, n in ((1, 5), (2, 11), (3, 3)):   # mixed sizes, two buckets
+        ids1 = r1.ingest(_pages(cfg, n, seed), tt)
+        ids2 = r2.upsert(legacy(_pages(cfg, n, seed)))
+        np.testing.assert_array_equal(ids1, ids2)
+    _assert_stores_bitwise(r1, r2)
+    # and the search results agree bitwise too (same arrays, same fn)
+    q = jnp.asarray(np.random.default_rng(9).normal(
+        size=(2, 4, cfg.out_dim)).astype(np.float32))
+    s1, i1 = r1.search(q, stages=stages)
+    s2, i2 = r2.search(q, stages=stages)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+
+
+@pytest.mark.parametrize("geom", ["grid", "tiles", "dynamic"])
+def test_index_matches_independent_eager_reference(geom):
+    """Independent oracle: the historical eager build_store body
+    (hygiene -> pool_pages -> global_pool -> bf16 cast, re-implemented
+    here from the core primitives) must match the pipeline's fused jit
+    BITWISE. build_store itself now wraps the pipeline, so without this
+    test the parity suite would be self-referential."""
+    import jax
+    from repro.core import hygiene as HG
+    from repro.core import pooling as PL
+
+    cfg = MINI[geom]
+    tt = _types(cfg)
+    pages = _pages(cfg, 5, 11)
+    N, S, _ = pages.shape
+    emb, keep = HG.apply_hygiene(
+        pages, jnp.broadcast_to(jnp.asarray(tt)[None], (N, S)))
+    vis = emb[:, S - cfg.n_patches:]
+    vis_mask = keep[:, S - cfg.n_patches:]
+    pooled, pooled_mask = PL.pool_pages(
+        cfg, vis, vis_mask, jnp.full((N,), cfg.grid_h))
+    expect = {
+        "initial": vis.astype(jnp.bfloat16),
+        mask_key("initial"): vis_mask,
+        "mean_pooling": pooled.astype(jnp.bfloat16),
+        mask_key("mean_pooling"): pooled_mask,
+        "global_pooling": jax.vmap(PL.global_pool)(vis, vis_mask).astype(
+            jnp.bfloat16),
+    }
+    got = IngestPipeline.for_config(cfg, use_kernel=False).index(pages, tt)
+    assert set(got.vectors) == set(expect)
+    for k in expect:
+        np.testing.assert_array_equal(
+            np.asarray(expect[k], np.float32),
+            np.asarray(got.vectors[k], np.float32), err_msg=k)
+
+
+@pytest.mark.parametrize("geom", ["grid", "tiles", "dynamic"])
+def test_kernel_mode_matches_reference(geom):
+    """Fused-operator pooling dispatch == reference semantics to float
+    tolerance; identical store layout (names, shapes, masks)."""
+    cfg = MINI[geom]
+    tt = _types(cfg)
+    ref = IngestPipeline.for_config(cfg, use_kernel=False).index(
+        _pages(cfg, 7, 4), tt)
+    ker = IngestPipeline.for_config(cfg, use_kernel=True).index(
+        _pages(cfg, 7, 4), tt)
+    assert set(ref.vectors) == set(ker.vectors)
+    for k in ref.vectors:
+        a = np.asarray(ref.vectors[k], np.float32)
+        b = np.asarray(ker.vectors[k], np.float32)
+        assert a.shape == b.shape, k
+        if a.dtype == bool or ref.vectors[k].dtype == jnp.bool_:
+            np.testing.assert_array_equal(a, b, err_msg=k)
+        else:
+            np.testing.assert_allclose(a, b, rtol=2e-2, atol=2e-2,
+                                       err_msg=k)
+
+
+def test_dynamic_padded_pooled_rows():
+    """grid_h < max_rows: trailing pooled slots are zero vectors with a
+    False mask, in BOTH pooling dispatch modes."""
+    cfg = MINI["dynamic"]
+    tt = _types(cfg)
+    for uk in (False, True):
+        st = IngestPipeline.for_config(cfg, use_kernel=uk).index(
+            _pages(cfg, 3, 5), tt)
+        mask = np.asarray(st.vectors[mask_key("mean_pooling")])
+        assert mask.shape == (3, cfg.max_rows)
+        assert mask[:, :cfg.grid_h].all() and not mask[:, cfg.grid_h:].any()
+        pooled = np.asarray(st.vectors["mean_pooling"], np.float32)
+        assert (pooled[:, cfg.grid_h:] == 0).all()
+
+
+def test_steady_state_ingestion_never_retraces():
+    """Acceptance: warm one batch per bucket, then mixed batch sizes
+    ingest + search with ZERO new traces of any serving jit."""
+    cfg = MINI["grid"]
+    tt = _types(cfg)
+    stages = MST.two_stage(6, 3)
+    pipe = IngestPipeline.for_config(cfg, use_kernel=True)
+    r = Retriever(pipe.index(_pages(cfg, 4, 0), tt), capacity=256,
+                  ingest=pipe)
+    q = jnp.asarray(np.random.default_rng(8).normal(
+        size=(2, 4, cfg.out_dim)).astype(np.float32))
+    for n in (8, 16):                       # warm the bucket family
+        r.ingest(_pages(cfg, n, n), tt)
+    r.search(q, stages=stages)
+    with tracing.no_retrace("mixed-size ingestion"):
+        for seed, n in enumerate((5, 13, 8, 1, 16, 11)):
+            r.ingest(_pages(cfg, n, 20 + seed), tt)
+            r.search(q, stages=stages)
+    assert r.n_docs == 4 + 24 + 54
+
+
+def test_ingest_beyond_headroom_allocates_bucketed_segment():
+    cfg = MINI["tiles"]
+    tt = _types(cfg)
+    pipe = IngestPipeline.for_config(cfg, use_kernel=False)
+    r = Retriever(pipe.index(_pages(cfg, 4, 0), tt), capacity=8,
+                  ingest=pipe)
+    r.ingest(_pages(cfg, 6, 1), tt)         # 4 + 6 > 8: new segment
+    assert len(r.store.segments) == 2
+    # bucketed power-of-two capacities, each large enough for its batch
+    assert all(c & (c - 1) == 0 for c in r.store.capacities)
+    assert r.store.capacities[1] >= 6
+    assert r.n_docs == 10
+
+
+def test_batch_bucket_family():
+    assert batch_bucket(1) == 8             # min bucket floor
+    assert batch_bucket(8) == 8
+    assert batch_bucket(9) == 16
+    assert batch_bucket(65) == 128
+    assert batch_bucket(256) == 256
+    # bulk one-shot builds: 64-row granules, not pow2 (bounded overhead)
+    assert batch_bucket(257) == 320
+    assert batch_bucket(600) == 640
+    with pytest.raises(ValueError):
+        batch_bucket(0)
+
+
+def test_pipeline_store_mismatch_raises():
+    """A pipeline must not write into segments whose named arrays it
+    does not produce (e.g. quantisation options differ)."""
+    cfg = MINI["grid"]
+    tt = _types(cfg)
+    stages = MST.two_stage(6, 3)
+    pipe_q = IngestPipeline.for_config(
+        cfg, use_kernel=False, quantize=("mean_pooling",), stages=stages)
+    r = Retriever(build_store(cfg, _pages(cfg, 4, 0), tt), capacity=16,
+                  ingest=pipe_q)
+    with pytest.raises(ValueError, match="quantize/stages"):
+        r.ingest(_pages(cfg, 2, 1), tt)
+
+
+def test_visual_tail_validation():
+    """Satellite: token_types must mark the trailing n_patches as visual —
+    misordered layouts raise instead of silently mis-indexing."""
+    cfg = MINI["grid"]
+    pages = _pages(cfg, 2, 0)
+    bad_tail = jnp.asarray([VISUAL] * cfg.n_patches + [SPECIAL] * 3)
+    with pytest.raises(ValueError, match="trailing"):
+        build_store(cfg, pages, bad_tail)
+    # a visual token hiding among the leading specials is dropped today —
+    # that must be loud, not silent
+    leak = np.asarray(_types(cfg)).copy()
+    leak[0] = VISUAL
+    leak[-1] = PAD
+    with pytest.raises(ValueError):
+        build_store(cfg, pages, jnp.asarray(leak))
+
+
+def test_schema_round_trip_quantized_store():
+    """VectorSchema round-trip over a quantised store: typed records
+    describe exactly the dict keys and match the legacy dims."""
+    cfg = MINI["grid"]
+    tt = _types(cfg)
+    stages = MST.two_stage(6, 3)
+    store = quantize_store(build_store(cfg, _pages(cfg, 4, 0), tt),
+                           names=("mean_pooling",), stages=stages)
+    sch = store.schema()
+    assert sch.names == ("global_pooling", "initial", "mean_pooling")
+    ini = sch["initial"]
+    assert (ini.role, ini.n_vecs, ini.vec_dim) == \
+        ("multi", cfg.n_patches, cfg.out_dim)
+    assert ini.has_float and ini.has_mask and not ini.quantized
+    mp = sch["mean_pooling"]
+    assert mp.quantized and not mp.has_float and mp.has_mask
+    assert mp.n_vecs == cfg.n_pooled
+    assert mp.key == codes_key("mean_pooling")
+    gp = sch["global_pooling"]
+    assert gp.role == "single" and gp.n_vecs == 1 and not gp.has_mask
+    # keys_for enumerates exactly the store's keys
+    all_keys = set()
+    for nv in sch:
+        ks = set(sch.keys_for(nv.name))
+        assert ks <= set(store.vectors), nv.name
+        all_keys |= ks
+    assert all_keys == set(store.vectors)
+    assert set(sch.keys_for("mean_pooling")) == {
+        mask_key("mean_pooling"), codes_key("mean_pooling"),
+        scale_key("mean_pooling")}
+    # dims match the legacy suffix-derived reporting
+    assert store.dims() == {"initial": cfg.n_patches,
+                            "mean_pooling": cfg.n_pooled,
+                            "global_pooling": 1}
+    assert store.vec_dims() == {"initial": cfg.out_dim,
+                                "mean_pooling": cfg.out_dim,
+                                "global_pooling": cfg.out_dim}
+
+
+def test_quantize_int8_store_dtype_and_chunked_parity():
+    """Satellite: quantising the bf16 store array directly (no eager f32
+    copy) and row-chunked quantisation are BITWISE the old quantise-a-
+    f32-copy behaviour."""
+    r = np.random.default_rng(3)
+    docs = jnp.asarray(r.normal(size=(21, 6, 16)), jnp.bfloat16)
+    ref_c, ref_s = quantize_int8(docs.astype(jnp.float32))
+    new_c, new_s = quantize_int8(docs)
+    np.testing.assert_array_equal(np.asarray(ref_c), np.asarray(new_c))
+    np.testing.assert_array_equal(np.asarray(ref_s), np.asarray(new_s))
+    for chunk in (8, 5):                    # 21 % chunk != 0: ragged tail
+        ch_c, ch_s = quantize_int8(docs, chunk=chunk)
+        np.testing.assert_array_equal(np.asarray(ref_c), np.asarray(ch_c))
+        np.testing.assert_array_equal(np.asarray(ref_s), np.asarray(ch_s))
+
+
+def test_build_store_wrapper_is_reference_semantics():
+    """build_store (thin wrapper over the pipeline's ref mode) still
+    produces the historical layout and hygiene behaviour."""
+    cfg = MINI["grid"]
+    tt = _types(cfg)
+    pages = _pages(cfg, 5, 7)
+    store = build_store(cfg, pages, tt)
+    assert store.n_docs == 5
+    assert store.store_dtype == "bfloat16"
+    assert store.dims() == {"initial": cfg.n_patches,
+                            "mean_pooling": cfg.n_pooled,
+                            "global_pooling": 1}
+    # hygiene: the stored initial vectors are the visual tail, bf16-cast
+    np.testing.assert_array_equal(
+        np.asarray(store.vectors["initial"], np.float32),
+        np.asarray(pages[:, cfg.n_special:].astype(jnp.bfloat16),
+                   np.float32))
+    assert np.asarray(store.vectors[mask_key("initial")]).all()
