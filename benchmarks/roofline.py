@@ -14,7 +14,16 @@ for train cells MODEL_FLOPS = 3 x 2ND (fwd+bwd); remat recompute, MoE
 dense-expert waste and redundant collectives all push the compiled FLOPs
 above the model's).
 
+Also hosts the CANDIDATE-PATH analytic roofline: per-stage HBM byte bills
+from ``repro.core.multistage.cascade_hbm_bytes`` (corpus read, the [B, N]
+score write, the 3x-billed naive rerank gather) turned into predicted v5e
+seconds for the reference vs fused (scan_topk + rerank_kernel) serving
+cascade. ``benchmarks/run.py rerank_kernel_vs_ref`` prints this predicted
+ratio next to the measured one.
+
 Usage: PYTHONPATH=src python -m benchmarks.roofline [--json PATH] [--md]
+       PYTHONPATH=src python -m benchmarks.roofline --candidate-path \\
+           [--n-docs 1000000] [--batch 16] [--prefetch-k 256] [--top-k 100]
 """
 from __future__ import annotations
 
@@ -87,12 +96,82 @@ def hint(row: dict) -> str:
     return FIX_HINTS[(row["bottleneck"], row["useful_flops_frac"] > 0.3)]
 
 
+def candidate_path_roofline(n_docs: int, q_tokens: int, dim: int,
+                            stages: tuple, store_dims: dict,
+                            vec_dims: dict | None = None, *,
+                            batch: int = 1,
+                            bytes_per_coord: dict | None = None) -> dict:
+    """Predicted HBM-roofline seconds for the serving cascade's candidate
+    path, reference vs fused policy, on the v5e constants.
+
+    Bills the exact terms this PR attacks (via
+    ``repro.core.multistage.cascade_hbm_bytes``): the scan stage's
+    [B, N] score write (vs the streamed top-k's O(B*k*n_chunks)) and the
+    rerank stage's 3x-billed materialised gather (vs the fused kernel's
+    single streamed read). The cascade is memory-bound at serving shapes,
+    so predicted time = bytes / HBM_BW; the returned ``speedup`` is the
+    model's claim for what the fused path buys END TO END — the
+    benchmark's measured ratio is printed next to it.
+    """
+    from repro.core import multistage as MST
+    ref_stages = MST.with_rerank_policy(
+        MST.with_scan_policy(tuple(stages), scan_topk=False),
+        rerank_kernel=False)
+    fused_stages = MST.with_rerank_policy(
+        MST.with_scan_policy(tuple(stages), scan_topk=True),
+        rerank_kernel=True)
+    out = {}
+    for name, st in (("ref", ref_stages), ("fused", fused_stages)):
+        bill = MST.cascade_hbm_bytes(n_docs, q_tokens, dim, st, store_dims,
+                                     vec_dims, batch=batch,
+                                     bytes_per_coord=bytes_per_coord)
+        out[name] = {"bytes": bill["total_bytes"],
+                     "seconds": bill["total_bytes"] / HBM_BW,
+                     "stages": bill["stages"]}
+    out["speedup"] = out["ref"]["bytes"] / max(out["fused"]["bytes"], 1)
+    return out
+
+
+def _candidate_path_cli(args):
+    """Print the predicted candidate-path roofline for a paper-scale
+    ColPali-style cascade (pooled scan D'=32 @ int8-capable bf16, exact
+    rerank D=1024, d=128)."""
+    from repro.core import multistage as MST
+    stages = MST.two_stage(args.prefetch_k, args.top_k)
+    store_dims = {"mean_pooling": 32, "initial": 1024}
+    rep = candidate_path_roofline(args.n_docs, args.q_tokens, 128, stages,
+                                  store_dims, batch=args.batch)
+    print(f"candidate-path roofline @ N={args.n_docs} B={args.batch} "
+          f"(v5e HBM {HBM_BW/1e9:.0f} GB/s)")
+    for name in ("ref", "fused"):
+        r = rep[name]
+        print(f"  {name:5s}: {r['bytes']/1e9:8.3f} GB  "
+              f"{r['seconds']*1e3:8.3f} ms/batch")
+        for st in r["stages"]:
+            print(f"         {st['kind']:6s} {st['stage']:14s} "
+                  f"read={st['read_bytes']/1e6:10.2f} MB  "
+                  f"score_write={st['score_write_bytes']/1e6:8.2f} MB")
+    print(f"  predicted fused speedup: {rep['speedup']:.2f}x")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default=os.path.join(RESULTS,
                                                    "dryrun_single.json"))
     ap.add_argument("--md", action="store_true", help="markdown table")
+    ap.add_argument("--candidate-path", action="store_true",
+                    help="print the analytic candidate-path roofline "
+                         "(ref vs fused cascade) instead of the dry-run "
+                         "analysis")
+    ap.add_argument("--n-docs", type=int, default=1_000_000)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--q-tokens", type=int, default=16)
+    ap.add_argument("--prefetch-k", type=int, default=256)
+    ap.add_argument("--top-k", type=int, default=100)
     args = ap.parse_args()
+    if args.candidate_path:
+        _candidate_path_cli(args)
+        return
     with open(args.json) as f:
         data = json.load(f)
     rows = [r for r in (analyse(v) for v in data.values()) if r]

@@ -30,30 +30,50 @@ from repro.core import maxsim as ms
 
 @dataclass(frozen=True)
 class Stage:
-    """One cascade stage plus its scan-dispatch policy.
+    """One cascade stage plus its dispatch policy.
 
-    ``use_kernel``/``chunk``/``dtype`` only affect the full-corpus scan
-    stage (the first stage) when executed by the serving engine
+    The policy fields only affect execution by the serving engine
     (``repro.retrieval.engine``); this module's ``search`` is the pure-jnp
     oracle and ignores them.
 
-    chunk  > 0 streams the corpus in chunks of that many documents so the
-           scan-stage score intermediate is bounded at [B, chunk, Q, D]
-           instead of [B, N, Q, D] (N is padded up to a chunk multiple).
-    dtype  optional compute-dtype name for the scan (e.g. "bfloat16");
-           default is the query dtype. Applies to float stores only —
-           an int8-quantised scan always dequantises and scores in f32.
+    ``use_kernel``/``chunk``/``dtype``/``scan_topk`` apply to the
+    full-corpus scan stage (the first stage); ``rerank_kernel`` applies to
+    the later (candidate-rerank) stages.
+
+    chunk     > 0 streams the corpus in chunks of that many documents so
+              the scan-stage score intermediate is bounded at
+              [B, chunk, Q, D] instead of [B, N, Q, D] (N is padded up to
+              a chunk multiple).
+    dtype     optional compute-dtype name for the scan (e.g. "bfloat16");
+              default is the query dtype. Applies to float stores only —
+              an int8-quantised scan always dequantises and scores in f32.
+    scan_topk stream a RUNNING per-query top-k across corpus chunks
+              (``kernels.maxsim.ops.maxsim_topk_chunked``) instead of
+              assembling the [B, N] score matrix and selecting globally —
+              the scan stage's HBM score write shrinks from O(B*N) to
+              O(B*k*n_chunks). Single-vector (pooled) scans fall back to
+              score-then-select (one GEMM, no [B, N, Q, D] cliff).
+    rerank_kernel
+              dispatch this rerank stage to the fused gather+MaxSim path
+              (``kernels.maxsim.ops.maxsim_rerank``): candidate tiles
+              stream HBM -> VMEM by scalar-prefetched slot id on TPU (the
+              blockwise jnp twin elsewhere) instead of materialising the
+              [B, L, D, d] gathered copy. Single-vector rerank stages
+              ignore it (one small gather + GEMM, no memory cliff).
     """
     vector: str            # named vector to score with
     k: int                 # candidates kept after this stage
     use_kernel: bool = False
     chunk: int = 0
     dtype: str | None = None
+    scan_topk: bool = False
+    rerank_kernel: bool = False
 
 
 def with_scan_policy(stages: tuple, *, use_kernel: bool | None = None,
                      chunk: int | None = None,
-                     dtype: str | None = None) -> tuple:
+                     dtype: str | None = None,
+                     scan_topk: bool | None = None) -> tuple:
     """Return ``stages`` with the scan (first) stage's dispatch policy
     replaced; ``None`` keeps the existing value."""
     first, rest = stages[0], tuple(stages[1:])
@@ -64,7 +84,20 @@ def with_scan_policy(stages: tuple, *, use_kernel: bool | None = None,
         kw["chunk"] = chunk
     if dtype is not None:
         kw["dtype"] = dtype
+    if scan_topk is not None:
+        kw["scan_topk"] = scan_topk
     return (dataclasses.replace(first, **kw),) + rest
+
+
+def with_rerank_policy(stages: tuple, *,
+                       rerank_kernel: bool | None = None) -> tuple:
+    """Return ``stages`` with every RERANK (non-first) stage's dispatch
+    policy replaced; ``None`` keeps the existing values."""
+    if rerank_kernel is None or len(stages) <= 1:
+        return tuple(stages)
+    return (stages[0],) + tuple(
+        dataclasses.replace(s, rerank_kernel=rerank_kernel)
+        for s in stages[1:])
 
 
 def two_stage(prefetch_k: int = 256, top_k: int = 100,
@@ -108,7 +141,11 @@ def _score_stage(stage: Stage, store: dict, q: jax.Array,
     stage so they can never enter a top-k on merit.
     """
     rerank_arrays, validity = _store_accessors()
-    vecs, mask = rerank_arrays(store, stage.vector)
+    vecs, mask, scales = rerank_arrays(store, stage.vector)
+    if scales is not None:
+        # float copy dropped (quantize_store(stages=...)): the oracle
+        # dequantises eagerly — reference semantics over the whole array
+        vecs = vecs.astype(jnp.float32) * scales[..., None]
     valid = validity(store)
     if vecs.shape[-1] < q.shape[-1]:
         # Matryoshka stage: score with the matching query dim prefix
@@ -194,3 +231,78 @@ def qps_cost_model(n_docs: int, q_tokens: int, dim: int, stages: tuple,
         total += q_tokens * d_vecs * cand * stage_dim
         cand = min(stage.k, cand)
     return total
+
+
+# default corpus chunk for a streamed scan top-k whose stage didn't set one
+# (shared by the engine dispatch and the bytes model below)
+DEFAULT_SCAN_TOPK_CHUNK = 1024
+
+
+def cascade_hbm_bytes(n_docs: int, q_tokens: int, dim: int, stages: tuple,
+                      store_dims: dict, vec_dims: dict | None = None,
+                      *, batch: int = 1,
+                      bytes_per_coord: dict | None = None) -> dict:
+    """Per-stage HBM byte model for one query BATCH through a cascade —
+    the BYTES companion of ``qps_cost_model``'s madds. The scan and
+    candidate paths are memory-bound, so predicted stage time is
+    bytes / HBM bandwidth (``benchmarks.roofline`` turns this into
+    seconds; the candidate-path benchmark prints predicted-vs-measured).
+
+    Billed per stage, reading the dispatch policy off the ``Stage``
+    fields:
+
+    - **scan**: one corpus read (``N * D' * d' * bytes``, plus f32 scale
+      streams for int8 codes) + the score write — ``B * N * 4`` for
+      score-then-select, shrinking to ``B * min(k, chunk) * 8 *
+      n_chunks`` (vals + ids per chunk) when ``scan_topk`` streams a
+      running top-k.
+    - **rerank**: the candidate gather. The naive ``jnp.take`` path
+      bills 3x the candidate bytes (read the rows, write the gathered
+      [B, L, D, d] copy, re-read it for scoring); the fused
+      ``rerank_kernel`` path bills 1x (candidate tiles stream
+      HBM -> VMEM by slot id, no materialised copy). Both add the
+      ``B * L * 4`` score write.
+
+    ``bytes_per_coord`` maps vector name -> stored bytes per coordinate
+    (default 2 = bf16; pass 1 for int8-quantised names). Query-side reads
+    (``B * Q * d``) are noise at corpus scale and not billed.
+    """
+    bpc = bytes_per_coord or {}
+    per_stage, cand = [], n_docs
+    for si, stage in enumerate(stages):
+        cand = min(cand, n_docs)
+        d_vecs = store_dims[stage.vector]
+        vd = dim if vec_dims is None else \
+            min(dim, vec_dims.get(stage.vector, dim))
+        b = bpc.get(stage.vector, 2)
+        k = min(stage.k, cand)
+        if si == 0:
+            read = n_docs * d_vecs * vd * b
+            if b == 1:        # int8 codes stream per-vector f32 scales too
+                read += n_docs * d_vecs * 4
+            # single-vector (pooled) scans fall back to score-then-select
+            # in the engine (_dispatch_scan_topk) — bill the [B, N] write
+            # they actually do, or the model over-claims the fused win
+            if stage.scan_topk and d_vecs > 1:
+                chunk = min(stage.chunk if stage.chunk > 0
+                            else DEFAULT_SCAN_TOPK_CHUNK, n_docs)
+                n_chunks = -(-n_docs // chunk)
+                write = batch * min(k, chunk) * 8 * n_chunks
+            else:
+                write = batch * n_docs * 4
+            entry = {"stage": stage.vector, "kind": "scan",
+                     "read_bytes": read, "score_write_bytes": write}
+        else:
+            gather = batch * cand * d_vecs * vd * b
+            if b == 1:
+                gather += batch * cand * d_vecs * 4
+            factor = 1 if stage.rerank_kernel else 3
+            entry = {"stage": stage.vector, "kind": "rerank",
+                     "read_bytes": factor * gather,
+                     "score_write_bytes": batch * cand * 4}
+        entry["total_bytes"] = (entry["read_bytes"]
+                                + entry["score_write_bytes"])
+        per_stage.append(entry)
+        cand = k
+    return {"stages": per_stage,
+            "total_bytes": sum(e["total_bytes"] for e in per_stage)}

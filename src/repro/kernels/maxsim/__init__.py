@@ -1,4 +1,8 @@
-from repro.kernels.maxsim.ops import (default_interpret, maxsim_scores,
-                                      maxsim_scores_chunked, pallas_available,
-                                      quantize_int8)
+from repro.kernels.maxsim.ops import (default_interpret,
+                                      fused_rerank_trace_count,
+                                      maxsim_rerank, maxsim_scores,
+                                      maxsim_scores_chunked,
+                                      maxsim_topk_chunked, pallas_available,
+                                      quantize_int8, rerank_pallas_available,
+                                      resolve_rerank_impl)
 from repro.kernels.maxsim.ref import maxsim_ref

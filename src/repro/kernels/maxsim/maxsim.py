@@ -1,14 +1,15 @@
-"""Pallas TPU kernel: streaming MaxSim (flash-style late-interaction scoring).
+"""Pallas TPU kernels: streaming MaxSim scan + fused gather-rerank.
 
 score[b, n] = sum_q qmask[b,q] * max_j (dmask[n,j] ? <q[b,q], docs[n,j]> : -inf)
 
-TPU adaptation of the paper's hot path (§1 Eq. 1): instead of materialising
-the [B, N, Q, D] similarity tensor in HBM (GPU-einsum style), the query
-block stays resident in VMEM while document-vector tiles stream
-HBM -> VMEM; the MXU computes (Q x d) @ (d x bn*bd) tiles and a running
-per-(query-token, doc) max lives in a VMEM scratch accumulator. Only the
-final [B, N] scores are written back — HBM traffic is exactly one read of
-the corpus per query batch (memory-roofline optimal for the scan stage).
+**Scan kernel** — TPU adaptation of the paper's hot path (§1 Eq. 1):
+instead of materialising the [B, N, Q, D] similarity tensor in HBM
+(GPU-einsum style), the query block stays resident in VMEM while
+document-vector tiles stream HBM -> VMEM; the MXU computes
+(Q x d) @ (d x bn*bd) tiles and a running per-(query-token, doc) max lives
+in a VMEM scratch accumulator. Only the final [B, N] scores are written
+back — HBM traffic is exactly one read of the corpus per query batch
+(memory-roofline optimal for the scan stage).
 
 Grid: (B, N/bn, D/bd); the D axis is innermost so the accumulator carries
 across D tiles. d (=128) is exactly one MXU lane width; Q is padded to a
@@ -16,6 +17,23 @@ multiple of 8 (sublane) and bn*bd to a multiple of 128.
 
 An int8 variant dequantises per-vector-scaled docs in VMEM before the MXU:
 HBM bytes halve vs bf16 (the memory-bound scan stage speeds up ~2x).
+
+**Gather-rerank kernel** — the cascade's other memory cliff (§2.4):
+rerank stages score a SMALL per-query candidate set against the full
+multi-vector rows. A jnp ``jnp.take`` gather first materialises a
+[B, L, D, d] candidate copy in HBM (write + re-read = 3x the candidate
+bytes) before any math runs. Here the candidate slot ids arrive via
+SCALAR PREFETCH (``pltpu.PrefetchScalarGridSpec``): the grid is
+(B, L, D/bd) and the ``docs`` BlockSpec's index map reads ``ids[b, l]``
+from SMEM to pick WHICH (1, bd, d) document tile the next HBM->VMEM DMA
+fetches — the gather IS the kernel's input stream, no gathered copy ever
+exists in HBM. The resident query block, the running per-query-token max
+accumulator (VMEM scratch, carried across D tiles), int8 dequantisation
+(scales streamed alongside the codes through the same index map) and
+Matryoshka-truncated d all work exactly as in the scan kernel; each grid
+step finishes by reducing to the single score out[b, l]. HBM traffic is
+one read of the candidate rows per query batch plus the [B, L] score
+write — the memory-roofline floor for exact candidate reranking.
 """
 from __future__ import annotations
 
@@ -102,3 +120,103 @@ def maxsim_pallas(q: jax.Array, q_mask: jax.Array, docs: jax.Array,
         scratch_shapes=[pltpu.VMEM((Q, block_n), jnp.float32)],
         interpret=interpret,
     )(*args)
+
+
+def _rerank_kernel(ids_ref, q_ref, qm_ref, docs_ref, dm_ref, out_ref,
+                   acc_ref, *, n_d_blocks: int, scale_ref=None):
+    del ids_ref            # consumed by the BlockSpec index maps, not here
+    di = pl.program_id(2)
+
+    @pl.when(di == 0)
+    def _init():
+        acc_ref[...] = jnp.full_like(acc_ref, NEG)
+
+    q = q_ref[...].astype(jnp.float32)                  # [Q, d]
+    doc = docs_ref[...][0]                              # [bd, d]
+    if scale_ref is not None:
+        doc = doc.astype(jnp.float32) * scale_ref[...][0][:, None]
+    doc = doc.astype(jnp.float32)
+    # sim[q, j] = <q_q, doc_j> — contract d on the MXU
+    sim = jax.lax.dot_general(
+        q, doc, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)             # [Q, bd]
+    sim = jnp.where(dm_ref[...][0][None, :] > 0, sim, NEG)
+    acc_ref[...] = jnp.maximum(acc_ref[...],
+                               jnp.max(sim, axis=1, keepdims=True))
+
+    @pl.when(di == n_d_blocks - 1)
+    def _finish():
+        best = acc_ref[...][:, 0]                       # [Q]
+        # NO NEG/2 clamp (unlike the scan kernel): the rerank contract is
+        # ``core.maxsim.maxsim_scan``, which sums the raw per-token max —
+        # a fully-masked candidate scores Qv*NEG on every rerank impl
+        best = jnp.where(qm_ref[...] > 0, best, 0.0)
+        out_ref[...] = jnp.sum(best)[None]
+
+
+def maxsim_rerank_pallas(rows: jax.Array, q: jax.Array, q_mask: jax.Array,
+                         docs: jax.Array, doc_mask: jax.Array, *,
+                         block_d: int = 0,
+                         scales: jax.Array | None = None,
+                         interpret: bool = True) -> jax.Array:
+    """Fused gather + exact MaxSim over per-query candidate lists.
+
+    rows [B, L] int32 in-range slot ids (SCALAR-PREFETCHED: the BlockSpec
+    index maps read them to choose which document tile each grid step
+    DMAs HBM -> VMEM — no gathered candidate copy is ever materialised);
+    q [B, Q, d]; q_mask [B, Q] f32; docs [N, D, d] (f32/bf16/int8);
+    doc_mask [N, D] f32, or [1, D] for a BROADCAST mask (a mask-less
+    store passes one all-ones row and every grid step streams tile
+    (0, j) — never a corpus-sized ones array); scales [N, D] f32 when
+    docs are int8. -> scores [B, L] f32.
+
+    Shapes must be pre-padded: D % block_d == 0. Grid is (B, L, D/bd) with
+    the D axis innermost so the per-query-token running max carries across
+    a candidate's D tiles in VMEM scratch.
+    """
+    B, Q, d = q.shape
+    N, D, dd = docs.shape
+    assert d == dd, (d, dd)
+    L = rows.shape[1]
+    if block_d <= 0:
+        block_d = D
+    assert D % block_d == 0, (D, block_d)
+    n_d_blocks = D // block_d
+    if doc_mask.shape[0] == 1:               # broadcast (mask-less store)
+        dm_index = lambda b, l, j, ids: (0, j)            # noqa: E731
+    else:
+        dm_index = lambda b, l, j, ids: (ids[b, l], j)    # noqa: E731
+
+    in_specs = [
+        pl.BlockSpec((None, Q, d), lambda b, l, j, ids: (b, 0, 0)),     # q
+        pl.BlockSpec((None, Q), lambda b, l, j, ids: (b, 0)),           # qm
+        pl.BlockSpec((1, block_d, d),
+                     lambda b, l, j, ids: (ids[b, l], j, 0)),           # docs
+        pl.BlockSpec((1, block_d), dm_index),                           # dm
+    ]
+    args = [q, q_mask.astype(jnp.float32), docs, doc_mask.astype(jnp.float32)]
+    kernel = functools.partial(_rerank_kernel, n_d_blocks=n_d_blocks)
+    if scales is not None:
+        in_specs.append(
+            pl.BlockSpec((1, block_d), lambda b, l, j, ids: (ids[b, l], j)))
+        args.append(scales.astype(jnp.float32))
+
+        def kernel(ids_ref, q_ref, qm_ref, docs_ref, dm_ref, s_ref,
+                   out_ref, acc_ref):
+            _rerank_kernel(ids_ref, q_ref, qm_ref, docs_ref, dm_ref,
+                           out_ref, acc_ref, n_d_blocks=n_d_blocks,
+                           scale_ref=s_ref)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, L, n_d_blocks),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((None, 1), lambda b, l, j, ids: (b, l)),
+        scratch_shapes=[pltpu.VMEM((Q, 1), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, L), jnp.float32),
+        interpret=interpret,
+    )(rows.astype(jnp.int32), *args)

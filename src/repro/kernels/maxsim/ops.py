@@ -1,10 +1,33 @@
-"""Jitted public wrapper for the MaxSim kernel: padding, defaults, dispatch.
+"""Jitted public wrappers for the MaxSim kernels: padding, defaults, dispatch.
 
 ``maxsim_scores(q, docs, ...)`` pads N/D/Q to hardware-aligned multiples,
-invokes the Pallas kernel (interpret=True on CPU — kernel-body semantics
-validated on this host, compiled for TPU on real hardware), and strips
-padding. Set ``impl="ref"`` to force the jnp oracle (used for A/B tests and
-as the CPU-fast path in benchmarks).
+invokes the Pallas scan kernel (interpret=True on CPU — kernel-body
+semantics validated on this host, compiled for TPU on real hardware), and
+strips padding. Set ``impl="ref"`` to force the jnp oracle (used for A/B
+tests and as the CPU-fast path in benchmarks).
+
+``maxsim_rerank(q, docs, rows, ...)`` is the fused gather+MaxSim rerank
+stage: per-query candidate slot ids in, [B, L] exact MaxSim scores out,
+without ever materialising the [B, L, D, d] gathered candidate copy the
+naive ``jnp.take``-then-score path writes to HBM. Three impls share its
+semantics:
+
+- ``"pallas"``  the scalar-prefetch gather kernel (candidate tiles DMA'd
+                HBM -> VMEM by index) — the TPU path;
+- ``"jnp"``     the fused jnp twin: candidate blocks of ``block_l`` are
+                gathered, dequantised and scored per block inside a
+                ``lax.map``, bounding the live gather working set at
+                [B, block_l, D, d] (the off-TPU serving path — measurably
+                faster than the vmapped reference on cache-bound hosts);
+- ``"ref"``     the legacy per-query vmap(take + maxsim_scan) — the
+                bitwise contract with the ``multistage._score_stage``
+                oracle.
+
+``maxsim_topk_chunked`` is the streamed scan top-k: scores the corpus
+chunk-by-chunk (any scan impl) while carrying a running per-query top-k
+through a ``lax.scan``, merging each chunk's local winners hierarchically —
+the scan stage's HBM score write shrinks from O(B*N) to O(B*k*n_chunks)
+and the full [B, N] score matrix never exists.
 """
 from __future__ import annotations
 
@@ -13,7 +36,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.maxsim.maxsim import maxsim_pallas
+from repro.kernels.maxsim.maxsim import maxsim_pallas, maxsim_rerank_pallas
 from repro.kernels.maxsim.ref import NEG, maxsim_ref
 
 
@@ -142,6 +165,263 @@ def maxsim_scores_chunked(q: jax.Array, docs: jax.Array,
     if doc_valid is not None:
         out = jnp.where(doc_valid[None, :], out, NEG)
     return out
+
+
+# ---------------------------------------------------------------------------
+# fused gather + MaxSim rerank
+# ---------------------------------------------------------------------------
+
+# trace-time counter for the fused rerank path (the Pallas gather kernel
+# AND its jnp twin bump it) — an OBSERVATIONAL signal that a
+# rerank_kernel-dispatched cascade really routed here, used by the
+# candidate-path benchmark's CI gate (a config-derived flag could not
+# catch a silent fallback to the reference gather)
+_FUSED_RERANK_TRACES = [0]
+
+
+def fused_rerank_trace_count() -> int:
+    return _FUSED_RERANK_TRACES[0]
+
+
+def _rerank_ref(q, docs, rows, q_mask, doc_mask, scales):
+    """The legacy gather-then-score path: per-query ``jnp.take`` + the
+    ``core.maxsim.maxsim_scan`` math — bitwise the ``multistage``
+    ``_score_stage`` oracle on float stores (dequantisation of gathered
+    int8 rows commutes with the gather elementwise, so quantised stores
+    match the oracle's dequantise-then-gather bitwise too)."""
+    def per_query(qi, qm, cl):
+        dv = jnp.take(docs, cl, axis=0)                    # [L, D, d]
+        if scales is not None:
+            dv = dv.astype(jnp.float32) \
+                * jnp.take(scales, cl, axis=0)[..., None]
+        sim = jnp.einsum("qd,njd->nqj", qi, dv.astype(qi.dtype))
+        if doc_mask is not None:
+            sim = jnp.where(jnp.take(doc_mask, cl, axis=0)[:, None, :] > 0,
+                            sim, NEG)
+        best = jnp.max(sim, axis=-1)                       # [L, Q]
+        best = jnp.where(qm[None, :] > 0, best, 0.0)
+        return jnp.sum(best, axis=-1)
+
+    return jax.vmap(per_query)(q, q_mask, rows)
+
+
+def _rerank_fused_jnp(q, docs, rows, q_mask, doc_mask, scales,
+                      block_l: int):
+    """The fused twin: candidate blocks of ``block_l`` stream through a
+    ``lax.map`` — gather, dequantise and score one [B, block_l] block at a
+    time, so the live working set is [B, block_l, D, d] instead of the
+    full [B, L, D, d] gathered copy (the same bounding the Pallas kernel
+    gets from per-tile DMA, expressed in jnp)."""
+    B, L = rows.shape
+    block_l = max(1, min(block_l, L))
+    pad = (-L) % block_l
+    rows_p = jnp.pad(rows, ((0, 0), (0, pad)))             # clipped ids: safe
+    n_blocks = (L + pad) // block_l
+    qf = q.astype(jnp.float32)
+
+    def block(cl):                                         # cl [B, block_l]
+        dv = docs[cl]                                      # [B, bl, D, d]
+        if scales is not None:
+            dv = dv.astype(jnp.float32) * scales[cl][..., None]
+        sim = jnp.einsum("bqd,bljd->blqj", qf, dv.astype(jnp.float32))
+        if doc_mask is not None:
+            sim = jnp.where(doc_mask[cl][:, :, None, :] > 0, sim, NEG)
+        best = jnp.max(sim, axis=-1)                       # [B, bl, Q]
+        # no NEG/2 clamp: the rerank contract is maxsim_scan's raw sum,
+        # identical across all three impls even for fully-masked docs
+        best = jnp.where(q_mask[:, None, :] > 0, best, 0.0)
+        return jnp.sum(best, axis=-1)                      # [B, bl]
+
+    rb = rows_p.reshape(B, n_blocks, block_l).transpose(1, 0, 2)
+    out = jax.lax.map(block, rb)                           # [nb, B, bl]
+    return jnp.moveaxis(out, 0, 1).reshape(B, n_blocks * block_l)[:, :L]
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "block_d", "block_l",
+                                             "interpret"))
+def maxsim_rerank(q: jax.Array, docs: jax.Array, rows: jax.Array,
+                  q_mask: jax.Array | None = None,
+                  doc_mask: jax.Array | None = None,
+                  scales: jax.Array | None = None,
+                  ok: jax.Array | None = None,
+                  *, impl: str = "pallas", block_d: int = 0,
+                  block_l: int = 8, interpret: bool = True) -> jax.Array:
+    """Fused gather + exact MaxSim rerank: q [B,Q,d], docs [N,D,d]
+    (float, or int8 codes with ``scales`` [N,D]), rows [B,L] candidate
+    slot ids -> scores [B,L] f32.
+
+    ``rows`` are clipped in-range (callers pass clipped ids anyway);
+    ``ok`` [B,L] bool marks candidates the caller actually owns — the rest
+    score NEG so they can never win a top-k slot on merit. Matryoshka
+    stores (docs narrower than q) score against the matching query
+    prefix. ``impl``: "pallas" (scalar-prefetch gather kernel), "jnp"
+    (fused block-streamed twin), "ref" (legacy vmapped gather — the
+    bitwise oracle contract).
+    """
+    B, Q, d = q.shape
+    N, D, dd = docs.shape
+    if dd < d:                                # Matryoshka rerank stage
+        q = q[..., :dd]
+    rows = jnp.clip(rows, 0, N - 1).astype(jnp.int32)
+    if q_mask is None:
+        q_mask = jnp.ones((B, Q), jnp.float32)
+    q_mask = q_mask.astype(jnp.float32)
+    if doc_mask is not None:
+        doc_mask = doc_mask.astype(jnp.float32)
+    # a mask-less store never materialises a corpus-sized ones array: the
+    # jnp/ref impls skip the masking, the Pallas kernel streams ONE
+    # broadcast all-ones row tile (see maxsim_rerank_pallas)
+
+    if impl == "ref":
+        out = _rerank_ref(q, docs, rows, q_mask, doc_mask, scales)
+    elif impl == "jnp":
+        _FUSED_RERANK_TRACES[0] += 1
+        out = _rerank_fused_jnp(q, docs, rows, q_mask, doc_mask, scales,
+                                block_l)
+    else:
+        _FUSED_RERANK_TRACES[0] += 1
+        qp = _pad_to(q, 1, 8)
+        qmp = _pad_to(q_mask, 1, 8)
+        bd = block_d if block_d > 0 else docs.shape[1]
+        docs_p = _pad_to(docs, 1, bd)
+        if doc_mask is None:
+            doc_mask = jnp.ones((1, D), jnp.float32)      # broadcast row
+        dm_p = _pad_to(doc_mask, 1, bd)
+        sc_p = None if scales is None else _pad_to(scales, 1, bd)
+        out = maxsim_rerank_pallas(rows, qp, qmp, docs_p, dm_p,
+                                   block_d=bd, scales=sc_p,
+                                   interpret=interpret)
+    if ok is not None:
+        out = jnp.where(ok, out, NEG)
+    return out
+
+
+@functools.lru_cache(maxsize=1)
+def rerank_pallas_available() -> bool:
+    """Probe whether the gather-rerank kernel can execute on this
+    host/backend (same contract as ``pallas_available``: the engine falls
+    back to the fused jnp twin when False). The probe traces
+    ``maxsim_rerank`` itself, so it restores the fused-rerank trace
+    counter — an availability check must never satisfy the CI gate's
+    "the cascade really routed through the fused path" signal."""
+    before = _FUSED_RERANK_TRACES[0]
+    try:
+        q = jnp.zeros((1, 8, 128), jnp.float32)
+        docs = jnp.zeros((8, 8, 128), jnp.float32)
+        rows = jnp.zeros((1, 2), jnp.int32)
+        out = maxsim_rerank(q, docs, rows, impl="pallas", block_d=8,
+                            interpret=default_interpret())
+        jax.block_until_ready(out)
+        return True
+    except Exception:
+        return False
+    finally:
+        _FUSED_RERANK_TRACES[0] = before
+
+
+def resolve_rerank_impl(use_kernel: bool) -> tuple:
+    """Pick (impl, interpret) for the rerank stage once, at build time —
+    the mirror of ``kernels.pooling.ops.resolve_impl``. On TPU the gather
+    kernel compiles natively; everywhere else the fused path runs its jnp
+    twin (interpret-mode Pallas is a correctness tool, not a serving
+    path). use_kernel=False is the legacy vmapped-gather reference."""
+    if not use_kernel:
+        return "ref", True
+    if not default_interpret() and rerank_pallas_available():
+        return "pallas", False
+    return "jnp", True
+
+
+# ---------------------------------------------------------------------------
+# streamed scan top-k
+# ---------------------------------------------------------------------------
+
+def _merge_topk(vals, ids, new_vals, new_ids, k: int):
+    """(vals, ids) [B, k] running winners + a chunk's [B, kb] locals ->
+    merged [B, k]. Local twin of ``repro.retrieval.topk.merge_topk``
+    (kernels must not import retrieval — the layering is kernels < core <
+    retrieval; the engine still merges SEGMENTS with the retrieval
+    helper)."""
+    mv = jnp.concatenate([vals, new_vals], axis=1)
+    mi = jnp.concatenate([ids, new_ids], axis=1)
+    v, sel = jax.lax.top_k(mv, k)
+    return v, jnp.take_along_axis(mi, sel, axis=1)
+
+
+def maxsim_topk_chunked(q: jax.Array, docs: jax.Array,
+                        q_mask: jax.Array | None = None,
+                        doc_mask: jax.Array | None = None,
+                        scales: jax.Array | None = None,
+                        doc_valid: jax.Array | None = None,
+                        *, k: int, chunk: int, impl: str = "pallas",
+                        block_n: int = 8, block_d: int = 0,
+                        interpret: bool = True) -> tuple:
+    """Streaming corpus scan with a RUNNING per-query top-k: returns
+    (vals [B, k], local ids [B, k]) without ever assembling the [B, N]
+    score matrix.
+
+    Each ``lax.scan`` step scores one ``chunk``-document block (any scan
+    impl — the Pallas kernel, or the jnp ref), NEGs dead ``doc_valid``
+    slots BEFORE the block's local top-k (a dead slot must never enter a
+    candidate set on merit), selects the block's top ``min(k, chunk)``
+    and merges them into the carry hierarchically. The per-step HBM
+    traffic is one read of the chunk plus the O(B*k) carry — the [B, N]
+    write of the score-then-select path is gone. Ids are local (caller
+    adds segment/shard offsets) and always < N: slots the CHUNK PADDING
+    invents (N -> chunk multiple) score -inf, strictly below every real
+    slot — including fully token-masked documents, whose Q*NEG sum is
+    below the dead-slot NEG but still finite — and since k <= N real
+    slots always exist, a padding id can never leak out and alias
+    another segment's slot space. The carry seeds at -inf too: a real
+    document's NEG still outranks an unfilled seed slot, keeping
+    returned ids distinct.
+    """
+    B = q.shape[0]
+    N, D, _ = docs.shape
+    k = min(k, N)
+    if chunk <= 0 or chunk >= N:
+        s = maxsim_scores(q, docs, q_mask, doc_mask, scales, doc_valid,
+                          impl=impl, block_n=block_n, block_d=block_d,
+                          interpret=interpret)
+        return jax.lax.top_k(s, k)
+    if doc_valid is None:
+        doc_valid = jnp.ones((N,), bool)
+    docs = _pad_to(docs, 0, chunk)
+    doc_valid = _pad_to(doc_valid, 0, chunk)               # pads False
+    n_blocks = docs.shape[0] // chunk
+    kb = min(k, chunk)
+    call = functools.partial(maxsim_scores, impl=impl, block_n=block_n,
+                             block_d=block_d, interpret=interpret)
+    # mask-less stores keep doc_mask=None per chunk (padding rows are
+    # excluded via the False-padded doc_valid) — never an [N, D] ones
+    xs = {"docs": docs.reshape(n_blocks, chunk, *docs.shape[1:]),
+          "valid": doc_valid.reshape(n_blocks, chunk),
+          "off": jnp.arange(n_blocks, dtype=jnp.int32) * chunk}
+    if docs.shape[0] != N:
+        # padding slots sink to -inf, not NEG: a fully token-masked live
+        # document scores Q*NEG < NEG, and padding must rank below even
+        # that or its out-of-range id could enter the top-k
+        xs["in_range"] = (jnp.arange(docs.shape[0])
+                          < N).reshape(n_blocks, chunk)
+    if doc_mask is not None:
+        xs["mask"] = _pad_to(doc_mask.astype(jnp.float32), 0,
+                             chunk).reshape(n_blocks, chunk, D)
+    if scales is not None:
+        xs["scales"] = _pad_to(scales, 0, chunk).reshape(n_blocks, chunk, D)
+
+    def step(carry, x):
+        s = call(q, x["docs"], q_mask, x.get("mask"),
+                 x.get("scales"))                          # [B, chunk]
+        s = jnp.where(x["valid"][None, :], s, NEG)
+        if "in_range" in x:
+            s = jnp.where(x["in_range"][None, :], s, -jnp.inf)
+        v, i = jax.lax.top_k(s, kb)
+        return _merge_topk(*carry, v, i + x["off"], k), None
+
+    init = (jnp.full((B, k), -jnp.inf, jnp.float32),
+            jnp.zeros((B, k), jnp.int32))
+    (vals, ids), _ = jax.lax.scan(step, init, xs)
+    return vals, ids
 
 
 @jax.jit

@@ -67,6 +67,8 @@ def _run_static(args, cfg, bench, store, stages, int8_on):
     metrics = evaluate_ranking(np.asarray(ids), bench.qrels, ks=(5, 10))
     scan = ("kernel" if args.use_kernel else "ref") + \
         (f"/chunk={args.chunk}" if args.chunk else "") + \
+        ("/scan-topk" if args.scan_topk else "") + \
+        ("/rerank-kernel" if args.rerank_kernel else "") + \
         ("/int8" if int8_on else "")
     print(f"{args.stages}-stage [{scan}]: QPS={qps:.1f}  " +
           "  ".join(f"{k}={v:.3f}" for k, v in metrics.items()))
@@ -246,6 +248,15 @@ def main():
                          "kernel (jnp ref fallback when unavailable)")
     ap.add_argument("--chunk", type=int, default=0,
                     help="scan-stage corpus chunk (0 = unchunked)")
+    ap.add_argument("--scan-topk", action="store_true",
+                    help="stream a running per-query top-k across scan "
+                         "chunks instead of assembling the [B, N] score "
+                         "matrix (HBM write O(B*k*n_chunks), not O(B*N))")
+    ap.add_argument("--rerank-kernel", action="store_true",
+                    help="dispatch rerank stages to the fused gather+"
+                         "MaxSim path (scalar-prefetch Pallas kernel on "
+                         "TPU, blockwise jnp twin elsewhere) — no "
+                         "materialised [B, L, D, d] candidate copy")
     ap.add_argument("--int8", action="store_true",
                     help="int8-quantise the scan-stage vectors")
     ap.add_argument("--ingest-batches", type=int, default=0,
@@ -292,7 +303,10 @@ def main():
               3: MST.three_stage(4 * args.prefetch_k, args.prefetch_k,
                                  args.top_k)}[args.stages]
     stages = MST.with_scan_policy(stages, use_kernel=args.use_kernel,
-                                  chunk=args.chunk)
+                                  chunk=args.chunk,
+                                  scan_topk=args.scan_topk)
+    stages = MST.with_rerank_policy(stages,
+                                    rerank_kernel=args.rerank_kernel)
     int8_on = False
     if args.int8:
         # quantise the vector the scan stage scores; a single-vector scan

@@ -21,7 +21,16 @@ API call", pod-scale edition). Design rules:
 - candidate ids live in a global SLOT space (segment offsets = cumulative
   capacities); per-segment results merge via ``merge_topk``. There is no
   divisibility constraint between corpus size and shard count: each shard
-  owns ``capacity / n_shards`` slots and ``doc_valid`` masks the tail.
+  owns ``capacity / n_shards`` slots and ``doc_valid`` masks the tail;
+- the candidate path's two HBM cliffs are policy-gated away:
+  ``Stage.scan_topk`` streams a RUNNING per-query top-k across corpus
+  chunks (no [B, N] score write), and ``Stage.rerank_kernel`` dispatches
+  rerank stages to the fused gather+MaxSim path (no materialised
+  [B, L, D, d] candidate copy — scalar-prefetch Pallas kernel on TPU, the
+  blockwise jnp twin elsewhere);
+- in the sharded rerank merge, non-owned candidate copies DROP their slot
+  id (-1 sentinel): NEG filler can then never re-enter a top-k as a
+  duplicate of a live document (k > live candidates is the trigger).
 
 The single-device oracle is repro.core.multistage.search; tests assert
 equality on a 1-shard mesh and overlap on multi-shard CPU meshes.
@@ -34,11 +43,12 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.core import maxsim as MS
-from repro.core.multistage import Stage
+from repro.core.multistage import DEFAULT_SCAN_TOPK_CHUNK, Stage
 from repro.kernels.maxsim import ops as KOPS
 from repro.retrieval.store import (VALIDITY_KEY, rerank_arrays, scan_arrays,
                                    validity)
-from repro.retrieval.topk import allgather_topk, merge_topk
+from repro.retrieval.topk import (allgather_topk, gathered_merge_topk,
+                                  merge_topk)
 from repro.retrieval.tracing import record_trace
 
 NEG = -1e30
@@ -66,6 +76,18 @@ def _scan_arrays(store: dict, stage: Stage):
     return scan_arrays(store, stage.vector)
 
 
+def _scan_prep(stage: Stage, vecs, q, scales):
+    """Apply the scan stage's compute-dtype policy and the Matryoshka
+    query-prefix slice (shared by the score and streamed-top-k paths)."""
+    if stage.dtype is not None:
+        q = q.astype(stage.dtype)
+        if scales is None:                    # int8 codes must stay int8
+            vecs = vecs.astype(stage.dtype)
+    if vecs.shape[-1] < q.shape[-1]:          # Matryoshka stage
+        q = q[..., : vecs.shape[-1]]
+    return vecs, q
+
+
 def _dispatch_scan(stage: Stage, vecs, mask, q, q_mask, scales,
                    impl: str, interpret: bool, doc_valid=None):
     """Score the full-corpus scan stage per the stage's dispatch policy.
@@ -78,12 +100,7 @@ def _dispatch_scan(stage: Stage, vecs, mask, q, q_mask, scales,
     NEGs dead capacity-padding slots (threaded into the kernel wrappers, or
     applied on the ref scores).
     """
-    if stage.dtype is not None:
-        q = q.astype(stage.dtype)
-        if scales is None:                    # int8 codes must stay int8
-            vecs = vecs.astype(stage.dtype)
-    if vecs.shape[-1] < q.shape[-1]:          # Matryoshka stage
-        q = q[..., : vecs.shape[-1]]
+    vecs, q = _scan_prep(stage, vecs, q, scales)
     if vecs.ndim == 2:                        # single-vector stage: one GEMM
         if scales is not None:
             vecs = vecs.astype(q.dtype) * scales[..., None].astype(q.dtype)
@@ -110,6 +127,30 @@ def _dispatch_scan(stage: Stage, vecs, mask, q, q_mask, scales,
     return s
 
 
+def _dispatch_scan_topk(stage: Stage, vecs, mask, q, q_mask, scales,
+                        impl: str, interpret: bool, doc_valid, k: int):
+    """Scan-stage select with a STREAMED running top-k: (vals, local ids)
+    [B, k] without assembling the [B, N] score matrix (HBM write shrinks
+    from O(B*N) to O(B*k*n_chunks) — see
+    ``kernels.maxsim.ops.maxsim_topk_chunked``). Single-vector (pooled)
+    scans keep score-then-select: the scan is one GEMM and the [B, N]
+    scores are the GEMM output, not an avoidable intermediate."""
+    vecs, q = _scan_prep(stage, vecs, q, scales)
+    if vecs.ndim == 2:
+        if scales is not None:
+            vecs = vecs.astype(q.dtype) * scales[..., None].astype(q.dtype)
+        s = MS.maxsim_single_vector(q, vecs, q_mask)
+        if doc_valid is not None:
+            s = jnp.where(doc_valid[None, :], s, NEG)
+        return jax.lax.top_k(s, min(k, vecs.shape[0]))
+    use_impl, use_interp = (impl, interpret) if stage.use_kernel \
+        else ("ref", True)
+    chunk = stage.chunk if stage.chunk > 0 else DEFAULT_SCAN_TOPK_CHUNK
+    return KOPS.maxsim_topk_chunked(q, vecs, q_mask, mask, scales,
+                                    doc_valid, k=k, chunk=chunk,
+                                    impl=use_impl, interpret=use_interp)
+
+
 def _resolve_impl(stages: tuple) -> tuple:
     """Pick (impl, interpret) for the scan stage once, at build time."""
     if stages and stages[0].use_kernel and KOPS.pallas_available():
@@ -117,26 +158,54 @@ def _resolve_impl(stages: tuple) -> tuple:
     return "ref", True
 
 
-def _score_candidates(stage_vecs, stage_mask, q, q_mask, rows, ok):
+def _resolve_rerank_impl(stages: tuple) -> tuple:
+    """Pick (impl, interpret) for the fused rerank path once, at build
+    time: the Pallas gather kernel natively on TPU, the blockwise jnp twin
+    elsewhere (see ``kernels.maxsim.ops.resolve_rerank_impl``). Stages
+    with ``rerank_kernel=False`` still run the legacy reference."""
+    return KOPS.resolve_rerank_impl(
+        any(s.rerank_kernel for s in stages[1:]))
+
+
+def _score_candidates(stage_vecs, stage_mask, stage_scales, q, q_mask,
+                      rows, ok, impl: str = "ref", interpret: bool = True):
     """Score per-query candidate lists against ONE segment's arrays.
 
     rows [B, L] in-range local slot ids; ok [B, L] marks candidates this
     caller actually owns (in-segment, on-shard, doc_valid) — the rest score
-    NEG. Same math as the ``multistage._score_stage`` oracle (gather, then
-    ``maxsim_scan``) so the 1-segment ref path stays bitwise-comparable.
+    NEG. ``stage_scales`` is set when the store's float copy was dropped
+    (int8 rerank): every path dequantises the GATHERED rows, elementwise-
+    commuting with the oracle's dequantise-then-gather.
+
+    impl="ref" is the legacy gather-then-score path — same math as the
+    ``multistage._score_stage`` oracle (gather, then ``maxsim_scan``) so
+    the 1-segment ref path stays bitwise-comparable. Other impls route to
+    the fused gather+MaxSim path (``kernels.maxsim.ops.maxsim_rerank``):
+    no materialised [B, L, D, d] candidate copy. Single-vector stages are
+    one small gather + GEMM either way (no memory cliff to fuse away).
     """
     if stage_vecs.shape[-1] < q.shape[-1]:    # Matryoshka rerank stage
         q = q[..., : stage_vecs.shape[-1]]
     if stage_vecs.ndim == 2:
         vecs = jnp.take(stage_vecs, rows, axis=0)              # [B, L, d]
+        if stage_scales is not None:
+            vecs = vecs.astype(jnp.float32) \
+                * jnp.take(stage_scales, rows, axis=0)[..., None]
         if q_mask is not None:
             q = q * q_mask[..., None].astype(q.dtype)
         qs = jnp.sum(q, axis=-2)
         s = jnp.einsum("bd,bld->bl", qs, vecs.astype(qs.dtype))
         return jnp.where(ok, s, NEG)
+    if impl != "ref":
+        return KOPS.maxsim_rerank(q, stage_vecs, rows, q_mask, stage_mask,
+                                  stage_scales, ok, impl=impl,
+                                  interpret=interpret)
 
     def per_query(qi, qm, cl):
         dv = jnp.take(stage_vecs, cl, axis=0)                  # [L, D, d]
+        if stage_scales is not None:
+            dv = dv.astype(jnp.float32) \
+                * jnp.take(stage_scales, cl, axis=0)[..., None]
         dm = None if stage_mask is None else jnp.take(stage_mask, cl, axis=0)
         return MS.maxsim_scan(qi, dv, qm, dm)
 
@@ -162,8 +231,13 @@ def _build_body(mesh: Mesh | None, stages: tuple, capacities: tuple,
     """
     assert capacities, "search needs at least one segment"
     impl, interpret = _resolve_impl(stages)
+    rr_impl, rr_interpret = _resolve_rerank_impl(stages)
     offsets = _offsets(capacities)
     total_cap = sum(capacities)
+
+    def rerank_dispatch(stage):
+        return (rr_impl, rr_interpret) if stage.rerank_kernel \
+            else ("ref", True)
 
     if mesh is None:
         def local_body(stores, q, q_mask):
@@ -174,10 +248,16 @@ def _build_body(mesh: Mesh | None, stages: tuple, capacities: tuple,
                     parts_v, parts_i = [], []
                     for store, cap, off in zip(stores, capacities, offsets):
                         vecs, mask, scales = _scan_arrays(store, stage)
-                        s = _dispatch_scan(stage, vecs, mask, q, q_mask,
-                                           scales, impl, interpret,
-                                           doc_valid=validity(store))
-                        v, i = jax.lax.top_k(s, min(stage.k, cap))
+                        if stage.scan_topk:
+                            v, i = _dispatch_scan_topk(
+                                stage, vecs, mask, q, q_mask, scales,
+                                impl, interpret, validity(store),
+                                min(stage.k, cap))
+                        else:
+                            s = _dispatch_scan(stage, vecs, mask, q, q_mask,
+                                               scales, impl, interpret,
+                                               doc_valid=validity(store))
+                            v, i = jax.lax.top_k(s, min(stage.k, cap))
                         parts_v.append(v)
                         parts_i.append(i + off)
                     scores, cand = merge_topk(
@@ -196,7 +276,7 @@ def _build_body(mesh: Mesh | None, stages: tuple, capacities: tuple,
                             ok = ok & jnp.take(dv, rows, axis=0)
                         s = _score_candidates(
                             *rerank_arrays(store, stage.vector),
-                            q, q_mask, rows, ok)
+                            q, q_mask, rows, ok, *rerank_dispatch(stage))
                         # each candidate lives in exactly one segment; the
                         # others scored it NEG, so max == owner's score
                         s_all = s if s_all is None else jnp.maximum(s_all, s)
@@ -224,12 +304,23 @@ def _build_body(mesh: Mesh | None, stages: tuple, capacities: tuple,
                 for store, cap, off in zip(stores, capacities, offsets):
                     n_local = cap // n_shards
                     vecs, mask, scales = _scan_arrays(store, stage)
-                    s_loc = _dispatch_scan(stage, vecs, mask, q, q_mask,
-                                           scales, impl, interpret)
-                    v, i = allgather_topk(s_loc, min(stage.k, cap), axes,
-                                          shard_idx, n_local,
-                                          valid_local=validity(store),
-                                          seg_offset=off)
+                    if stage.scan_topk:
+                        # streamed per-shard running top-k; ids shift into
+                        # the global slot space before the gather-merge
+                        v, i = _dispatch_scan_topk(
+                            stage, vecs, mask, q, q_mask, scales,
+                            impl, interpret, validity(store),
+                            min(stage.k, cap))
+                        v, i = gathered_merge_topk(
+                            v, i + shard_idx * n_local + off,
+                            min(stage.k, cap), axes)
+                    else:
+                        s_loc = _dispatch_scan(stage, vecs, mask, q, q_mask,
+                                               scales, impl, interpret)
+                        v, i = allgather_topk(s_loc, min(stage.k, cap),
+                                              axes, shard_idx, n_local,
+                                              valid_local=validity(store),
+                                              seg_offset=off)
                     parts_v.append(v)
                     parts_i.append(i)
                 scores, cand = merge_topk(
@@ -255,14 +346,22 @@ def _build_body(mesh: Mesh | None, stages: tuple, capacities: tuple,
                         ok = ok & jnp.take(dv, rows, axis=0)
                     s = _score_candidates(
                         *rerank_arrays(store, stage.vector),
-                        q, q_mask, rows, ok)
+                        q, q_mask, rows, ok, *rerank_dispatch(stage))
                     # merge shards/segments: each candidate scored real on
-                    # exactly one (shard, segment); NEG everywhere else
+                    # exactly one (shard, segment); NEG everywhere else.
+                    # Non-owned copies also DROP their slot id (-1): when
+                    # k exceeds the live candidates, NEG filler wins top-k
+                    # slots, and a filler copy carrying a live slot id
+                    # would DUPLICATE that document in the result. -1 is
+                    # the dead-filler sentinel end-to-end (Retriever
+                    # translates it to page id -1; a later stage scores it
+                    # NEG in every segment since it is in-segment nowhere).
                     parts_v.append(jax.lax.all_gather(s, axes, axis=1,
                                                       tiled=True))
-                    parts_i.append(jax.lax.all_gather(
-                        jnp.take_along_axis(cand, order, axis=1), axes,
-                        axis=1, tiled=True))
+                    gi = jnp.where(ok, jnp.take_along_axis(cand, order,
+                                                           axis=1), -1)
+                    parts_i.append(jax.lax.all_gather(gi, axes, axis=1,
+                                                      tiled=True))
                 scores, cand = merge_topk(
                     jnp.concatenate(parts_v, axis=1),
                     jnp.concatenate(parts_i, axis=1),

@@ -302,8 +302,7 @@ class ServingFrontend:
             translate_ids=False)
         scores = np.asarray(scores)[:rows]
         slots = np.asarray(slots)[:rows]
-        table = self.retriever.store.slot_doc_ids()
-        return scores, table[slots]
+        return scores, self.retriever.store.translate_slots(slots)
 
     def _cache_key(self, q: np.ndarray, qm: np.ndarray):
         # the store generation invalidates every entry on corpus mutation

@@ -186,5 +186,4 @@ class Retriever:
                                                q_mask)
         if not translate_ids:
             return scores, slots
-        table = self.store.slot_doc_ids()
-        return scores, table[np.asarray(slots)]
+        return scores, self.store.translate_slots(slots)

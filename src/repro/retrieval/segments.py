@@ -367,6 +367,20 @@ class SegmentedStore:
                     [seg.doc_ids for seg in self.segments])
         return self._slot_ids
 
+    def translate_slots(self, slots) -> np.ndarray:
+        """Global slot ids -> stable page ids. Slot -1 is the engine's
+        dead-filler sentinel (a sharded rerank merge drops the ids of
+        non-owned candidate copies so NEG filler can never duplicate a
+        live document); it maps to page id -1 rather than letting numpy's
+        negative indexing wrap to the last slot."""
+        table = self.slot_doc_ids()
+        slots = np.asarray(slots)
+        if len(table) == 0:      # zero segments: every slot is a sentinel
+            return np.full(slots.shape, -1, np.int64)
+        return np.where(
+            slots >= 0, table[np.clip(slots, 0, len(table) - 1)],
+            np.int64(-1))
+
     def schema(self) -> VectorSchema:
         """Typed layout of the live corpus (``VectorStore.schema`` twin)."""
         return VectorSchema.infer(

@@ -213,9 +213,20 @@ def scan_arrays(vectors: dict, name: str) -> tuple:
 
 
 def rerank_arrays(vectors: dict, name: str) -> tuple:
-    """Resolve a rerank stage's arrays for ``name``: (float vecs, mask).
-    Rerank stages always score the float copy (gather + exact MaxSim)."""
-    return vectors[name], vectors.get(mask_key(name))
+    """Resolve a rerank stage's arrays for ``name``:
+    (vecs, mask, scales).
+
+    Rerank stages score the float copy when it exists (gather + exact
+    MaxSim; ``scales`` is None). When ``quantize_store(stages=...)``
+    dropped the float copy, the int8 codes + per-vector scales come back
+    instead — every rerank path (the fused gather kernel, its jnp twin,
+    the legacy gather and the ``multistage`` oracle) dequantises the
+    gathered rows, which is elementwise and therefore bitwise the
+    dequantise-then-gather order."""
+    if name in vectors:
+        return vectors[name], vectors.get(mask_key(name)), None
+    return (vectors[codes_key(name)], vectors.get(mask_key(name)),
+            vectors[scale_key(name)])
 
 
 def companion_entries(vectors: dict, source: str, name: str) -> dict:

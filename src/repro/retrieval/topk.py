@@ -21,6 +21,19 @@ def merge_topk(vals: jax.Array, ids: jax.Array, k: int) -> tuple:
     return v, jnp.take_along_axis(ids, sel, axis=-1)
 
 
+def gathered_merge_topk(vals: jax.Array, global_ids: jax.Array, k: int,
+                        axis_name) -> tuple:
+    """Inside shard_map: all-gather per-shard (vals, GLOBAL ids) [B, k']
+    winner lists and merge to the top-k — identical on every shard.
+    Communication: S * B * k' * 8 bytes (scores + ids), never the
+    documents. The merge half of ``allgather_topk``, reused directly by
+    the streamed scan top-k path (whose local select already happened
+    chunk-by-chunk inside the scan)."""
+    av = jax.lax.all_gather(vals, axis_name, axis=1, tiled=True)  # [B,S*k']
+    ai = jax.lax.all_gather(global_ids, axis_name, axis=1, tiled=True)
+    return merge_topk(av, ai, k)
+
+
 def allgather_topk(scores_local: jax.Array, k: int, axis_name,
                    shard_index, n_local: int,
                    valid_local: jax.Array | None = None,
@@ -28,8 +41,7 @@ def allgather_topk(scores_local: jax.Array, k: int, axis_name,
     """Inside shard_map: per-shard top-k then all-gather + merge.
 
     scores_local [B, n_local]; returns identical (vals, global ids) [B, k]
-    on every shard. Communication: S * B * k * 8 bytes (scores + ids), never
-    the documents.
+    on every shard.
 
     ``valid_local`` [n_local] bool masks dead/padding slots to NEG before the
     local select (capacity-padded segmented stores: the tail of a ragged
@@ -41,6 +53,4 @@ def allgather_topk(scores_local: jax.Array, k: int, axis_name,
         scores_local = jnp.where(valid_local[None, :], scores_local, NEG)
     v, gi = local_topk_with_ids(scores_local, k,
                                 shard_index * n_local + seg_offset)
-    av = jax.lax.all_gather(v, axis_name, axis=1, tiled=True)    # [B, S*k]
-    ai = jax.lax.all_gather(gi, axis_name, axis=1, tiled=True)
-    return merge_topk(av, ai, k)
+    return gathered_merge_topk(v, gi, k, axis_name)

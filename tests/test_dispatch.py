@@ -173,6 +173,226 @@ def test_retriever_caches_compiled_fn(bench):
     assert r.search_fn(MST.with_scan_policy(BASE, use_kernel=True)) is not f1
 
 
+# ---------------------------------------------------------------------------
+# fused candidate path: gather-rerank kernel + streamed scan top-k
+# ---------------------------------------------------------------------------
+
+FUSED = MST.with_rerank_policy(
+    MST.with_scan_policy(BASE, scan_topk=True, chunk=16),
+    rerank_kernel=True)
+
+
+@pytest.fixture(scope="module")
+def raw():
+    """Raw encoder output for mutation tests (same benchmark as bench)."""
+    cfg = get_config("colpali")
+    b = make_benchmark(cfg, (20, 16, 12), (6, 6, 4), seed=7)
+    return cfg, jnp.asarray(b.pages), jnp.asarray(b.token_types)
+
+
+def test_fused_candidate_path_matches_oracle(bench):
+    """scan_topk + rerank_kernel through the local engine: exact oracle
+    ranking, scores to kernel-path tolerance."""
+    store, q, qm, so, io = bench
+    s, i = Retriever(store).search(q, qm, stages=FUSED)
+    np.testing.assert_array_equal(np.asarray(i), io)
+    np.testing.assert_allclose(np.asarray(s), so, rtol=1e-5, atol=1e-5)
+
+
+def test_fused_candidate_path_sharded(bench):
+    store, q, qm, so, io = bench
+    mesh = make_mesh((1,), ("data",))
+    s, i = Retriever(store, mesh=mesh).search(q, qm, stages=FUSED)
+    np.testing.assert_array_equal(np.asarray(i), io)
+    np.testing.assert_allclose(np.asarray(s), so, rtol=1e-5, atol=1e-5)
+
+
+def test_scan_topk_alone_matches(bench):
+    """Streamed scan top-k with the reference rerank: same merge result
+    as global score-then-select, kernel scan on or off."""
+    store, q, qm, so, io = bench
+    for use_kernel in (False, True):
+        stages = MST.with_scan_policy(BASE, scan_topk=True, chunk=7,
+                                      use_kernel=use_kernel)
+        s, i = Retriever(store).search(q, qm, stages=stages)
+        np.testing.assert_array_equal(np.asarray(i), io)
+        np.testing.assert_allclose(np.asarray(s), so, rtol=2e-2, atol=2e-2)
+
+
+def test_rerank_kernel_int8_dropped_float_copy(bench):
+    """Rerank the QUANTISED vector after quantize_store(stages=...)
+    dropped its float copy: the fused path dequantises the gathered int8
+    rows in the kernel; the oracle (which now also resolves codes+scales
+    through rerank_arrays) stays the contract."""
+    store, q, qm, _, _ = bench
+    # quantise under a cascade that never reranks these names, so BOTH
+    # float copies drop; then rerank "initial" from its codes anyway
+    st8 = quantize_store(store, names=("mean_pooling", "initial"),
+                         stages=MST.one_stage(8))
+    assert "initial" not in st8.vectors          # codes-only rerank vector
+    so8, io8 = MST.search(st8.vectors, q, BASE, qm)
+    for stages in (BASE, FUSED):
+        s, i = Retriever(st8).search(q, qm, stages=stages)
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(io8))
+        np.testing.assert_allclose(np.asarray(s), np.asarray(so8),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_rerank_kernel_matryoshka_stage(bench):
+    """Fused rerank over a Matryoshka-truncated named vector (docs
+    narrower than the query): oracle parity."""
+    from repro.core.matryoshka import add_truncated_stage
+    store, q, qm, _, _ = bench
+    vecs = add_truncated_stage(store.vectors, "initial", 32)
+    stages = (MST.Stage("mean_pooling", 24, scan_topk=True, chunk=16),
+              MST.Stage("initial_mrl32", 8, rerank_kernel=True))
+    ref_stages = (MST.Stage("mean_pooling", 24), MST.Stage("initial_mrl32", 8))
+    so, io = MST.search(vecs, q, ref_stages, qm)
+    from repro.retrieval.store import VectorStore
+    s, i = Retriever(VectorStore(vecs, store.n_docs)).search(
+        q, qm, stages=stages)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(io))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(so),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_rerank_kernel_multi_segment_dead_slots(bench, raw):
+    """Fused vs reference policy over a mutated multi-segment corpus
+    (capacity padding + deleted docs): identical rankings, and no deleted
+    page id ever surfaces."""
+    _, q, qm, _, _ = bench
+    cfg, pages, tt = raw
+
+    def retr(stages):
+        r = Retriever(build_store(cfg, pages[:8], tt), capacity=8)
+        r.upsert(build_store(cfg, pages[8:20], tt))
+        r.delete([1, 9, 15])
+        return r.search(q, qm, stages=stages)
+
+    s_ref, i_ref = retr(MST.two_stage(16, 8))
+    s_fus, i_fus = retr(MST.with_rerank_policy(
+        MST.with_scan_policy(MST.two_stage(16, 8), scan_topk=True, chunk=8),
+        rerank_kernel=True))
+    np.testing.assert_array_equal(np.asarray(i_fus), np.asarray(i_ref))
+    np.testing.assert_allclose(np.asarray(s_fus), np.asarray(s_ref),
+                               rtol=1e-5, atol=1e-5)
+    assert not np.isin(np.asarray(i_fus), [1, 9, 15]).any()
+
+
+def test_sharded_rerank_no_duplicate_ids(bench, raw):
+    """Regression (candidate-dedupe invariant): when k exceeds the live
+    candidates, the sharded/segmented rerank merge must fill with -1
+    sentinels — NEVER with duplicate copies of live documents (non-owned
+    candidate copies used to keep their slot id at NEG score and could
+    re-enter the top-k as duplicates)."""
+    _, q, qm, _, _ = bench
+    cfg, pages, tt = raw
+    mesh = make_mesh((1,), ("data",))
+    r = Retriever(build_store(cfg, pages[:8], tt), mesh=mesh, capacity=8)
+    r.upsert(build_store(cfg, pages[8:12], tt))
+    r.delete(list(range(6)))                     # 6 live docs, 2 segments
+    _, ids = r.search(q, qm, stages=MST.two_stage(12, 10))   # k > live
+    ids = np.asarray(ids)
+    for row in ids:
+        live = row[row >= 0]
+        assert len(live) == len(set(live)), f"duplicate page ids: {row}"
+    assert (ids == -1).any()                     # filler is the sentinel
+
+
+def test_single_vector_rerank_honours_doc_valid(bench, raw):
+    """Regression (2-dim rerank branch): a single-vector (pooled) rerank
+    stage over a capacity-padded corpus with deletions must NEG dead
+    slots exactly like the multi-vector branch — deleted pages never
+    resurface through the global_pooling rerank."""
+    _, q, qm, _, _ = bench
+    cfg, pages, tt = raw
+    stages = (MST.Stage("mean_pooling", 16), MST.Stage("global_pooling", 8))
+    r = Retriever(build_store(cfg, pages[:12], tt), capacity=16)
+    r.delete([0, 5])
+    _, ids = r.search(q, qm, stages=stages)
+    assert not np.isin(np.asarray(ids), [0, 5]).any()
+    fused = MST.with_rerank_policy(stages, rerank_kernel=True)
+    _, ids2 = r.search(q, qm, stages=fused)
+    np.testing.assert_array_equal(np.asarray(ids2), np.asarray(ids))
+
+
+def test_fused_path_zero_retrace_under_frontend(bench):
+    """Acceptance: the fused candidate path keeps the query-shape
+    no-retrace contract — after bucket warm-up, ragged traffic through
+    the ServingFrontend dispatches the scan_topk + rerank_kernel cascade
+    without a single retrace."""
+    from repro.retrieval import tracing
+    store, q, qm, _, _ = bench
+    r = Retriever(store)
+    fe = r.frontend(FUSED, max_batch=4, max_q=q.shape[1], flush_ms=0.0)
+    fe.warm()
+    rng = np.random.default_rng(3)
+    qn = np.asarray(q)
+    qmn = np.asarray(qm)
+    with tracing.no_retrace("fused-path ragged traffic"):
+        for _ in range(12):
+            j = int(rng.integers(len(qn)))
+            keep = int(rng.integers(3, int(qmn[j].sum()) + 1))
+            scores, ids = fe.search(qn[j, :keep], qmn[j, :keep])
+            assert scores.shape[0] == 1
+
+
+_RAGGED_FUSED_SCRIPT = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+os.environ["JAX_PLATFORMS"] = "cpu"
+import numpy as np, jax.numpy as jnp
+from repro.core import multistage as MST
+from repro.launch.mesh import make_mesh
+from repro.retrieval.retriever import Retriever
+from repro.retrieval.store import VectorStore
+
+D, DP, DIM = 4, 2, 8
+r = np.random.default_rng(5)
+def unit(*s):
+    x = r.normal(size=s).astype(np.float32)
+    return x / np.maximum(np.linalg.norm(x, axis=-1, keepdims=True), 1e-9)
+ini = unit(21, D, DIM)                     # 21 docs over 4 shards: ragged
+store = VectorStore({
+    "initial": jnp.asarray(ini),
+    "initial_mask": jnp.ones((21, D), bool),
+    "mean_pooling": jnp.asarray(ini[:, :DP]),
+    "mean_pooling_mask": jnp.ones((21, DP), bool)}, 21, "float32")
+q = jnp.asarray(np.random.default_rng(9).normal(
+    size=(3, 5, DIM)).astype(np.float32))
+qm = jnp.ones((3, 5), bool)
+base = MST.two_stage(8, 4)
+fused = MST.with_rerank_policy(
+    MST.with_scan_policy(base, scan_topk=True, chunk=8),
+    rerank_kernel=True)
+so, io = MST.search(store.vectors, q, base, qm)
+mesh = make_mesh((4,), ("data",))
+s, i = Retriever(store, mesh=mesh).search(q, qm, stages=fused)
+np.testing.assert_array_equal(np.asarray(i), np.asarray(io))
+np.testing.assert_allclose(np.asarray(s), np.asarray(so),
+                           rtol=1e-5, atol=1e-6)
+print("RAGGED_FUSED_OK")
+"""
+
+
+def test_ragged_sharded_fused_subprocess():
+    """Fused candidate path (scan_topk + rerank_kernel) on a REAL 4-shard
+    mesh over a ragged corpus (21 docs): oracle parity. Fake CPU devices
+    must be configured before jax initialises, hence the subprocess."""
+    import os
+    import subprocess
+    import sys
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", _RAGGED_FUSED_SCRIPT],
+                         env=env, capture_output=True, text=True,
+                         timeout=500)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "RAGGED_FUSED_OK" in out.stdout
+
+
 def test_retriever_default_scan_chunk(bench):
     """Retriever(scan_chunk=...) bounds the scan intermediate without the
     caller annotating stages; explicit stage.chunk wins."""

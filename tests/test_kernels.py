@@ -4,7 +4,8 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.kernels.maxsim import maxsim_scores, maxsim_ref, quantize_int8
+from repro.kernels.maxsim import (maxsim_ref, maxsim_rerank, maxsim_scores,
+                                  maxsim_topk_chunked, quantize_int8)
 from repro.kernels.pooling import (pool_pages_fused, pool_ref,
                                    pooling_matrix, rowmean_matrix,
                                    conv1d_matrix, smooth_matrix, tile_matrix)
@@ -63,6 +64,138 @@ def test_maxsim_fully_masked_doc(rng):
                         block_d=16)
     assert np.isfinite(np.asarray(out))[:, :3].all()
     assert np.asarray(out)[0, 3] < -1e20        # masked doc sinks
+
+
+# ---------------------------------------------------------------------------
+# Fused gather-rerank kernel + streamed scan top-k
+# ---------------------------------------------------------------------------
+
+def _gathered_ref(q, qm, docs, dm, rows, ok, scales=None):
+    """Expected rerank scores: full ref scan, gather the candidate
+    columns, NEG the not-owned slots."""
+    full = maxsim_ref(q, qm, docs, dm, scales)
+    out = np.take_along_axis(np.asarray(full), np.asarray(rows), axis=1)
+    return np.where(np.asarray(ok), out, -1e30)
+
+
+@pytest.mark.parametrize("impl", ["ref", "jnp", "pallas"])
+@pytest.mark.parametrize("B,Q,N,D,d,L", [
+    (2, 8, 16, 32, 128, 6),
+    (3, 11, 40, 48, 64, 9),      # Q not sublane-aligned, L not block_l mult
+])
+def test_rerank_impls_match_gathered_ref(rng, impl, B, Q, N, D, d, L):
+    q = jnp.asarray(rng.normal(size=(B, Q, d)), jnp.float32)
+    docs = jnp.asarray(rng.normal(size=(N, D, d)), jnp.float32)
+    qm = jnp.asarray(rng.random((B, Q)) > 0.2, jnp.float32)
+    dm = jnp.asarray(rng.random((N, D)) > 0.1, jnp.float32)
+    rows = jnp.asarray(rng.integers(0, N, (B, L)), jnp.int32)
+    ok = jnp.asarray(rng.random((B, L)) > 0.25)
+    out = maxsim_rerank(q, docs, rows, qm, dm, None, ok, impl=impl,
+                        block_d=16, block_l=4)
+    exp = _gathered_ref(q, qm, docs, dm, rows, ok)
+    np.testing.assert_allclose(np.asarray(out), exp, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("impl", ["ref", "jnp", "pallas"])
+def test_rerank_int8_dequant_in_kernel(rng, impl):
+    """int8 codes + per-vector scales stream through the rerank path;
+    every impl dequantises the gathered rows and matches the
+    dequantise-then-gather reference."""
+    q = jnp.asarray(rng.normal(size=(2, 8, 128)), jnp.float32)
+    docs = jnp.asarray(rng.normal(size=(24, 32, 128)), jnp.float32)
+    codes, scales = quantize_int8(docs)
+    rows = jnp.asarray(rng.integers(0, 24, (2, 7)), jnp.int32)
+    qm = jnp.ones((2, 8), jnp.float32)
+    dm = jnp.ones((24, 32), jnp.float32)
+    out = maxsim_rerank(q, codes, rows, qm, dm, scales, None, impl=impl,
+                        block_d=16)
+    exp = _gathered_ref(q, qm, codes.astype(jnp.float32), dm, rows,
+                        np.ones((2, 7), bool), scales)
+    np.testing.assert_allclose(np.asarray(out), exp, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("impl", ["jnp", "pallas"])
+def test_rerank_matryoshka_truncated_docs(rng, impl):
+    """Docs narrower than the query (Matryoshka rerank stage): the
+    wrapper scores against the matching query prefix."""
+    q = jnp.asarray(rng.normal(size=(2, 9, 128)), jnp.float32)
+    docs = jnp.asarray(rng.normal(size=(16, 16, 32)), jnp.float32)
+    rows = jnp.asarray(rng.integers(0, 16, (2, 5)), jnp.int32)
+    out = maxsim_rerank(q, docs, rows, impl=impl)
+    ref = maxsim_rerank(q, docs, rows, impl="ref")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_rerank_fully_masked_candidate(rng):
+    """A fully token-masked candidate sinks without inf/nan leakage into
+    other candidates' scores — and scores IDENTICALLY across impls (the
+    rerank contract is maxsim_scan's raw Qv*NEG sum; no per-impl clamp
+    may make degenerate candidates rank differently per dispatch
+    policy)."""
+    q = jnp.asarray(rng.normal(size=(1, 8, 128)), jnp.float32)
+    docs = jnp.asarray(rng.normal(size=(8, 16, 128)), jnp.float32)
+    dm = jnp.ones((8, 16), jnp.float32).at[3].set(0.0)
+    rows = jnp.asarray([[0, 3, 5]], jnp.int32)
+    ref = np.asarray(maxsim_rerank(q, docs, rows, None, dm, impl="ref"))
+    for impl in ("jnp", "pallas"):
+        out = np.asarray(maxsim_rerank(q, docs, rows, None, dm, impl=impl))
+        assert np.isfinite(out[:, [0, 2]]).all()
+        assert out[0, 1] < -1e20
+        np.testing.assert_allclose(out, ref, rtol=1e-4)
+
+
+@pytest.mark.parametrize("chunk", [5, 16, 48, 200])
+def test_topk_chunked_matches_global_select(rng, chunk):
+    """Streamed running top-k == score-everything-then-select, including
+    dead doc_valid slots NEGed before each block's local select."""
+    q = jnp.asarray(rng.normal(size=(3, 9, 64)), jnp.float32)
+    docs = jnp.asarray(rng.normal(size=(48, 24, 64)), jnp.float32)
+    qm = jnp.asarray(rng.random((3, 9)) > 0.2, jnp.float32)
+    dm = jnp.asarray(rng.random((48, 24)) > 0.1, jnp.float32)
+    dv = jnp.asarray(rng.random(48) > 0.3)
+    s = maxsim_scores(q, docs, qm, dm, None, dv, impl="ref")
+    ev, ei = jax.lax.top_k(s, 12)
+    v, i = maxsim_topk_chunked(q, docs, qm, dm, None, dv, k=12,
+                               chunk=chunk, impl="ref")
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ei))
+    np.testing.assert_allclose(np.asarray(v), np.asarray(ev),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_topk_chunked_padding_never_leaks_ids(rng):
+    """Regression: chunk-padding slots must rank below EVERY real slot —
+    a fully token-masked live document scores Q*NEG (below the dead-slot
+    NEG), and padding scored at plain NEG used to outrank it, leaking an
+    out-of-range id that aliases the next segment's slot space."""
+    N, chunk, k = 5, 4, 5                   # padded to 8: 3 fake slots
+    q = jnp.asarray(rng.normal(size=(1, 6, 32)), jnp.float32)
+    docs = jnp.asarray(rng.normal(size=(N, 8, 32)), jnp.float32)
+    dm = jnp.ones((N, 8), jnp.float32).at[0].set(0.0)   # doc 0 fully masked
+    v, i = maxsim_topk_chunked(q, docs, None, dm, None, None, k=k,
+                               chunk=chunk, impl="ref")
+    i = np.asarray(i)
+    assert (i >= 0).all() and (i < N).all(), f"padding id leaked: {i}"
+    s = maxsim_scores(q, docs, None, dm, impl="ref")
+    ev, ei = jax.lax.top_k(s, k)
+    np.testing.assert_array_equal(i, np.asarray(ei))
+    np.testing.assert_allclose(np.asarray(v), np.asarray(ev), rtol=1e-5)
+
+
+def test_topk_chunked_int8_pallas(rng):
+    """Streamed top-k over int8 codes through the Pallas scan kernel."""
+    q = jnp.asarray(rng.normal(size=(2, 8, 128)), jnp.float32)
+    docs = jnp.asarray(rng.normal(size=(32, 16, 128)), jnp.float32)
+    codes, scales = quantize_int8(docs)
+    s = maxsim_scores(q, codes.astype(jnp.float32), None, None, scales,
+                      impl="ref")
+    ev, ei = jax.lax.top_k(s, 6)
+    v, i = maxsim_topk_chunked(q, codes, None, None, scales, None, k=6,
+                               chunk=8, impl="pallas", block_n=8,
+                               block_d=16)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ei))
+    np.testing.assert_allclose(np.asarray(v), np.asarray(ev),
+                               rtol=1e-4, atol=1e-4)
 
 
 # ---------------------------------------------------------------------------
