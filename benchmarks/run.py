@@ -29,6 +29,14 @@ full result tables to stdout and benchmarks/results/paper_tables.json.
                        p50/p95/p99 latency, ragged QPS vs fixed-shape
                        static QPS, query-shape retrace count asserted == 0
                        (beyond-paper serving)
+  mixed_tenant_tail_latency
+                       two tenants on one corpus, one bursting ~7x the
+                       other, every request tenant-scoped via FilterSpec:
+                       per-tenant p50/p99, tenant isolation of returned
+                       ids asserted, zero retraces across filter swaps
+                       asserted, quiet-tenant p99 within the round-robin
+                       fair-flush bound asserted; rows persist to
+                       BENCH_multi_tenant.json by sha (beyond-paper)
   ingest_throughput    device-resident ingest pipeline: pages/sec per
                        batch bucket, fused-kernel vs ref pooling, int8
                        on/off, vs legacy build_store+upsert; mixed-size
@@ -318,6 +326,7 @@ def rerank_kernel_vs_ref(table: dict, quick: bool = False):
     from repro.configs import get_config
     from repro.core import multistage as MST
     from repro.data.synthetic import make_benchmark
+    from repro.kernels import dispatch as DSP
     from repro.kernels.maxsim import ops as KOPS
     from repro.retrieval import tracing
     from repro.retrieval.retriever import Retriever
@@ -387,7 +396,7 @@ def rerank_kernel_vs_ref(table: dict, quick: bool = False):
     retraces = tracing.trace_count() - warm
     out = {"n_docs": store.n_docs, "batch": int(q.shape[0]),
            "retraces": retraces, "fused_rerank_traces": fused_traces,
-           "rerank_impl": KOPS.resolve_rerank_impl(True)[0], "qps": {}}
+           "rerank_impl": DSP.resolve("maxsim_rerank", True)[0], "qps": {}}
     for name in fns:
         dt = float(np.min(dts[name]))
         out["qps"][name] = len(q) / dt
@@ -580,6 +589,7 @@ def ingest_throughput(table: dict, quick: bool = False):
     from repro.configs import get_config
     from repro.core import multistage as MST
     from repro.data.synthetic import make_benchmark
+    from repro.kernels import dispatch as DSP
     from repro.kernels.pooling import ops as POPS
     from repro.retrieval import tracing
     from repro.retrieval.ingest import IngestPipeline
@@ -619,8 +629,8 @@ def ingest_throughput(table: dict, quick: bool = False):
 
     out = {"buckets": list(buckets), "index_pages_per_s": {},
            "ingest_pages_per_s": {},
-           "pallas_pooling_available": POPS.pallas_available(),
-           "pool_impl": POPS.resolve_impl(True)[0]}
+           "pallas_pooling_available": DSP.available("pooling"),
+           "pool_impl": DSP.resolve("pooling", True)[0]}
     # OBSERVE (not infer from config) that the kernel-mode pipeline's
     # pooling really routes to a fused operator: tracing its body must
     # bump the fused-pool trace counter. A regression that silently falls
@@ -805,6 +815,147 @@ def serving_tail_latency(table: dict, quick: bool = False):
     table["serving_tail_latency"] = out
 
 
+def mixed_tenant_tail_latency(table: dict, quick: bool = False):
+    """Multi-tenant serving under a noisy neighbour: two tenants share one
+    corpus (disjoint page ranges via tenant-stamped upserts); open-loop
+    Poisson traffic where tenant 1 sends ~7x tenant 0's request rate, every
+    request scoped with ``FilterSpec(tenant=...)``. Reports per-tenant
+    p50/p99 and asserts three contracts outright (CI gates):
+
+    - **filters are data** — steady-state retraces across the tenant-filter
+      swaps are ZERO: both tenants' traffic (and the unscoped warm-up)
+      re-dispatch the same bucket executables.
+    - **isolation** — a tenant-scoped request only ever returns that
+      tenant's page ids (filler is -1, never another tenant's id).
+    - **fairness** — the quiet tenant's p99 is bounded by the flush
+      deadline plus a few micro-batch service times (self-normalised to
+      this host's measured dispatch cost), so a bursting tenant's backlog
+      cannot starve it — the round-robin-flush contract, measured.
+
+    Rows persist to BENCH_multi_tenant.json at the repo root by git sha."""
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.core import multistage as MST
+    from repro.data.synthetic import make_benchmark
+    from repro.launch.serve import _make_ragged_requests
+    from repro.retrieval import tracing
+    from repro.retrieval.frontend import ServingFrontend, replay_open_loop
+    from repro.retrieval.retriever import Retriever
+    from repro.retrieval.segments import bucket_capacity
+    from repro.retrieval.store import FilterSpec, build_store
+
+    cfg = get_config("colpali")
+    pages, queries, n_req, max_batch = \
+        ((16, 16, 16), (4, 4, 4), 48, 8) if quick else \
+        ((60, 50, 40), (10, 10, 10), 200, 16)
+    bench = make_benchmark(cfg, pages, queries, seed=16)
+    p = jnp.asarray(bench.pages)
+    tt = jnp.asarray(bench.token_types)
+    half = len(p) // 2
+    # tenant 0 = the wrapped seed store (companions default to tenant 0),
+    # tenant 1 = a stamped upsert into the same segment's headroom
+    r = Retriever(build_store(cfg, p[:half], tt),
+                  capacity=bucket_capacity(len(p) + 8))
+    r.upsert(build_store(cfg, p[half:], tt), tenant=1)
+    stages = MST.two_stage(24, 10)
+    q = jnp.asarray(bench.queries)
+    qm = jnp.asarray(bench.query_mask)
+
+    # fixed-shape reference for the arrival rate (as serving_tail_latency)
+    fn = r.search_fn(stages)
+    dt = _t(fn, r.store.stores(), q, qm)
+    static_qps = len(q) / dt
+
+    flush_ms = 2.0
+    fe = ServingFrontend(r, stages, max_batch=max_batch,
+                         max_q=bench.queries.shape[1], flush_ms=flush_ms)
+    fe.warm()
+
+    # merged Poisson stream, thinned by tenant: ~7/8 of arrivals belong to
+    # the bursting tenant, so at the merged rate the quiet tenant sees a
+    # trickle while tenant 1 queues a backlog
+    rng = np.random.default_rng(23)
+    base_reqs = _make_ragged_requests(bench, n_req, rng)
+    tenants = rng.integers(0, 8, size=n_req)     # 0 => quiet, else burst
+    reqs = [(rq, rm, FilterSpec(tenant=0 if t == 0 else 1))
+            for (rq, rm), t in zip(base_reqs, tenants)]
+
+    warm_traces = tracing.trace_count()
+    served, wall = replay_open_loop(fe, reqs, rate=static_qps, seed=24)
+    retraces = tracing.trace_count() - warm_traces
+
+    # isolation: a scoped request's ids live in its tenant's page range
+    for (_, _, fs), pr in zip(reqs, served):
+        ids = np.asarray(pr.ids)
+        lo, hi = (0, half) if fs.tenant == 0 else (half, len(p))
+        assert np.all((ids == -1) | ((ids >= lo) & (ids < hi))), (
+            f"tenant {fs.tenant} request returned foreign page ids "
+            f"{ids[(ids != -1) & ((ids < lo) | (ids >= hi))]}")
+
+    lat = {t: np.asarray([pr.latency for (_, _, fs), pr
+                          in zip(reqs, served) if fs.tenant == t]) * 1e3
+           for t in (0, 1)}
+    dispatch_ms = wall / max(fe.stats["dispatches"], 1) * 1e3
+    out = {"n_requests": n_req, "rate": static_qps,
+           "retraces": retraces, "dispatch_ms": dispatch_ms,
+           "rejected": fe.stats["rejected"]}
+    for t in (0, 1):
+        p50, p99 = (float(x) for x in np.percentile(lat[t], (50, 99)))
+        role = "quiet" if t == 0 else "burst"
+        out[f"{role}_n"] = int(len(lat[t]))
+        out[f"{role}_p50_ms"] = p50
+        out[f"{role}_p99_ms"] = p99
+        _emit(f"tenants/{role}/p50", p50 / 1e3,
+              f"p99={p99:.2f}ms;n={len(lat[t])}")
+    _emit("tenants/retrace", 0.0,
+          f"count={retraces};dispatch_ms={dispatch_ms:.2f}")
+    assert retraces == 0, (
+        f"mixed-tenant traffic retraced {retraces} times after warm-up — "
+        "a tenant/filter swap is recompiling; the filters-are-data "
+        "contract is broken")
+    # round-robin fairness: the quiet tenant waits at most the flush
+    # deadline plus a couple of other queues' micro-batch turns. Budget 8
+    # service times (vs the tens a FIFO starved behind the burst backlog
+    # would take) so a contended host can't flake the gate — the bound
+    # scales with the measured per-dispatch cost
+    bound_ms = flush_ms + 8.0 * dispatch_ms
+    assert out["quiet_p99_ms"] <= bound_ms, (
+        f"quiet-tenant p99 {out['quiet_p99_ms']:.2f}ms exceeds the "
+        f"fair-flush bound {bound_ms:.2f}ms — the bursting tenant is "
+        "starving the quiet one")
+    table["mixed_tenant_tail_latency"] = out
+    _persist_multi_tenant(out)
+
+
+def _persist_multi_tenant(out: dict) -> None:
+    """Append this run's mixed-tenant rows to BENCH_multi_tenant.json at
+    the repo root, keyed by git sha — same committed-ledger convention as
+    ``_persist_candidate_path`` (re-running on a sha overwrites that sha's
+    entry; the cross-PR trend lives in the committed copy)."""
+    import subprocess
+    path = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                        "BENCH_multi_tenant.json"))
+    try:
+        sha = subprocess.check_output(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(path), text=True).strip()
+    except Exception:
+        sha = "unknown"
+    hist = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                hist = json.load(f)
+        except Exception:
+            hist = {}
+    hist[sha] = {k: out[k] for k in
+                 ("quiet_p50_ms", "quiet_p99_ms", "burst_p50_ms",
+                  "burst_p99_ms", "dispatch_ms", "retraces",
+                  "n_requests", "rate")}
+    with open(path, "w") as f:
+        json.dump(hist, f, indent=1, default=float)
+
+
 def main() -> None:
     import argparse
     ap = argparse.ArgumentParser()
@@ -820,6 +971,7 @@ def main() -> None:
         rerank_kernel_vs_ref(table, quick=True)
         dynamic_corpus(table, quick=True)
         serving_tail_latency(table, quick=True)
+        mixed_tenant_tail_latency(table, quick=True)
         ingest_throughput(table, quick=True)
         kernel_micro(table)
     else:
@@ -833,6 +985,7 @@ def main() -> None:
         rerank_kernel_vs_ref(table)
         dynamic_corpus(table)
         serving_tail_latency(table)
+        mixed_tenant_tail_latency(table)
         ingest_throughput(table)
     name = "paper_tables_quick.json" if args.quick else "paper_tables.json"
     with open(os.path.join(RESULTS, name), "w") as f:

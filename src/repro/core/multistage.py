@@ -119,14 +119,19 @@ _ACCESSORS: list = []
 
 
 def _store_accessors():
-    """The store's key schema (which dict keys hold masks / validity) is
-    owned by ``repro.retrieval.store.VectorSchema``; retrieval depends on
-    core, so the oracle borrows the accessors with a call-time import —
-    it runs at trace time only and cannot cycle (core is fully imported
-    long before any search is traced). Cached after the first trace."""
+    """The store's key schema (which dict keys hold masks / validity /
+    tenant-filter companions) is owned by
+    ``repro.retrieval.store.VectorSchema``; retrieval depends on core, so
+    the oracle borrows the accessors with a call-time import — it runs at
+    trace time only and cannot cycle (core is fully imported long before
+    any search is traced). Cached after the first trace."""
     if not _ACCESSORS:
-        from repro.retrieval.store import rerank_arrays, validity
-        _ACCESSORS.append((rerank_arrays, validity))
+        from repro.retrieval.store import (VALIDITY_KEY, as_filter_arrays,
+                                           effective_validity, filter_words,
+                                           rerank_arrays, validity)
+        _ACCESSORS.append((rerank_arrays, validity, VALIDITY_KEY,
+                           as_filter_arrays, effective_validity,
+                           filter_words))
     return _ACCESSORS[0]
 
 
@@ -140,7 +145,7 @@ def _score_stage(stage: Stage, store: dict, q: jax.Array,
     dead slots (preallocated padding, deleted pages) score NEG at every
     stage so they can never enter a top-k on merit.
     """
-    rerank_arrays, validity = _store_accessors()
+    rerank_arrays, validity = _store_accessors()[:2]
     vecs, mask, scales = rerank_arrays(store, stage.vector)
     if scales is not None:
         # float copy dropped (quantize_store(stages=...)): the oracle
@@ -177,14 +182,27 @@ def _score_stage(stage: Stage, store: dict, q: jax.Array,
 
 
 def search(store: dict, q: jax.Array, stages: tuple,
-           q_mask: jax.Array | None = None, scan_scorer=None):
+           q_mask: jax.Array | None = None, scan_scorer=None, fspec=None):
     """Run the cascade. Returns (scores [B, k_final], ids [B, k_final]),
     ids sorted by descending final-stage score.
 
     ``scan_scorer(stage, store, q, q_mask) -> [B, N]``, when given,
     replaces the reference scorer for the full-corpus scan stage only —
     the serving engine injects its kernel dispatch here so both share one
-    cascade loop (and the bitwise-parity contract holds structurally)."""
+    cascade loop (and the bitwise-parity contract holds structurally).
+
+    ``fspec`` is a request-scoped ``repro.retrieval.store.FilterSpec`` (or
+    packed triple, or None): the oracle folds it into the store's validity
+    entry via the SAME ``effective_validity`` combiner the engine uses, so
+    filtered engine-vs-oracle parity is structural, not re-implemented."""
+    if fspec is not None:
+        (_, _, VALIDITY_KEY, as_filter_arrays, effective_validity,
+         filter_words) = _store_accessors()
+        arrays = as_filter_arrays(fspec, filter_words(store))
+        store = dict(store)
+        eff = effective_validity(store, arrays)
+        if eff is not None:
+            store[VALIDITY_KEY] = eff
     cand = None
     scores = None
     for stage in stages:

@@ -1,4 +1,12 @@
-"""Jitted wrapper for the EmbeddingBag kernel: modes, padding, dispatch."""
+"""Jitted wrapper for the EmbeddingBag kernel: modes, padding, dispatch.
+
+Dispatch goes through the ``kernels.dispatch`` registry like every other
+op family (no ad-hoc ``impl ==`` switch of its own): the default
+``impl=None`` resolves once per call site to the Pallas kernel natively
+on TPU and the reference everywhere else, an explicit ``impl`` pins a
+path (tests exercise the interpreted kernel this way), and every traced
+body records its routing through the registry's counter hook.
+"""
 from __future__ import annotations
 
 import functools
@@ -6,19 +14,16 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch as DSP
+from repro.kernels.dispatch import default_interpret
 from repro.kernels.embed_bag.embed_bag import embed_bag_pallas
 from repro.kernels.embed_bag.ref import embed_bag_ref
 
 
 @functools.partial(jax.jit, static_argnames=("mode", "impl", "interpret"))
-def embed_bag(table: jax.Array, indices: jax.Array,
-              valid: jax.Array | None = None, *, mode: str = "sum",
-              impl: str = "pallas", interpret: bool = True) -> jax.Array:
-    """Multi-hot embedding-bag lookup.
-
-    table [V,d]; indices [B,L] (entries < 0 or valid==False are padding);
-    mode in {"sum", "mean"}. Returns [B,d] f32.
-    """
+def _embed_bag(table: jax.Array, indices: jax.Array,
+               valid: jax.Array | None, *, mode: str,
+               impl: str, interpret: bool) -> jax.Array:
     B, L = indices.shape
     if valid is None:
         valid = indices >= 0
@@ -28,6 +33,43 @@ def embed_bag(table: jax.Array, indices: jax.Array,
     elif mode != "sum":
         raise ValueError(mode)
     idx = jnp.clip(indices, 0, table.shape[0] - 1).astype(jnp.int32)
+    DSP.record("embed_bag", impl)
     if impl == "ref":
         return embed_bag_ref(table, idx, w)
     return embed_bag_pallas(table, idx, w, interpret=interpret)
+
+
+def embed_bag(table: jax.Array, indices: jax.Array,
+              valid: jax.Array | None = None, *, mode: str = "sum",
+              impl: str | None = None,
+              interpret: bool | None = None) -> jax.Array:
+    """Multi-hot embedding-bag lookup.
+
+    table [V,d]; indices [B,L] (entries < 0 or valid==False are padding);
+    mode in {"sum", "mean"}. Returns [B,d] f32.
+
+    ``impl=None`` resolves through the dispatch registry (Pallas natively
+    on TPU, reference elsewhere); pass "pallas"/"ref" to pin a path and
+    ``interpret`` to force the kernel interpreter off its default.
+    """
+    if impl is None:
+        impl, r_interp = DSP.resolve("embed_bag", use_kernel=True)
+    else:
+        r_interp = default_interpret()
+    return _embed_bag(table, indices, valid, mode=mode, impl=impl,
+                      interpret=r_interp if interpret is None else interpret)
+
+
+def _probe_embed_bag() -> bool:
+    """Trace a tiny embed-bag kernel instance (the registry probe)."""
+    table = jnp.zeros((8, 128), jnp.float32)
+    idx = jnp.zeros((1, 4), jnp.int32)
+    out = _embed_bag(table, idx, None, mode="sum", impl="pallas",
+                     interpret=default_interpret())
+    jax.block_until_ready(out)
+    return True
+
+
+DSP.register(DSP.KernelOp(
+    name="embed_bag", probe=_probe_embed_bag, fallback="ref",
+    interpret_ok=False, kernel_impls=frozenset({"pallas"})))

@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.pooling import smoothing_weights
+from repro.kernels import dispatch as DSP
+from repro.kernels.dispatch import default_interpret
 from repro.kernels.pooling.pooling import pool_pallas
 from repro.kernels.pooling.ref import pool_ref
 
@@ -157,7 +159,7 @@ def pool_pages_grouped(x: jax.Array, mask: jax.Array, p2: jax.Array,
     ``pool_ref(x, mask, p2 @ G)`` — numerator and denominator both factor
     through the group sums — with the group stage evaluated as a
     reshape-sum instead of a matmul against indicator rows."""
-    _FUSED_POOL_TRACES[0] += 1
+    DSP.record("pooling", "jnp")
     B, S, d = x.shape
     w = S // n_groups
     assert S == n_groups * w, (S, n_groups)
@@ -175,51 +177,33 @@ def pool_pages_grouped(x: jax.Array, mask: jax.Array, p2: jax.Array,
     return out
 
 
-def default_interpret() -> bool:
-    """Pallas compiles natively on TPU; everywhere else it interprets."""
-    return jax.default_backend() != "tpu"
+def _probe_pool() -> bool:
+    """Trace a tiny fused-pooling kernel instance (the ``pooling``
+    dispatch-registry probe; callers resolve to the jnp twin when it
+    fails)."""
+    x = jnp.zeros((1, 8, 128), jnp.float32)
+    m = jnp.ones((1, 8), jnp.float32)
+    pm = jnp.ones((2, 8), jnp.float32)
+    out = pool_pages_fused(x, m, pm, impl="pallas", block_s=8,
+                           interpret=default_interpret())
+    jax.block_until_ready(out)
+    return True
 
 
-@functools.lru_cache(maxsize=1)
 def pallas_available() -> bool:
-    """Probe whether the fused pooling kernel can execute on this
-    host/backend (same contract as ``kernels.maxsim.ops.pallas_available``:
-    callers fall back to the jnp twin when False)."""
-    try:
-        x = jnp.zeros((1, 8, 128), jnp.float32)
-        m = jnp.ones((1, 8), jnp.float32)
-        pm = jnp.ones((2, 8), jnp.float32)
-        out = pool_pages_fused(x, m, pm, impl="pallas", block_s=8,
-                               interpret=default_interpret())
-        jax.block_until_ready(out)
-        return True
-    except Exception:
-        return False
-
-
-def resolve_impl(use_kernel: bool) -> tuple:
-    """Pick (impl, interpret) for the fused pooling operator once, at
-    pipeline-build time — the mirror of the scan path's
-    ``engine._resolve_impl``. On TPU the Pallas kernel compiles natively;
-    everywhere else the operator runs its jnp twin (``pool_ref`` — the
-    same single-matmul formulation) because interpret-mode Pallas is a
-    correctness tool, not an ingest path. use_kernel=False is the
-    functional ``core.pooling`` reference."""
-    if use_kernel and not default_interpret() and pallas_available():
-        return "pallas", False
-    return "ref", True
-
-
-# trace-time counter for the fused pooling operator (both the Pallas
-# kernel and its jnp twins bump it) — an OBSERVATIONAL signal that a
-# kernel-dispatch code path really routed here, used by the ingest
-# benchmark's CI gate (a config-derived flag could not catch a silent
-# fallback to the reference chain)
-_FUSED_POOL_TRACES = [0]
+    """Whether the fused pooling kernel executes here
+    (``dispatch.available``)."""
+    return DSP.available("pooling")
 
 
 def fused_pool_trace_count() -> int:
-    return _FUSED_POOL_TRACES[0]
+    """Trace-time dispatches that routed through the FUSED pooling
+    operator (the Pallas kernel or either jnp evaluation of the same
+    single-normalisation matrix formulation — ``pool_ref`` and the
+    factored ``pool_pages_grouped``; the functional ``core.pooling``
+    reference chain never records). The OBSERVATIONAL signal the ingest
+    benchmark's CI gate diffs, counted by the ``dispatch`` registry."""
+    return DSP.kernel_dispatch_count("pooling")
 
 
 @functools.partial(jax.jit, static_argnames=("impl", "block_s", "l2_norm",
@@ -228,7 +212,7 @@ def pool_pages_fused(x: jax.Array, mask: jax.Array, pool_mat: jax.Array,
                      *, impl: str = "pallas", block_s: int = 0,
                      l2_norm: bool = True, interpret: bool = True):
     """x [B,S,d] + mask [B,S] + pool_mat [n_out,S] -> pooled [B,n_out,d]."""
-    _FUSED_POOL_TRACES[0] += 1
+    DSP.record("pooling", impl)
     if impl == "ref":
         return pool_ref(x, mask, pool_mat, l2_norm=l2_norm)
     S = x.shape[1]
@@ -237,3 +221,14 @@ def pool_pages_fused(x: jax.Array, mask: jax.Array, pool_mat: jax.Array,
         bs //= 2
     return pool_pallas(x, mask, pool_mat, block_s=max(bs, 1),
                        l2_norm=l2_norm, interpret=interpret)
+
+
+# interpret-mode Pallas is a correctness tool, not an ingest path: off-TPU
+# the fused operator serves a jnp evaluation (the ingest pipeline maps the
+# resolved fallback onto ``pool_pages_grouped``). All three impl names are
+# evaluations of the SAME fused matrix formulation, so all of them count as
+# kernel-routed for the ingest CI gate — the functional ``core.pooling``
+# reference chain is the only non-fused path and it never records.
+DSP.register(DSP.KernelOp(
+    name="pooling", probe=_probe_pool, fallback="ref",
+    interpret_ok=False, kernel_impls=frozenset({"pallas", "jnp", "ref"})))

@@ -37,6 +37,20 @@ ragged-traffic QPS vs the fixed-shape static QPS on the same corpus, and
 the steady-state query-shape retrace count (expected 0 after bucket
 warm-up). ``--arrival-rate 0`` (default) auto-sets the offered load to
 ~0.8x the measured static QPS, keeping the system stable but busy.
+
+Multi-tenant mode (composes with static and traffic modes):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch colpali --pages 120 \
+      --tenants 4 --traffic 200 --tenant-quota 8
+
+splits the corpus round-robin across ``--tenants`` tenants (each batch
+upserted with its tenant id stamped into the ``doc_tenant`` store
+companion) and scopes every request to a random tenant via a
+``store.FilterSpec`` — request filters are DATA through the compiled
+cascade, so mixed-tenant traffic at warmed buckets causes zero retraces.
+The frontend queues per filter, flushes round-robin (a bursting tenant
+cannot starve a quiet one), and ``--tenant-quota`` bounds queued rows per
+tenant (excess submits are rejected at admission).
 """
 from __future__ import annotations
 
@@ -46,11 +60,41 @@ import time
 import numpy as np
 
 
+def _multi_tenant_retriever(args, cfg, bench, stages, int8_on, **kw):
+    """Build a Retriever whose corpus is split round-robin across
+    ``args.tenants`` tenants: tenant t owns benchmark pages t, t+T, ...,
+    upserted with its tenant id stamped into the ``doc_tenant`` store
+    companion. Returns the retriever (page ids are reassigned in upsert
+    order, so qrels-based metrics don't apply in tenant mode)."""
+    import jax.numpy as jnp
+    from repro.retrieval.retriever import Retriever
+    from repro.retrieval.segments import bucket_capacity
+    from repro.retrieval.store import build_store, quantize_store
+
+    T = args.tenants
+    pages = np.asarray(bench.pages)
+    tt = jnp.asarray(bench.token_types)
+    batches = []
+    for t in range(T):
+        sel = np.arange(t, len(pages), T)
+        b = build_store(cfg, jnp.asarray(pages[sel]), tt)
+        if int8_on:
+            b = quantize_store(b, names=(stages[0].vector,), stages=stages)
+        batches.append(b)
+    kw.setdefault("capacity", bucket_capacity(len(pages)))
+    retriever = Retriever(batches[0], **kw)       # seed batch = tenant 0
+    for t in range(1, T):
+        retriever.upsert(batches[t], tenant=t)
+    return retriever
+
+
 def _run_static(args, cfg, bench, store, stages, int8_on):
     import jax.numpy as jnp
     from repro.data.synthetic import evaluate_ranking
     from repro.retrieval.retriever import Retriever
 
+    if args.tenants > 1:
+        return _run_static_tenants(args, cfg, bench, stages, int8_on)
     retriever = Retriever(store)
     q = jnp.asarray(bench.queries)
     qm = jnp.asarray(bench.query_mask)
@@ -72,6 +116,36 @@ def _run_static(args, cfg, bench, store, stages, int8_on):
         ("/int8" if int8_on else "")
     print(f"{args.stages}-stage [{scan}]: QPS={qps:.1f}  " +
           "  ".join(f"{k}={v:.3f}" for k, v in metrics.items()))
+
+
+def _run_static_tenants(args, cfg, bench, stages, int8_on):
+    """Static mode over a tenant-partitioned corpus: per-tenant scoped
+    searches (tenant filters are traced data — one compiled cascade serves
+    every tenant, asserted via the retrace counter)."""
+    import jax.numpy as jnp
+    from repro.retrieval import tracing
+    from repro.retrieval.store import FilterSpec
+
+    retriever = _multi_tenant_retriever(args, cfg, bench, stages, int8_on)
+    q = jnp.asarray(bench.queries)
+    qm = jnp.asarray(bench.query_mask)
+    retriever.search(q, qm, stages=stages,
+                     filter=FilterSpec(tenant=0))             # compile
+    warm = tracing.trace_count()
+    per_tenant = []
+    for t in range(args.tenants):
+        t0 = time.time()
+        for _ in range(3):
+            scores, _ = retriever.search(q, qm, stages=stages,
+                                         translate_ids=False,
+                                         filter=FilterSpec(tenant=t))
+        scores.block_until_ready()
+        per_tenant.append(len(q) / ((time.time() - t0) / 3))
+    retraces = tracing.trace_count() - warm
+    qps = ", ".join(f"t{t}={v:.1f}" for t, v in enumerate(per_tenant))
+    print(f"{args.stages}-stage x {args.tenants} tenants "
+          f"[{retriever.n_docs} docs total]: scoped QPS {qps}  "
+          f"tenant-swap retraces={retraces} (expect 0)")
 
 
 def _make_ragged_requests(bench, n_req: int, rng, min_tokens: int = 3):
@@ -97,7 +171,13 @@ def _run_traffic(args, cfg, bench, store, stages, int8_on):
     from repro.retrieval.frontend import ServingFrontend, replay_open_loop
     from repro.retrieval.retriever import Retriever
 
-    retriever = Retriever(store, scan_chunk=args.chunk)
+    from repro.retrieval.store import FilterSpec
+
+    if args.tenants > 1:
+        retriever = _multi_tenant_retriever(args, cfg, bench, stages,
+                                            int8_on, scan_chunk=args.chunk)
+    else:
+        retriever = Retriever(store, scan_chunk=args.chunk)
     q = jnp.asarray(bench.queries)
     qm = jnp.asarray(bench.query_mask)
 
@@ -114,11 +194,18 @@ def _run_traffic(args, cfg, bench, store, stages, int8_on):
     fe = ServingFrontend(retriever, stages, max_batch=args.max_batch,
                          max_q=bench.queries.shape[1],
                          flush_ms=args.flush_ms,
-                         cache_size=args.result_cache)
+                         cache_size=args.result_cache,
+                         tenant_quota=args.tenant_quota)
     n_warm = fe.warm()
     rate = args.arrival_rate or 0.8 * static_qps
     rng = np.random.default_rng(17)
     reqs = _make_ragged_requests(bench, args.traffic, rng)
+    if args.tenants > 1:
+        # scope every request to a random tenant — filters are data, so
+        # the mixed-tenant stream re-dispatches the warmed executables
+        tenant_of = rng.integers(0, args.tenants, size=len(reqs))
+        reqs = [(rq, rm, FilterSpec(tenant=int(t)))
+                for (rq, rm), t in zip(reqs, tenant_of)]
 
     warm_traces = tracing.trace_count()
     served, wall = replay_open_loop(fe, reqs, rate, seed=18)
@@ -127,9 +214,10 @@ def _run_traffic(args, cfg, bench, store, stages, int8_on):
     lat_ms = np.asarray([p.latency for p in served]) * 1e3
     qps = len(served) / wall
     p50, p95, p99 = np.percentile(lat_ms, (50, 95, 99))
+    tenants = f", {args.tenants} tenants" if args.tenants > 1 else ""
     print(f"traffic [{args.traffic} ragged req, Poisson {rate:.0f}/s, "
           f"buckets B<={fe.max_batch} Q<={fe.max_q} ({n_warm} warmed), "
-          f"flush {args.flush_ms:.1f}ms]:")
+          f"flush {args.flush_ms:.1f}ms{tenants}]:")
     print(f"  p50={p50:.2f}ms  p95={p95:.2f}ms  p99={p99:.2f}ms  "
           f"QPS={qps:.1f} (static fixed-shape QPS={static_qps:.1f}, "
           f"ratio {qps/static_qps:.2f}x)")
@@ -137,6 +225,7 @@ def _run_traffic(args, cfg, bench, store, stages, int8_on):
           f"rows/dispatch={fe.stats['rows_real']/fe.stats['dispatches']:.1f}  "
           f"padded rows={fe.stats['rows_padded']}  "
           f"cache hits={fe.stats['cache_hits']}  "
+          f"rejected={fe.stats['rejected']}  "
           f"steady-state retraces={retraces} (expect 0)")
 
 
@@ -288,6 +377,14 @@ def main():
                          "power of two)")
     ap.add_argument("--result-cache", type=int, default=0,
                     help="LRU result-cache entries (0 = off)")
+    ap.add_argument("--tenants", type=int, default=0,
+                    help="multi-tenant mode: split the corpus round-robin "
+                         "across this many tenants (doc_tenant-stamped "
+                         "upserts) and scope requests via FilterSpec")
+    ap.add_argument("--tenant-quota", type=int, default=0,
+                    help="max queued rows per tenant in the traffic "
+                         "frontend (0 = unlimited); excess submits are "
+                         "rejected at admission")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)

@@ -14,10 +14,20 @@ API call", pod-scale edition). Design rules:
   compacted to a fixed per-shard cap (exact when cap >= per-shard hits;
   cap defaults to 8x the fair share);
 - the corpus is a tuple of fixed-CAPACITY segments: arrays are padded to
-  stable shapes and a per-doc ``doc_valid`` mask NEGs dead slots (ingestion
+  stable shapes and a per-doc EFFECTIVE mask NEGs dead slots (ingestion
   headroom, deleted pages, the ragged tail of an uneven shard) at every
   stage — mutation and raggedness never change compiled shapes, so
   steady-state upsert/delete/search re-dispatches cached executables;
+- the effective mask is ``doc_valid`` AND the request's tenant/metadata
+  filter, combined on device by ``store.effective_validity`` from the
+  store companions (``doc_tenant``, ``doc_filter``) and the request's
+  packed ``FilterSpec`` triple — a replicated TRACED argument of the
+  compiled cascade, so tenant switches and filter changes at a fixed
+  layout are pure dispatch (zero retraces), and a filtered search is
+  bitwise the unfiltered search over the surviving documents;
+- kernel routing (scan + fused rerank) resolves once at build time through
+  the ``kernels.dispatch`` registry, the same policy table every op family
+  uses;
 - candidate ids live in a global SLOT space (segment offsets = cumulative
   capacities); per-segment results merge via ``merge_topk``. There is no
   divisibility constraint between corpus size and shard count: each shard
@@ -44,9 +54,11 @@ from jax.experimental.shard_map import shard_map
 
 from repro.core import maxsim as MS
 from repro.core.multistage import DEFAULT_SCAN_TOPK_CHUNK, Stage
+from repro.kernels import dispatch as DSP
 from repro.kernels.maxsim import ops as KOPS
-from repro.retrieval.store import (VALIDITY_KEY, rerank_arrays, scan_arrays,
-                                   validity)
+from repro.retrieval.store import (VALIDITY_KEY, as_filter_arrays,
+                                   effective_validity, filter_words,
+                                   rerank_arrays, scan_arrays)
 from repro.retrieval.topk import (allgather_topk, gathered_merge_topk,
                                   merge_topk)
 from repro.retrieval.tracing import record_trace
@@ -151,22 +163,6 @@ def _dispatch_scan_topk(stage: Stage, vecs, mask, q, q_mask, scales,
                                     impl=use_impl, interpret=use_interp)
 
 
-def _resolve_impl(stages: tuple) -> tuple:
-    """Pick (impl, interpret) for the scan stage once, at build time."""
-    if stages and stages[0].use_kernel and KOPS.pallas_available():
-        return "pallas", KOPS.default_interpret()
-    return "ref", True
-
-
-def _resolve_rerank_impl(stages: tuple) -> tuple:
-    """Pick (impl, interpret) for the fused rerank path once, at build
-    time: the Pallas gather kernel natively on TPU, the blockwise jnp twin
-    elsewhere (see ``kernels.maxsim.ops.resolve_rerank_impl``). Stages
-    with ``rerank_kernel=False`` still run the legacy reference."""
-    return KOPS.resolve_rerank_impl(
-        any(s.rerank_kernel for s in stages[1:]))
-
-
 def _score_candidates(stage_vecs, stage_mask, stage_scales, q, q_mask,
                       rows, ok, impl: str = "ref", interpret: bool = True):
     """Score per-query candidate lists against ONE segment's arrays.
@@ -226,12 +222,21 @@ def _build_body(mesh: Mesh | None, stages: tuple, capacities: tuple,
                 rerank_overcommit: int):
     """The (unjitted) cascade over a tuple of segment store dicts.
 
-    fn(stores: tuple[dict, ...], q [B,Q,d], q_mask [B,Q]) ->
-    (scores [B,k], global slot ids [B,k]).
+    fn(stores: tuple[dict, ...], q [B,Q,d], q_mask [B,Q],
+    fspec (tenant (), require [W], any [W])) ->
+    (scores [B,k], global slot ids [B,k]). ``fspec`` is the packed
+    request-filter triple (``store.as_filter_arrays``) — traced data, so
+    every FilterSpec at this layout dispatches one executable.
     """
     assert capacities, "search needs at least one segment"
-    impl, interpret = _resolve_impl(stages)
-    rr_impl, rr_interpret = _resolve_rerank_impl(stages)
+    # kernel routing resolves ONCE at build time through the dispatch
+    # registry: the scan stage's streaming kernel (interpret-mode capable
+    # off-TPU) and the fused gather+rerank path (jnp twin off-TPU). Stages
+    # with use_kernel/rerank_kernel False run the reference.
+    impl, interpret = DSP.resolve(
+        "maxsim_scan", bool(stages and stages[0].use_kernel))
+    rr_impl, rr_interpret = DSP.resolve(
+        "maxsim_rerank", any(s.rerank_kernel for s in stages[1:]))
     offsets = _offsets(capacities)
     total_cap = sum(capacities)
 
@@ -240,23 +245,27 @@ def _build_body(mesh: Mesh | None, stages: tuple, capacities: tuple,
             else ("ref", True)
 
     if mesh is None:
-        def local_body(stores, q, q_mask):
+        def local_body(stores, q, q_mask, fspec):
             record_trace()
+            # one effective mask per segment — doc_valid AND the request's
+            # tenant/filter terms — computed once and threaded through
+            # every stage
+            effs = tuple(effective_validity(s, fspec) for s in stores)
             scores = cand = None
             for si, stage in enumerate(stages):
                 if si == 0:
                     parts_v, parts_i = [], []
-                    for store, cap, off in zip(stores, capacities, offsets):
+                    for store, eff, cap, off in zip(stores, effs, capacities,
+                                                    offsets):
                         vecs, mask, scales = _scan_arrays(store, stage)
                         if stage.scan_topk:
                             v, i = _dispatch_scan_topk(
                                 stage, vecs, mask, q, q_mask, scales,
-                                impl, interpret, validity(store),
-                                min(stage.k, cap))
+                                impl, interpret, eff, min(stage.k, cap))
                         else:
                             s = _dispatch_scan(stage, vecs, mask, q, q_mask,
                                                scales, impl, interpret,
-                                               doc_valid=validity(store))
+                                               doc_valid=eff)
                             v, i = jax.lax.top_k(s, min(stage.k, cap))
                         parts_v.append(v)
                         parts_i.append(i + off)
@@ -266,14 +275,14 @@ def _build_body(mesh: Mesh | None, stages: tuple, capacities: tuple,
                         min(stage.k, total_cap))
                 else:
                     s_all = None
-                    for store, cap, off in zip(stores, capacities, offsets):
+                    for store, eff, cap, off in zip(stores, effs, capacities,
+                                                    offsets):
                         local = cand - off
                         in_seg = (local >= 0) & (local < cap)
                         rows = jnp.clip(local, 0, cap - 1)
                         ok = in_seg
-                        dv = validity(store)
-                        if dv is not None:
-                            ok = ok & jnp.take(dv, rows, axis=0)
+                        if eff is not None:
+                            ok = ok & jnp.take(eff, rows, axis=0)
                         s = _score_candidates(
                             *rerank_arrays(store, stage.vector),
                             q, q_mask, rows, ok, *rerank_dispatch(stage))
@@ -294,14 +303,18 @@ def _build_body(mesh: Mesh | None, stages: tuple, capacities: tuple,
         # constraint, only this internal invariant on padded capacities
         assert cap % n_shards == 0, (cap, n_shards)
 
-    def body(stores, q, q_mask):
+    def body(stores, q, q_mask, fspec):
         record_trace()
         shard_idx = jax.lax.axis_index(axes)
+        # per-segment effective mask over the LOCAL slab (the companions
+        # shard along docs with everything else; fspec is replicated)
+        effs = tuple(effective_validity(s, fspec) for s in stores)
         scores = cand = None
         for si, stage in enumerate(stages):
             if si == 0:
                 parts_v, parts_i = [], []
-                for store, cap, off in zip(stores, capacities, offsets):
+                for store, eff, cap, off in zip(stores, effs, capacities,
+                                                offsets):
                     n_local = cap // n_shards
                     vecs, mask, scales = _scan_arrays(store, stage)
                     if stage.scan_topk:
@@ -309,8 +322,7 @@ def _build_body(mesh: Mesh | None, stages: tuple, capacities: tuple,
                         # the global slot space before the gather-merge
                         v, i = _dispatch_scan_topk(
                             stage, vecs, mask, q, q_mask, scales,
-                            impl, interpret, validity(store),
-                            min(stage.k, cap))
+                            impl, interpret, eff, min(stage.k, cap))
                         v, i = gathered_merge_topk(
                             v, i + shard_idx * n_local + off,
                             min(stage.k, cap), axes)
@@ -319,7 +331,7 @@ def _build_body(mesh: Mesh | None, stages: tuple, capacities: tuple,
                                                scales, impl, interpret)
                         v, i = allgather_topk(s_loc, min(stage.k, cap),
                                               axes, shard_idx, n_local,
-                                              valid_local=validity(store),
+                                              valid_local=eff,
                                               seg_offset=off)
                     parts_v.append(v)
                     parts_i.append(i)
@@ -332,7 +344,8 @@ def _build_body(mesh: Mesh | None, stages: tuple, capacities: tuple,
                 cap_slots = min(L, max(1, -(-L // n_shards))
                                 * rerank_overcommit)
                 parts_v, parts_i = [], []
-                for store, cap, off in zip(stores, capacities, offsets):
+                for store, eff, cap, off in zip(stores, effs, capacities,
+                                                offsets):
                     n_local = cap // n_shards
                     local = cand - off
                     in_seg = (local >= 0) & (local < cap)
@@ -341,9 +354,8 @@ def _build_body(mesh: Mesh | None, stages: tuple, capacities: tuple,
                     order = jnp.argsort(~mine, axis=1)[:, :cap_slots]
                     rows = jnp.take_along_axis(lclip % n_local, order, axis=1)
                     ok = jnp.take_along_axis(mine, order, axis=1)
-                    dv = validity(store)
-                    if dv is not None:
-                        ok = ok & jnp.take(dv, rows, axis=0)
+                    if eff is not None:
+                        ok = ok & jnp.take(eff, rows, axis=0)
                     s = _score_candidates(
                         *rerank_arrays(store, stage.vector),
                         q, q_mask, rows, ok, *rerank_dispatch(stage))
@@ -368,14 +380,16 @@ def _build_body(mesh: Mesh | None, stages: tuple, capacities: tuple,
                     min(stage.k, L))
         return scores, cand
 
-    def searcher(stores, q, q_mask):
+    def searcher(stores, q, q_mask, fspec):
         specs = tuple({k: P(axes) if v.ndim >= 1 else P()
                        for k, v in store.items()} for store in stores)
+        # the filter triple is replicated: every shard applies the same
+        # request predicate to its local slab
         fn = shard_map(body, mesh=mesh,
-                       in_specs=(specs, P(), P()),
+                       in_specs=(specs, P(), P(), (P(), P(), P())),
                        out_specs=(P(), P()),
                        check_rep=False)
-        return fn(stores, q, q_mask)
+        return fn(stores, q, q_mask, fspec)
 
     return searcher
 
@@ -385,28 +399,41 @@ def make_segmented_search_fn(mesh: Mesh | None, stages: tuple,
                              rerank_overcommit: int = 8):
     """Build the jitted multi-segment search callable.
 
-    Returns fn(stores: tuple[dict, ...], q [B,Q,d], q_mask [B,Q]) ->
-    (scores [B,k], global slot ids [B,k]). Compiled shapes depend only on
-    (stages, capacities, mesh) — never on fill level — which is what lets a
-    ``Retriever`` upsert/delete without retracing.
+    Returns fn(stores: tuple[dict, ...], q [B,Q,d], q_mask [B,Q],
+    fspec=None) -> (scores [B,k], global slot ids [B,k]). ``fspec`` is a
+    ``store.FilterSpec`` (or an already-packed triple, or None for the
+    match-everything filter) normalised host-side to the traced triple the
+    compiled cascade takes. Compiled shapes depend only on (stages,
+    capacities, mesh, filter width) — never on fill level OR filter
+    values — which is what lets a ``Retriever`` upsert/delete AND swap
+    tenants/filters without retracing.
     """
-    return jax.jit(_build_body(mesh, stages, tuple(capacities),
-                               rerank_overcommit))
+    jfn = jax.jit(_build_body(mesh, stages, tuple(capacities),
+                              rerank_overcommit))
+
+    def fn(stores, q, q_mask, fspec=None):
+        w = filter_words(stores[0]) if stores else 0
+        return jfn(stores, q, q_mask, as_filter_arrays(fspec, w))
+
+    return fn
 
 
 def make_search_fn(mesh: Mesh | None, stages: tuple, n_docs: int,
                    rerank_overcommit: int = 8):
     """Build the jitted search callable over a single raw store dict.
 
-    Returns fn(store_vectors: dict, q [B,Q,d], q_mask [B,Q]) ->
-    (scores [B,k], ids [B,k]).
+    Returns fn(store_vectors: dict, q [B,Q,d], q_mask [B,Q], fspec=None)
+    -> (scores [B,k], ids [B,k]). ``fspec`` follows
+    ``make_segmented_search_fn``: a ``FilterSpec``/packed triple/None,
+    applied against whichever store companions the dict carries (a raw
+    store without ``doc_tenant``/``doc_filter`` simply skips those terms).
 
     Matches the repro.core.multistage.search oracle bitwise when the scan
     stage runs in ref mode on a bf16/f32 store (use_kernel dispatch and
-    int8 storage trade exactness for throughput; chunking does not).
-    Ragged corpora are fine on any mesh: arrays are shard-padded inside the
-    compiled fn and the tail masked via ``doc_valid`` (zero-copy when
-    ``n_docs`` already divides evenly).
+    int8 storage trade exactness for throughput; chunking and filtering do
+    not). Ragged corpora are fine on any mesh: arrays are shard-padded
+    inside the compiled fn and the tail masked via ``doc_valid`` (zero-copy
+    when ``n_docs`` already divides evenly).
     """
     n_shards = _mesh_shards(mesh)
     cap = -(-n_docs // n_shards) * n_shards
@@ -417,16 +444,24 @@ def make_search_fn(mesh: Mesh | None, stages: tuple, n_docs: int,
             return jnp.pad(v, ((0, to - n),) + ((0, 0),) * (v.ndim - 1))
         return v
 
-    def fn(store, q, q_mask):
+    def inner(store, q, q_mask, fspec):
         src = dict(store)
         dv = src.pop(VALIDITY_KEY, None)
         if dv is None:
             dv = jnp.ones((n_docs,), bool)
+        # the tenant/filter companions (if present) pad with zeros, which
+        # is irrelevant: the padded tail is doc_valid-False anyway
         padded = {k: _pad_rows(v, n_docs, cap) for k, v in src.items()}
         padded[VALIDITY_KEY] = _pad_rows(dv, n_docs, cap)  # pads False
-        return body((padded,), q, q_mask)
+        return body((padded,), q, q_mask, fspec)
 
-    return jax.jit(fn)
+    jfn = jax.jit(inner)
+
+    def fn(store, q, q_mask, fspec=None):
+        return jfn(store, q, q_mask,
+                   as_filter_arrays(fspec, filter_words(store)))
+
+    return fn
 
 
 def store_shardings(mesh: Mesh | None, store_vectors: dict) -> dict | None:

@@ -26,12 +26,19 @@ entire sharded cascade per new shape: a compile storm on the hot path.
   ``flush_ms`` (deadline-based flush), so concurrent callers share an
   executable launch instead of paying one each. Batch rows are independent
   through every stage (row-wise einsum/top-k/gather), so micro-batched
-  results are bitwise those of per-request calls.
+  results are bitwise those of per-request calls. Requests carrying a
+  ``store.FilterSpec`` queue PER FILTER (one fspec per dispatch); flushes
+  round-robin across the filter queues so a bursting tenant cannot starve
+  a quiet one, and an optional per-tenant admission quota
+  (``tenant_quota``) bounds how much queue a single tenant may hold —
+  excess submits raise ``AdmissionError`` instead of growing the tail.
 - **result cache** (optional) — an LRU keyed on (stages, store
-  generation, query bytes, mask bytes) short-circuits repeated identical
-  queries without touching the device. The generation bumps on every
-  upsert/delete/compact, so a cached result can never outlive the corpus
-  it was computed against.
+  generation, FILTER identity, query bytes, mask bytes) short-circuits
+  repeated identical queries without touching the device. The generation
+  bumps on every upsert/delete/compact, so a cached result can never
+  outlive the corpus it was computed against; the filter identity keeps
+  tenants' caches disjoint — one tenant's cached results can never serve
+  (or leak to) another tenant's identical query.
 
 Single-threaded by design: ``submit``/``pump`` are driven by the serving
 loop (see ``replay_open_loop`` and ``repro.launch.serve --traffic``), which
@@ -44,6 +51,8 @@ from collections import OrderedDict, deque
 
 import numpy as np
 import jax.numpy as jnp
+
+from repro.retrieval.engine import NEG
 
 
 def bucket_ladder(max_value: int, min_value: int = 1) -> tuple:
@@ -59,6 +68,12 @@ def bucket_ladder(max_value: int, min_value: int = 1) -> tuple:
         out.append(v)
         v <<= 1
     return tuple(out)
+
+
+class AdmissionError(RuntimeError):
+    """A submit was rejected because the request's tenant already holds its
+    full admission quota of queued requests (load shedding at the door —
+    the caller should retry after draining or surface backpressure)."""
 
 
 class PendingResult:
@@ -94,7 +109,8 @@ class ServingFrontend:
 
     def __init__(self, retriever, stages: tuple, *, max_batch: int = 16,
                  max_q: int = 32, min_q: int = 8, flush_ms: float = 2.0,
-                 cache_size: int = 0, clock=time.perf_counter):
+                 cache_size: int = 0, tenant_quota: int = 0,
+                 clock=time.perf_counter):
         self.retriever = retriever
         self.stages = retriever._normalize(tuple(stages))
         self.b_buckets = bucket_ladder(max_batch)
@@ -103,12 +119,19 @@ class ServingFrontend:
         self.max_q = self.q_buckets[-1]
         self.flush_s = flush_ms / 1e3
         self.cache_size = cache_size
+        # max queued ROWS one tenant may hold (0 = unlimited): admission
+        # control, so a bursting tenant sheds load at the door instead of
+        # growing everyone's queue
+        self.tenant_quota = tenant_quota
         self.clock = clock
-        self._queue: deque = deque()         # (PendingResult, q, qm) triples
+        # one FIFO per filter identity (a micro-batch carries exactly one
+        # fspec); flushed round-robin so no filter queue can be starved
+        self._queues: OrderedDict = OrderedDict()   # fkey -> deque
         self._queued_rows = 0
+        self._tenant_rows: dict = {}                # tenant id -> rows
         self._cache: OrderedDict = OrderedDict()
         self.stats = {"requests": 0, "dispatches": 0, "cache_hits": 0,
-                      "rows_real": 0, "rows_padded": 0}
+                      "rows_real": 0, "rows_padded": 0, "rejected": 0}
 
     # ------------------------------------------------------------------
     # buckets
@@ -154,28 +177,33 @@ class ServingFrontend:
     # direct path (one request = one dispatch, still bucketed)
     # ------------------------------------------------------------------
 
-    def search(self, q, q_mask=None) -> tuple:
+    def search(self, q, q_mask=None, filter=None) -> tuple:
         """Serve one request now: pad to its bucket, dispatch, strip.
-        ``q`` is ``[q_len, d]`` (single query) or ``[b, q_len, d]``.
+        ``q`` is ``[q_len, d]`` (single query) or ``[b, q_len, d]``;
+        ``filter`` a ``store.FilterSpec`` scoping the request (or None).
         Returns host ``(scores [b, k], stable page ids [b, k])``."""
         q, qm = self._admit(q, q_mask)
+        fkey = self._filter_key(filter)
         self.stats["requests"] += 1
-        hit = self._cache_get(q, qm)
+        hit = self._cache_get(q, qm, fkey)
         if hit is not None:
             return hit
-        scores, ids = self._run_block([(q, qm)])
-        self._cache_put(q, qm, (scores, ids))
+        scores, ids = self._run_block([(q, qm)], fkey)
+        self._cache_put(q, qm, fkey, (scores, ids))
         return scores, ids
 
     # ------------------------------------------------------------------
     # micro-batching path
     # ------------------------------------------------------------------
 
-    def submit(self, q, q_mask=None, t_submit: float | None = None) -> \
-            PendingResult:
+    def submit(self, q, q_mask=None, filter=None,
+               t_submit: float | None = None) -> PendingResult:
         """Queue one request for the next micro-batch. Returns a
         ``PendingResult`` filled in by a later ``pump``/``flush``
-        (immediately, on a result-cache hit).
+        (immediately, on a result-cache hit). Requests queue per FILTER
+        identity — a micro-batch carries exactly one fspec — and a
+        tenant over its ``tenant_quota`` of queued rows gets
+        ``AdmissionError`` instead of a slot.
 
         ``t_submit`` is the request's TRUE arrival time on this frontend's
         clock (default: now). Replay loops must pass the scheduled arrival
@@ -183,38 +211,51 @@ class ServingFrontend:
         while the loop was blocked inside a dispatch is silently excluded
         from the measured latency (coordinated omission)."""
         q, qm = self._admit(q, q_mask)
+        fkey = self._filter_key(filter)
         self.stats["requests"] += 1
         pr = PendingResult(self.clock() if t_submit is None else t_submit)
-        hit = self._cache_get(q, qm)
+        hit = self._cache_get(q, qm, fkey)
         if hit is not None:
             pr.scores, pr.ids = hit
             pr.t_done = self.clock()
             pr.cached = True
             return pr
-        self._queue.append((pr, q, qm))
+        tenant = self._tenant_of(fkey)
+        if self.tenant_quota and self._tenant_rows.get(tenant, 0) \
+                + q.shape[0] > self.tenant_quota:
+            self.stats["rejected"] += 1
+            raise AdmissionError(
+                f"tenant {tenant} holds {self._tenant_rows.get(tenant, 0)} "
+                f"queued rows (quota {self.tenant_quota})")
+        self._queues.setdefault(fkey, deque()).append((pr, q, qm))
         self._queued_rows += q.shape[0]
+        self._tenant_rows[tenant] = self._tenant_rows.get(tenant, 0) \
+            + q.shape[0]
         return pr
 
     @property
     def pending(self) -> int:
-        """Queued (unserved) requests."""
-        return len(self._queue)
+        """Queued (unserved) requests, across every filter queue."""
+        return sum(len(qu) for qu in self._queues.values())
 
     def next_deadline(self) -> float | None:
-        """Absolute clock time the oldest queued request must flush by."""
-        if not self._queue:
+        """Absolute clock time the oldest queued request (across all
+        filter queues) must flush by."""
+        if not self._queues:
             return None
-        return self._queue[0][0].t_submit + self.flush_s
+        return min(qu[0][0].t_submit for qu in self._queues.values()) \
+            + self.flush_s
 
     def pump(self, now: float | None = None) -> int:
         """Flush micro-batches whose trigger has fired: queued rows fill
         ``max_batch``, or the oldest request's deadline passed. The serving
         loop calls this between admissions. Returns requests completed."""
         done = 0
-        while self._queue:
+        while self._queues:
             now = self.clock() if now is None else now
             full = self._queued_rows >= self.max_batch
-            due = now >= self._queue[0][0].t_submit + self.flush_s
+            deadline = self.next_deadline()
+            due = deadline is not None and now >= deadline
             if not (full or due):
                 break
             done += self.flush()
@@ -223,32 +264,48 @@ class ServingFrontend:
 
     def flush(self) -> int:
         """Serve ONE micro-batch now: pop FIFO requests up to ``max_batch``
-        rows, dispatch once, scatter results. Returns requests served."""
-        if not self._queue:
+        rows from the next filter queue in ROUND-ROBIN order, dispatch
+        once, scatter results. Returns requests served. Round-robin is the
+        fairness half of multi-tenant serving: a tenant bursting a long
+        queue gets one micro-batch per turn, same as the quiet tenant whose
+        single request would otherwise wait behind the whole burst."""
+        if not self._queues:
             return 0
+        fkey, queue = next(iter(self._queues.items()))
         take = []
         rows = 0
-        while self._queue and rows + self._queue[0][1].shape[0] \
-                <= self.max_batch:
-            item = self._queue.popleft()
+        while queue and rows + queue[0][1].shape[0] <= self.max_batch:
+            item = queue.popleft()
             take.append(item)
             rows += item[1].shape[0]
-        scores, ids = self._run_block([(q, qm) for _, q, qm in take])
+        # rotate: a still-loaded queue goes to the back of the service
+        # order, an empty one is dropped
+        del self._queues[fkey]
+        if queue:
+            self._queues[fkey] = queue
+        scores, ids = self._run_block([(q, qm) for _, q, qm in take], fkey)
         r0 = 0
         t_done = self.clock()
+        tenant = self._tenant_of(fkey)
         for pr, q, qm in take:
             b = q.shape[0]
             pr.scores, pr.ids = scores[r0:r0 + b], ids[r0:r0 + b]
             pr.t_done = t_done
-            self._cache_put(q, qm, (pr.scores, pr.ids))
+            self._cache_put(q, qm, fkey, (pr.scores, pr.ids))
             r0 += b
         self._queued_rows -= rows
+        left = self._tenant_rows.get(tenant, 0) - rows
+        if left > 0:
+            self._tenant_rows[tenant] = left
+        else:
+            self._tenant_rows.pop(tenant, None)
         return len(take)
 
     def drain(self) -> int:
-        """Flush until the queue is empty. Returns requests served."""
+        """Flush until every filter queue is empty. Returns requests
+        served."""
         done = 0
-        while self._queue:
+        while self._queues:
             done += self.flush()
         return done
 
@@ -273,9 +330,26 @@ class ServingFrontend:
         self.bucket_for(b, q_len)            # bounds check only
         return q, qm
 
-    def _run_block(self, reqs: list) -> tuple:
-        """Pad a list of admitted requests into one bucket block and
-        dispatch it. Returns host (scores [rows, k], page ids [rows, k])."""
+    @staticmethod
+    def _filter_key(filter):
+        """Canonical queue/cache identity of a request filter. A
+        ``FilterSpec`` is frozen, canonicalised and hashable, so it IS the
+        key; the null spec collapses to None (bitwise the same search, so
+        splitting its queue or cache line would only cost batching)."""
+        if filter is None or getattr(filter, "is_null", False):
+            return None
+        return filter
+
+    @staticmethod
+    def _tenant_of(fkey) -> int:
+        """The tenant a queue entry bills its admission quota to (-1 =
+        unscoped requests, which share one bucket)."""
+        return getattr(fkey, "tenant", -1) if fkey is not None else -1
+
+    def _run_block(self, reqs: list, fkey=None) -> tuple:
+        """Pad a list of admitted same-filter requests into one bucket
+        block and dispatch it. Returns host (scores [rows, k], page ids
+        [rows, k])."""
         rows = sum(q.shape[0] for q, _ in reqs)
         q_len = max(q.shape[1] for q, _ in reqs)
         d = reqs[0][0].shape[2]
@@ -288,43 +362,53 @@ class ServingFrontend:
             qp[r0:r0 + b, :ql] = q
             qmp[r0:r0 + b, :ql] = qm
             r0 += b
-        return self._dispatch(qp, qmp, rows=rows)
+        return self._dispatch(qp, qmp, rows=rows, fkey=fkey)
 
-    def _dispatch(self, qp: np.ndarray, qmp: np.ndarray, rows: int) -> tuple:
+    def _dispatch(self, qp: np.ndarray, qmp: np.ndarray, rows: int,
+                  fkey=None) -> tuple:
         """One cascade launch on a padded bucket block. Padded batch rows
         are dropped BEFORE id translation (their scores rank dead/zero
-        content; translating them would be wasted host work)."""
+        content; translating them would be wasted host work). ``fkey`` is
+        the block's filter — data into the compiled cascade, so mixed
+        filter traffic at warmed buckets stays zero-retrace."""
         self.stats["dispatches"] += 1
         self.stats["rows_real"] += rows
         self.stats["rows_padded"] += qp.shape[0] - rows
         scores, slots = self.retriever.search(
             jnp.asarray(qp), jnp.asarray(qmp), stages=self.stages,
-            translate_ids=False)
+            translate_ids=False, filter=fkey)
         scores = np.asarray(scores)[:rows]
         slots = np.asarray(slots)[:rows]
-        return scores, self.retriever.store.translate_slots(slots)
+        ids = self.retriever.store.translate_slots(slots)
+        # filter-excluded live slots score NEG like dead slots; mask their
+        # ids so filler can never expose another tenant's page ids (same
+        # contract as Retriever.search with translate_ids=True)
+        return scores, np.where(scores <= NEG / 2, np.int64(-1), ids)
 
-    def _cache_key(self, q: np.ndarray, qm: np.ndarray):
+    def _cache_key(self, q: np.ndarray, qm: np.ndarray, fkey):
         # the store generation invalidates every entry on corpus mutation
         # (upsert/delete/compact) — a cached result must never outlive the
-        # corpus it was computed against
-        return (self.stages, self.retriever.store.generation,
+        # corpus it was computed against. The FILTER identity is part of
+        # the key: the same query bytes under different tenants/filters are
+        # DIFFERENT requests, and serving one tenant's cached results to
+        # another would cross the isolation boundary.
+        return (self.stages, self.retriever.store.generation, fkey,
                 q.shape, q.tobytes(), qm.tobytes())
 
-    def _cache_get(self, q, qm):
+    def _cache_get(self, q, qm, fkey):
         if not self.cache_size:
             return None
-        key = self._cache_key(q, qm)
+        key = self._cache_key(q, qm, fkey)
         hit = self._cache.get(key)
         if hit is not None:
             self._cache.move_to_end(key)
             self.stats["cache_hits"] += 1
         return hit
 
-    def _cache_put(self, q, qm, result) -> None:
+    def _cache_put(self, q, qm, fkey, result) -> None:
         if not self.cache_size:
             return
-        key = self._cache_key(q, qm)
+        key = self._cache_key(q, qm, fkey)
         self._cache[key] = result
         self._cache.move_to_end(key)
         while len(self._cache) > self.cache_size:
@@ -337,13 +421,17 @@ def replay_open_loop(frontend: ServingFrontend, requests: list,
     real time: exponential inter-arrival gaps at ``rate`` req/s, admissions
     via ``submit``, flushes via ``pump`` (deadline- or fill-triggered).
 
-    ``requests`` is a list of ``(q, q_mask)`` pairs. Returns
-    ``(pending: list[PendingResult], wall_seconds)`` — all served, each
-    carrying its own arrival-to-completion latency. Latency is measured
-    from the SCHEDULED Poisson arrival time, not the admission call: a
-    request that fell due while the loop was blocked inside a dispatch is
-    billed for that wait too (no coordinated omission — tail percentiles
-    stay honest under load).
+    ``requests`` is a list of ``(q, q_mask)`` pairs or ``(q, q_mask,
+    filter)`` triples (a ``store.FilterSpec`` per request — mixed-tenant
+    replay). Returns ``(pending: list[PendingResult], wall_seconds)`` —
+    all ADMITTED requests served, each carrying its own
+    arrival-to-completion latency; submits rejected by the tenant quota
+    are dropped here (counted in ``frontend.stats["rejected"]``), which is
+    exactly what admission control does to a bursting tenant in
+    production. Latency is measured from the SCHEDULED Poisson arrival
+    time, not the admission call: a request that fell due while the loop
+    was blocked inside a dispatch is billed for that wait too (no
+    coordinated omission — tail percentiles stay honest under load).
     """
     rng = np.random.default_rng(seed)
     arrivals = np.cumsum(rng.exponential(1.0 / rate, size=len(requests)))
@@ -354,8 +442,13 @@ def replay_open_loop(frontend: ServingFrontend, requests: list,
     while i < n or frontend.pending:
         now = clock() - t0
         while i < n and arrivals[i] <= now:
-            q, qm = requests[i]
-            out.append(frontend.submit(q, qm, t_submit=t0 + arrivals[i]))
+            q, qm, *rest = requests[i]
+            try:
+                out.append(frontend.submit(
+                    q, qm, filter=rest[0] if rest else None,
+                    t_submit=t0 + arrivals[i]))
+            except AdmissionError:
+                pass
             i += 1
         if frontend.pump():
             continue

@@ -12,10 +12,12 @@ headroom.
 ``IngestPipeline`` fuses the whole write path under ONE jit per
 ``(cfg, batch-bucket)``:
 
-    hygiene mask -> model-aware pooling (dispatched to the fused pooling
-    operator with reference fallback, mirroring the scan path's
-    ``engine._resolve_impl`` policy) -> global pool -> optional int8
-    quantisation -> ``dynamic_update_slice`` directly into segment headroom
+    hygiene mask -> model-aware pooling (resolved through the
+    ``kernels.dispatch`` registry like the scan path: the fused operator
+    with reference fallback) -> global pool -> optional int8 quantisation
+    -> ``dynamic_update_slice`` directly into segment headroom — including
+    the tenant-id and packed tag-bitset store companions, stamped from
+    traced values (tenant churn never retraces)
 
 Batch sizes are padded into power-of-two INGEST BUCKETS (symmetric with
 the bucketed segment capacities of PR 2 and the query-shape buckets of
@@ -50,12 +52,14 @@ import jax.numpy as jnp
 
 from repro.core import hygiene as HG
 from repro.core.pooling import global_pool, pool_pages_batch
+from repro.kernels import dispatch as DSP
 from repro.kernels.pooling import ops as POPS
 from repro.kernels.pooling.ops import pool_pages_fused
 from repro.retrieval import tracing
 from repro.retrieval.segments import bucket_capacity
-from repro.retrieval.store import (VALIDITY_KEY, VectorStore, mask_key,
-                                   quantize_vectors)
+from repro.retrieval.store import (FILTER_KEY, TENANT_KEY, VALIDITY_KEY,
+                                   VectorStore, is_store_companion,
+                                   mask_key, pack_tags, quantize_vectors)
 
 INGEST_BUCKET_MIN = 8
 INGEST_BUCKET_MAX = 256        # the paper's index step (pages_per_step)
@@ -116,7 +120,7 @@ class IngestPipeline:
         # resolved ONCE at build time, like the scan path: Pallas where it
         # compiles natively, the jnp twin elsewhere (tests may force an
         # explicit impl/interpret to exercise the interpreted kernel)
-        r_impl, r_interp = POPS.resolve_impl(use_kernel)
+        r_impl, r_interp = DSP.resolve("pooling", use_kernel)
         self.impl = r_impl if impl is None else impl
         self.interpret = r_interp if interpret is None else interpret
         self._mats = {}
@@ -255,7 +259,7 @@ class IngestPipeline:
         return vectors
 
     def _write_body(self, seg_vectors: dict, pages, token_types,
-                    start, n_real) -> dict:
+                    start, n_real, tenant, filter_row) -> dict:
         """Index the (bucket-padded) batch and write it into the segment's
         preallocated tail in the same program, as one full-bucket
         ``dynamic_update_slice`` per array (a contiguous block copy — XLA
@@ -282,6 +286,18 @@ class IngestPipeline:
                 seg_vectors[k], v.astype(seg_vectors[k].dtype), idx)
         out[VALIDITY_KEY] = jax.lax.dynamic_update_slice(
             seg_vectors[VALIDITY_KEY], row_valid, (start,))
+        # the batch's tenant id and packed tag bitset are traced VALUES
+        # stamped onto the claimed rows (zeros on padding, matching the
+        # allocation state) — different tenants/tags reuse this executable
+        out[TENANT_KEY] = jax.lax.dynamic_update_slice(
+            seg_vectors[TENANT_KEY],
+            jnp.where(row_valid, tenant, jnp.int32(0)), (start,))
+        frows = jnp.where(row_valid[:, None],
+                          jnp.broadcast_to(filter_row[None, :],
+                                           (bucket, filter_row.shape[0])),
+                          jnp.uint32(0))
+        out[FILTER_KEY] = jax.lax.dynamic_update_slice(
+            seg_vectors[FILTER_KEY], frows, (start, 0))
         return out
 
     # ------------------------------------------------------------------
@@ -312,15 +328,20 @@ class IngestPipeline:
         return VectorStore({k: v[:n] for k, v in out.items()}, n,
                            self.store_dtype.name)
 
-    def ingest(self, store, pages, token_types) -> np.ndarray:
+    def ingest(self, store, pages, token_types, tenant: int = 0,
+               tags=()) -> np.ndarray:
         """Index a raw batch and write it straight into ``store``'s
         segment headroom (a ``SegmentedStore``) — one fused dispatch, no
-        host round-trip. Returns the assigned stable page ids."""
+        host round-trip. Returns the assigned stable page ids.
+
+        ``tenant``/``tags`` stamp the batch's store companions exactly as
+        ``SegmentedStore.add_pages`` does, as traced values inside the
+        same fused write program."""
         pages, tt = self._admit(pages, token_types)
         n = int(pages.shape[0])
         if store.segments:
             have = {k for k in store.segments[0].vectors
-                    if k != VALIDITY_KEY}
+                    if not is_store_companion(k)}
             if have != set(self.produced_keys):
                 raise ValueError(
                     f"pipeline produces {sorted(self.produced_keys)} but "
@@ -333,6 +354,9 @@ class IngestPipeline:
         # a full bucket of headroom: the write is a bucket-wide block
         seg_i, start = store.reserve(n, min_free=bucket)
         seg = store.segments[seg_i]
+        words = pack_tags(tags, store.filter_words)
         new_vectors = self._jit_write(seg.vectors, pages_p, tt,
-                                      jnp.int32(start), jnp.int32(n))
+                                      jnp.int32(start), jnp.int32(n),
+                                      jnp.int32(int(tenant)),
+                                      jnp.asarray(words))
         return store.commit(seg_i, new_vectors, n)

@@ -61,13 +61,16 @@ class Retriever:
     def __init__(self, store, mesh=None,
                  rerank_overcommit: int = 8, scan_chunk: int = 0,
                  place: bool = True, capacity: int | None = None,
-                 ingest=None):
+                 ingest=None, filter_words: int = 1):
         """``store`` is a built ``VectorStore`` (wrapped as segment 0 —
         exact-fit by default, or preallocated to ``capacity`` slots for
         ingestion headroom) or an existing ``SegmentedStore``. place=True
         lays the corpus out with the mesh's shardings once, not per call.
         ``ingest`` is an optional ``IngestPipeline`` enabling
-        ``Retriever.ingest`` (raw pages in, stable ids out)."""
+        ``Retriever.ingest`` (raw pages in, stable ids out).
+        ``filter_words`` sizes the packed metadata-tag bitset (32 tags per
+        word) when wrapping a ``VectorStore``; an existing
+        ``SegmentedStore`` keeps its own width."""
         self.mesh = mesh
         self.rerank_overcommit = rerank_overcommit
         self.scan_chunk = scan_chunk
@@ -77,7 +80,7 @@ class Retriever:
         if isinstance(store, VectorStore):
             store = SegmentedStore.from_store(
                 store, n_shards=n_shards, capacity=capacity,
-                mesh=mesh if place else None)
+                mesh=mesh if place else None, filter_words=filter_words)
         else:
             for cap in store.capacities:
                 if cap % n_shards:
@@ -98,25 +101,31 @@ class Retriever:
     # mutation (the no-retrace path)
     # ------------------------------------------------------------------
 
-    def upsert(self, batch: VectorStore) -> np.ndarray:
+    def upsert(self, batch: VectorStore, tenant: int = 0,
+               tags=()) -> np.ndarray:
         """Ingest an indexed batch (``build_store``/``quantize_store``
-        output). Returns stable page ids. Never retraces while the batch
-        fits in existing segment headroom."""
-        return self.store.add_pages(batch)
+        output), stamped with ``tenant`` ownership and metadata ``tags``
+        (queries scope to them via ``search(filter=FilterSpec(...))``).
+        Returns stable page ids. Never retraces while the batch fits in
+        existing segment headroom — tenant/tags are traced values."""
+        return self.store.add_pages(batch, tenant=tenant, tags=tags)
 
-    def ingest(self, pages, token_types) -> np.ndarray:
+    def ingest(self, pages, token_types, tenant: int = 0,
+               tags=()) -> np.ndarray:
         """Device-resident ingestion: raw encoder output ``[N, S, d]`` in,
         stable page ids out. One fused dispatch per batch (hygiene ->
         pooling -> quantise -> segment write under a single jit per ingest
         batch bucket), no host round-trip of the indexed arrays. Requires
-        an ``IngestPipeline`` attached at construction."""
+        an ``IngestPipeline`` attached at construction. ``tenant``/``tags``
+        stamp the batch's store companions as in ``upsert``."""
         if self._ingest is None:
             raise ValueError(
                 "no ingest pipeline attached — construct the retriever as "
                 "Retriever(store, ingest=IngestPipeline.for_config(cfg, "
                 "...)) to ingest raw pages (or use upsert(build_store(...))"
                 " for host-driven batches)")
-        return self._ingest.ingest(self.store, pages, token_types)
+        return self._ingest.ingest(self.store, pages, token_types,
+                                   tenant=tenant, tags=tags)
 
     def delete(self, ids) -> int:
         """Invalidate pages by stable id (validity masking; no data moves).
@@ -153,7 +162,8 @@ class Retriever:
     def search_fn(self, stages: tuple):
         """The compiled cascade callable for ``stages``, built at most once
         per (stages, segment capacities/layout, mesh). Signature:
-        fn(stores: tuple[dict, ...], q, q_mask) -> (scores, slot ids)."""
+        fn(stores: tuple[dict, ...], q, q_mask, fspec=None) ->
+        (scores, slot ids)."""
         stages = self._normalize(stages)
         key = (stages, self.store.layout_key(), self.mesh)
         fn = self._fns.get(key)
@@ -165,12 +175,20 @@ class Retriever:
         return fn
 
     def search(self, q: jax.Array, q_mask: jax.Array | None = None,
-               *, stages: tuple, translate_ids: bool = True) -> tuple:
+               *, stages: tuple, translate_ids: bool = True,
+               filter=None) -> tuple:
         """Run the cascade: q [B,Q,d] -> (scores [B,k], ids [B,k]).
 
         ids are stable page ids (np.int64; -1 marks dead-slot filler when k
         exceeds the live corpus); pass translate_ids=False for raw device
-        slot ids."""
+        slot ids.
+
+        ``filter`` is a request-scoped ``store.FilterSpec`` (tenant scope +
+        required/any metadata tags) or None for the whole corpus. It is
+        DATA, not a shape: every filter value at a fixed corpus layout and
+        query bucket re-dispatches the same compiled executable, and the
+        result is bitwise what an unfiltered search over only the matching
+        documents would return."""
         # ALWAYS normalize to a concrete bool mask: the shard_map path
         # requires an array, and on the local path alternating None/array
         # (or bool/float-mask) callers would split the executable cache and
@@ -183,7 +201,15 @@ class Retriever:
             if q_mask.dtype != jnp.bool_:
                 q_mask = q_mask.astype(bool)
         scores, slots = self.search_fn(stages)(self.store.stores(), q,
-                                               q_mask)
+                                               q_mask, filter)
         if not translate_ids:
             return scores, slots
-        return scores, self.store.translate_slots(slots)
+        ids = self.store.translate_slots(slots)
+        # NEG-scored entries are filler, not results: dead slots already
+        # translate to -1, but a slot can also score NEG because the
+        # request's filter excluded a LIVE document — mask those ids too,
+        # so a filtered search returns exactly what a search over a
+        # corpus rebuilt from the matching documents would (no tenant can
+        # learn another tenant's page ids from its filler entries)
+        return scores, np.where(np.asarray(scores) <= engine.NEG / 2,
+                                np.int64(-1), ids)

@@ -26,10 +26,25 @@ in a global SLOT id space (segment offsets = cumulative capacities);
 ``slot_doc_ids`` translates slots back to stable user page ids.
 
 Which arrays a segment holds — named vectors, their per-token masks, int8
-codes + scales, the per-document validity mask — is described by the typed
-``repro.retrieval.store.VectorSchema``; this module never interprets key
-strings itself (``VALIDITY_KEY`` and the accessors are imported from the
+codes + scales, the per-document store companions — is described by the
+typed ``repro.retrieval.store.VectorSchema``; this module never interprets
+key strings itself (the key constants and accessors are imported from the
 store module, the one owner of that layout).
+
+``doc_valid`` has two typed siblings, written by the same shape-stable
+primitives and carried in the vectors dict so they shard and thread through
+the engine like any other per-doc array:
+
+- ``doc_tenant`` [capacity] int32 — the owning tenant id per slot
+  (``add_pages(..., tenant=)``; 0 for legacy single-tenant corpora);
+- ``doc_filter`` [capacity, filter_words] uint32 — packed metadata-tag
+  bitset per slot (``add_pages(..., tags=)``; tag j lives at word j // 32,
+  bit j % 32).
+
+At query time ``store.effective_validity`` folds a request's
+``FilterSpec`` into these companions on device — filters are DATA, so
+tenant switches and tag changes re-dispatch cached executables (zero
+retraces); only allocation/compaction changes ``layout_key``.
 
 The device write primitives come in two flavours: ``add_pages`` copies an
 already-indexed ``VectorStore`` batch into headroom (one
@@ -47,7 +62,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.retrieval.store import (VALIDITY_KEY, VectorSchema, VectorStore)
+from repro.retrieval.store import (FILTER_KEY, TENANT_KEY, VALIDITY_KEY,
+                                   VectorSchema, VectorStore,
+                                   is_store_companion, pack_tags)
 from repro.retrieval.tracing import record_trace
 
 SEGMENT_MIN_CAPACITY = 64
@@ -112,12 +129,16 @@ class SegmentedStore:
     """A mutable corpus as a list of capacity-padded segments."""
 
     def __init__(self, segments: list, store_dtype: str = "bfloat16",
-                 n_shards: int = 1, next_id: int = 0, mesh=None):
+                 n_shards: int = 1, next_id: int = 0, mesh=None,
+                 filter_words: int = 1):
         self.segments = list(segments)
         self.store_dtype = store_dtype
         self.n_shards = n_shards
         self.next_id = next_id
         self.mesh = mesh
+        # width of the packed tag bitset (32 tags per word); part of the
+        # layout, so it is fixed at store construction
+        self.filter_words = max(int(filter_words), 1)
         self._slot_ids: np.ndarray | None = None   # slot->page-id cache
         # bumped on every content mutation (upsert/delete/compact) so
         # result caches keyed on it can never serve pre-mutation answers
@@ -129,19 +150,23 @@ class SegmentedStore:
 
     @classmethod
     def from_store(cls, store: VectorStore, n_shards: int = 1,
-                   capacity: int | None = None, mesh=None):
+                   capacity: int | None = None, mesh=None,
+                   filter_words: int = 1):
         """Wrap a built (immutable) store as segment 0.
 
         Default capacity is EXACT fit rounded up to a shard multiple — a
         frozen corpus pays zero padded-scan overhead and legacy behaviour
         is unchanged; pass ``capacity`` (e.g. ``bucket_capacity``) to
-        preallocate ingestion headroom."""
+        preallocate ingestion headroom. Wrapped pages get tenant 0 and an
+        empty tag set; ``filter_words`` sizes the packed bitset for pages
+        upserted later."""
         cap = capacity if capacity is not None else \
             _round_up(store.n_docs, n_shards)
         if cap < store.n_docs:
             raise ValueError(f"capacity {cap} < n_docs {store.n_docs}")
         cap = _round_up(cap, n_shards)
-        out = cls([], store.store_dtype, n_shards, next_id=0, mesh=mesh)
+        out = cls([], store.store_dtype, n_shards, next_id=0, mesh=mesh,
+                  filter_words=filter_words)
         out._alloc_segment(store.vectors, cap)
         seg = out.segments[0]
         n = store.n_docs
@@ -151,6 +176,17 @@ class SegmentedStore:
                                           jnp.int32(0))
         seg.vectors[VALIDITY_KEY] = _write_block(
             seg.vectors[VALIDITY_KEY], jnp.ones((n,), bool), jnp.int32(0))
+        # stamp tenant 0 / no tags through the same write primitive an
+        # ``add_pages`` of this batch shape uses — zeros over zeros, but it
+        # warms those executables so a wrap-then-upsert serving loop stays
+        # zero-retrace at the seed batch size (same contract as the data
+        # arrays above)
+        seg.vectors[TENANT_KEY] = _write_block(
+            seg.vectors[TENANT_KEY], jnp.zeros((n,), jnp.int32),
+            jnp.int32(0))
+        seg.vectors[FILTER_KEY] = _write_block(
+            seg.vectors[FILTER_KEY],
+            jnp.zeros((n, out.filter_words), jnp.uint32), jnp.int32(0))
         seg.doc_ids[:n] = np.arange(n)
         seg.n_docs = n
         out.next_id = n
@@ -172,11 +208,16 @@ class SegmentedStore:
     def _alloc_segment(self, like_vectors: dict, capacity: int) -> Segment:
         vecs = {}
         for k, v in like_vectors.items():
-            if k == VALIDITY_KEY:
+            if is_store_companion(k):
                 continue
             vecs[k] = self._place(jnp.zeros((capacity,) + v.shape[1:],
                                             v.dtype))
+        # the store companions are always present and zero-initialised:
+        # dead slots are invalid, tenant 0, no tags
         vecs[VALIDITY_KEY] = self._place(jnp.zeros((capacity,), bool))
+        vecs[TENANT_KEY] = self._place(jnp.zeros((capacity,), jnp.int32))
+        vecs[FILTER_KEY] = self._place(
+            jnp.zeros((capacity, self.filter_words), jnp.uint32))
         seg = Segment(vecs, capacity, 0, np.full((capacity,), -1, np.int64))
         self.segments.append(seg)
         return seg
@@ -224,17 +265,25 @@ class SegmentedStore:
         self.generation += 1
         return ids
 
-    def add_pages(self, batch: VectorStore) -> np.ndarray:
+    def add_pages(self, batch: VectorStore, tenant: int = 0,
+                  tags=()) -> np.ndarray:
         """Ingest an indexed batch (the output of ``build_store`` /
         ``quantize_store``). Returns the assigned stable page ids.
 
         Fits the WHOLE batch into the last segment's free tail when
         possible; otherwise allocates a new bucketed segment sized to the
         batch (batches are never split, so steady-state ingestion at a
-        fixed batch size reuses one write executable per vector name)."""
+        fixed batch size reuses one write executable per vector name).
+
+        ``tenant``/``tags`` stamp the batch's store companions: every page
+        in the batch belongs to ``tenant`` and carries the packed ``tags``
+        bitset (queries filter on them via ``store.FilterSpec``). Both are
+        traced VALUES into the same cached write executables — changing
+        tenant or tags between batches never retraces."""
         n = batch.n_docs
         if self.segments:
-            names = {k for k in self.segments[0].vectors if k != VALIDITY_KEY}
+            names = {k for k in self.segments[0].vectors
+                     if not is_store_companion(k)}
             if set(batch.vectors) != names:
                 raise ValueError(
                     f"batch vectors {sorted(batch.vectors)} != store "
@@ -248,6 +297,14 @@ class SegmentedStore:
                 s32)
         seg.vectors[VALIDITY_KEY] = _write_block(
             seg.vectors[VALIDITY_KEY], jnp.ones((n,), bool), s32)
+        seg.vectors[TENANT_KEY] = _write_block(
+            seg.vectors[TENANT_KEY],
+            jnp.full((n,), int(tenant), jnp.int32), s32)
+        words = pack_tags(tags, self.filter_words)
+        seg.vectors[FILTER_KEY] = _write_block(
+            seg.vectors[FILTER_KEY],
+            jnp.broadcast_to(jnp.asarray(words)[None, :],
+                             (n, self.filter_words)), s32)
         return self.commit(seg_i, seg.vectors, n)
 
     def delete(self, ids) -> int:
@@ -282,6 +339,9 @@ class SegmentedStore:
         capacities no longer apply."""
         if not self.segments:
             return self
+        # doc_tenant / doc_filter ride the gather loop like any data array
+        # (each survivor keeps its tenancy and tags); doc_valid is the one
+        # companion rebuilt from scratch — every survivor is live
         names = [k for k in self.segments[0].vectors if k != VALIDITY_KEY]
         like = {k: self.segments[0].vectors[k] for k in names}
         rows = {k: [] for k in names}

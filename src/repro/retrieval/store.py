@@ -9,9 +9,25 @@ paper §2.4):
 
 On disk (well, in device memory) every named vector may carry COMPANION
 arrays — a per-token validity mask, int8 codes and their per-vector scales —
-and the store as a whole may carry a per-document validity mask. Those
-companions live in the flat ``vectors`` dict under suffixed keys, but the
-suffix convention is an implementation detail OWNED BY THIS MODULE: every
+and the store as a whole may carry STORE-LEVEL companions describing each
+document row rather than any one vector:
+
+  doc_valid   [N]     bool    per-document liveness (capacity padding,
+                              deletes)
+  doc_tenant  [N]     int32   owning tenant id (0 = default namespace)
+  doc_filter  [N, W]  uint32  packed metadata-tag bitset, 32 tags per
+                              word (tag j lives at word j // 32, bit
+                              j % 32)
+
+The tenant/filter bitsets generalise ``doc_valid``: at query time a
+request's ``FilterSpec`` is packed to the same words host-side and
+``effective_validity`` combines all three terms on device into the one
+mask the cascade already threads everywhere. The filter VALUES enter the
+compiled program as traced arrays — data, not shape — so swapping tenants
+or predicates between requests can never retrace.
+
+All companions live in the flat ``vectors`` dict under reserved keys, but
+the key convention is an implementation detail OWNED BY THIS MODULE: every
 other consumer (the engine's scan/rerank array resolution, segment
 allocation, the serving frontend's query-dim inference, the multistage
 oracle, launch cells) goes through ``VectorSchema`` / the accessor helpers
@@ -40,6 +56,10 @@ from repro.kernels.maxsim.ops import quantize_int8
 # ---------------------------------------------------------------------------
 
 VALIDITY_KEY = "doc_valid"           # [N] bool, per-document liveness
+TENANT_KEY = "doc_tenant"            # [N] int32, owning tenant id
+FILTER_KEY = "doc_filter"            # [N, W] uint32, packed tag bitset
+STORE_COMPANIONS = (VALIDITY_KEY, TENANT_KEY, FILTER_KEY)
+TAGS_PER_WORD = 32
 _MASK, _INT8, _SCALE = "_mask", "_int8", "_scale"
 
 
@@ -60,9 +80,17 @@ def scale_key(name: str) -> str:
 
 def is_companion(key: str) -> bool:
     """True for keys that describe another vector (masks, scales, codes)
-    or the store itself (``doc_valid``) rather than naming a vector."""
-    return (key == VALIDITY_KEY or key.endswith(_MASK)
+    or the store itself (``doc_valid``/``doc_tenant``/``doc_filter``)
+    rather than naming a vector."""
+    return (key in STORE_COMPANIONS or key.endswith(_MASK)
             or key.endswith(_SCALE) or key.endswith(_INT8))
+
+
+def is_store_companion(key: str) -> bool:
+    """True for the per-document store-level companions (liveness, tenant
+    id, packed filter bitset) — the arrays a segment allocates and owns
+    itself, as opposed to the per-vector batch payload."""
+    return key in STORE_COMPANIONS
 
 
 # ---------------------------------------------------------------------------
@@ -101,9 +129,16 @@ class VectorSchema:
     """Typed description of a raw ``vectors`` dict: which named vectors
     exist, their geometry, and which companions ride along. Inferred from
     keys + shapes only, so it works on concrete arrays, tracers, and
-    ``ShapeDtypeStruct`` specs alike."""
+    ``ShapeDtypeStruct`` specs alike.
+
+    ``has_validity``/``has_tenant`` report the store-level bitset
+    companions; ``filter_words`` is the packed tag-bitset width W (0 when
+    the store carries no ``doc_filter`` array — each word holds
+    ``TAGS_PER_WORD`` metadata tags)."""
     vectors: tuple          # NamedVector records, sorted by name
     has_validity: bool = False
+    has_tenant: bool = False
+    filter_words: int = 0
 
     @classmethod
     def infer(cls, vectors: dict) -> "VectorSchema":
@@ -138,7 +173,10 @@ class VectorSchema:
                 has_float=False,
                 has_mask=mask_key(base) in vectors))
         return cls(tuple(sorted(out, key=lambda nv: nv.name)),
-                   has_validity=VALIDITY_KEY in vectors)
+                   has_validity=VALIDITY_KEY in vectors,
+                   has_tenant=TENANT_KEY in vectors,
+                   filter_words=(vectors[FILTER_KEY].shape[1]
+                                 if FILTER_KEY in vectors else 0))
 
     def __iter__(self):
         return iter(self.vectors)
@@ -196,6 +234,135 @@ def validity(vectors: dict):
     """The per-document liveness mask ([N] bool), or None for an
     always-live (non-segmented) store."""
     return vectors.get(VALIDITY_KEY)
+
+
+def tenant_ids(vectors: dict):
+    """The per-document tenant-id array ([N] int32), or None for a store
+    without tenant scoping (raw single-tenant corpora)."""
+    return vectors.get(TENANT_KEY)
+
+
+def filter_bits(vectors: dict):
+    """The packed per-document metadata-tag bitset ([N, W] uint32), or
+    None for a store without filter metadata."""
+    return vectors.get(FILTER_KEY)
+
+
+def filter_words(vectors: dict) -> int:
+    """The store's packed tag-bitset width W (0 = no filter metadata)."""
+    f = vectors.get(FILTER_KEY)
+    return 0 if f is None else f.shape[1]
+
+
+# ---------------------------------------------------------------------------
+# request-scoped filters: data, not shape
+# ---------------------------------------------------------------------------
+
+def pack_tags(tags, n_words: int):
+    """Pack integer metadata tags into ``n_words`` uint32 bitset words
+    (tag j -> word j // 32, bit j % 32). Host-side numpy: the packed
+    words are what enters the compiled program, as traced data."""
+    import numpy as np
+    words = np.zeros((max(n_words, 1),), np.uint32)
+    for t in tags:
+        t = int(t)
+        if not 0 <= t < n_words * TAGS_PER_WORD:
+            raise ValueError(
+                f"tag {t} outside [0, {n_words * TAGS_PER_WORD}) — the "
+                f"store was allocated with filter_words={n_words}")
+        words[t // TAGS_PER_WORD] |= np.uint32(1 << (t % TAGS_PER_WORD))
+    return words
+
+
+@dataclass(frozen=True)
+class FilterSpec:
+    """A request-scoped retrieval filter: DATA, never a shape.
+
+    tenant        scope to one tenant id (-1 = any tenant)
+    require_tags  metadata tags a page must ALL carry
+    any_tags      at least one of these tags must be present (empty = no
+                  constraint)
+
+    The spec is packed host-side (``as_filter_arrays``) into a fixed-shape
+    triple — tenant scalar + [W]-word require/any bitsets — and combined
+    with ``doc_valid`` on device (``effective_validity``). Because only
+    the VALUES differ between requests, every spec at a given store layout
+    re-dispatches the same compiled cascade: zero retraces across
+    tenant/filter changes. Tag tuples are canonicalised (sorted, deduped)
+    so equal predicates hash equal — the spec doubles as a cache/queue
+    key in the serving frontend."""
+    tenant: int = -1
+    require_tags: tuple = ()
+    any_tags: tuple = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "tenant", int(self.tenant))
+        object.__setattr__(self, "require_tags",
+                           tuple(sorted({int(t) for t in self.require_tags})))
+        object.__setattr__(self, "any_tags",
+                           tuple(sorted({int(t) for t in self.any_tags})))
+
+    @property
+    def is_null(self) -> bool:
+        """True for the match-everything spec (no tenant, no tags)."""
+        return (self.tenant < 0 and not self.require_tags
+                and not self.any_tags)
+
+
+NULL_FILTER = FilterSpec()
+
+
+def as_filter_arrays(spec, n_words: int) -> tuple:
+    """Normalise a request filter to the traced-array triple the compiled
+    cascade takes: ``(tenant () int32, require [W] uint32, any [W]
+    uint32)``. Accepts a ``FilterSpec``, an already-packed triple
+    (returned unchanged), or None (the null filter: tenant -1, zero
+    words — bitwise a no-op mask). W is clamped to >= 1 so filter-less
+    stores still get a stable arg structure."""
+    if isinstance(spec, tuple) and len(spec) == 3:
+        return spec
+    if spec is None:
+        spec = NULL_FILTER
+    w = max(n_words, 1)
+    return (jnp.int32(spec.tenant),
+            jnp.asarray(pack_tags(spec.require_tags, w)),
+            jnp.asarray(pack_tags(spec.any_tags, w)))
+
+
+def effective_validity(vectors: dict, fspec: tuple | None = None):
+    """Combine ``doc_valid`` with a request's tenant/filter terms into the
+    one [N] bool mask the cascade threads everywhere (or None when the
+    store has no validity notion at all and no filter was given).
+
+    ``fspec`` is the ``as_filter_arrays`` triple; every term is traced
+    DATA, evaluated elementwise on device:
+
+    - tenant: ``tenant < 0`` (any) or ``doc_tenant == tenant``;
+    - require: every set bit present — ``(bits & require) == require``;
+    - any: at least one set bit present, skipped when the any-words are
+      all zero (a traced predicate, so the skip costs no retrace).
+
+    Stores missing the tenant/filter companions simply skip those terms —
+    the single-tenant oracle path and raw (non-segmented) corpora keep
+    their legacy semantics. Shared by the engine AND the ``multistage``
+    oracle, so filtered parity is structural."""
+    ok = vectors.get(VALIDITY_KEY)
+    if fspec is None:
+        return ok
+    tenant, require, any_ = fspec
+    t = vectors.get(TENANT_KEY)
+    if t is not None:
+        t_ok = (tenant < 0) | (t == tenant)
+        ok = t_ok if ok is None else ok & t_ok
+    bits = vectors.get(FILTER_KEY)
+    if bits is not None:
+        req = require[None, :]
+        f_ok = jnp.all((bits & req) == req, axis=1)
+        has_any = jnp.any(any_ != jnp.uint32(0))
+        f_ok = f_ok & (~has_any | jnp.any((bits & any_[None, :]) != 0,
+                                          axis=1))
+        ok = f_ok if ok is None else ok & f_ok
+    return ok
 
 
 def scan_arrays(vectors: dict, name: str) -> tuple:
