@@ -16,10 +16,13 @@ above the model's).
 
 Also hosts the CANDIDATE-PATH analytic roofline: per-stage HBM byte bills
 from ``repro.core.multistage.cascade_hbm_bytes`` (corpus read, the [B, N]
-score write, the 3x-billed naive rerank gather) turned into predicted v5e
-seconds for the reference vs fused (scan_topk + rerank_kernel) serving
-cascade. ``benchmarks/run.py rerank_kernel_vs_ref`` prints this predicted
-ratio next to the measured one.
+score write, the 3x-billed naive rerank gather) combined with the Eq.-1
+madds into predicted two-term roofline seconds for the reference vs fused
+(scan_topk + rerank_kernel) serving cascade — against the peaks of the
+backend the benchmark actually runs on (``measured_peaks``: v5e datasheet
+numbers on TPU, a one-shot stream/matmul microbenchmark elsewhere).
+``benchmarks/run.py rerank_kernel_vs_ref`` prints this predicted ratio
+next to the measured one.
 
 Usage: PYTHONPATH=src python -m benchmarks.roofline [--json PATH] [--md]
        PYTHONPATH=src python -m benchmarks.roofline --candidate-path \\
@@ -31,12 +34,84 @@ import argparse
 import json
 import os
 
-# TPU v5e per-chip constants (assignment-specified)
+# TPU v5e per-chip constants (assignment-specified). These stay the
+# source of truth for the DRY-RUN analysis (it models the production TPU
+# mesh regardless of where the script runs); the candidate-path roofline
+# instead calibrates against the backend actually underneath it — see
+# measured_peaks().
 PEAK_FLOPS = 197e12          # bf16 FLOP/s
 HBM_BW = 819e9               # bytes/s
 LINK_BW = 50e9               # bytes/s per ICI link
 
 RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+_PEAKS: dict | None = None
+
+
+def _measure_stream_bw() -> float:
+    """Best-of-3 streaming READ bandwidth (bytes/s) of the live jax
+    backend, probed as a matvec over a 128 MB f32 matrix — the same
+    row-stream-and-reduce access pattern as the corpus scan, and the one
+    XLA actually parallelises. (A jitted elementwise copy measures
+    single-thread dispatch instead and under-reports the scan's
+    achievable bandwidth ~5x on multicore CPU hosts.)"""
+    import time as _time
+    import jax
+    import jax.numpy as jnp
+    rows, cols = 1 << 13, 1 << 12
+    m = jnp.arange(rows * cols, dtype=jnp.float32).reshape(rows, cols)
+    v = jnp.ones((cols,), jnp.float32)
+    f = jax.jit(lambda mm, vv: mm @ vv)
+    f(m, v).block_until_ready()
+    best = float("inf")
+    for _ in range(3):
+        t0 = _time.perf_counter()
+        f(m, v).block_until_ready()
+        best = min(best, _time.perf_counter() - t0)
+    return 4.0 * rows * cols / best
+
+
+def _measure_matmul_flops() -> float:
+    """Best-of-3 f32 matmul throughput (FLOP/s) of the live backend."""
+    import time as _time
+    import jax
+    import jax.numpy as jnp
+    n = 1536
+    a = jnp.full((n, n), 0.5, jnp.float32)
+    b = jnp.full((n, n), 0.25, jnp.float32)
+    f = jax.jit(lambda u, v: u @ v)
+    f(a, b).block_until_ready()
+    best = float("inf")
+    for _ in range(3):
+        t0 = _time.perf_counter()
+        f(a, b).block_until_ready()
+        best = min(best, _time.perf_counter() - t0)
+    return 2.0 * n ** 3 / best
+
+
+def measured_peaks(force: bool = False) -> dict:
+    """Peak FLOP/s and memory bandwidth of the backend the benchmarks
+    actually run on: the v5e datasheet numbers on TPU, a one-shot
+    microbenchmark pair (stream + matmul, cached per process) elsewhere.
+
+    Predicted-vs-measured comparisons were previously computed against
+    the hardcoded TPU constants even when the measurement ran on a CPU
+    host — the predicted ratio then reflects a machine the measurement
+    never touched (BENCH_candidate_path.json showed predicted 2.98x vs
+    measured 1.23x). Calibrating both roofline terms to the live backend
+    makes the two numbers commensurable."""
+    global _PEAKS
+    if _PEAKS is not None and not force:
+        return _PEAKS
+    import jax
+    if jax.default_backend() == "tpu":
+        _PEAKS = {"flops": PEAK_FLOPS, "hbm_bw": HBM_BW,
+                  "source": "v5e-datasheet"}
+    else:
+        _PEAKS = {"flops": _measure_matmul_flops(),
+                  "hbm_bw": _measure_stream_bw(),
+                  "source": f"measured-{jax.default_backend()}"}
+    return _PEAKS
 
 
 def analyse(rec: dict) -> dict | None:
@@ -101,34 +176,44 @@ def candidate_path_roofline(n_docs: int, q_tokens: int, dim: int,
                             vec_dims: dict | None = None, *,
                             batch: int = 1,
                             bytes_per_coord: dict | None = None) -> dict:
-    """Predicted HBM-roofline seconds for the serving cascade's candidate
-    path, reference vs fused policy, on the v5e constants.
+    """Predicted roofline seconds for the serving cascade's candidate
+    path, reference vs fused policy, on the LIVE backend's measured
+    peaks (``measured_peaks``; v5e datasheet numbers on TPU).
 
-    Bills the exact terms this PR attacks (via
+    Bills the exact terms the fused path attacks (via
     ``repro.core.multistage.cascade_hbm_bytes``): the scan stage's
     [B, N] score write (vs the streamed top-k's O(B*k*n_chunks)) and the
     rerank stage's 3x-billed materialised gather (vs the fused kernel's
-    single streamed read). The cascade is memory-bound at serving shapes,
-    so predicted time = bytes / HBM_BW; the returned ``speedup`` is the
-    model's claim for what the fused path buys END TO END — the
-    benchmark's measured ratio is printed next to it.
+    single streamed read). Predicted time is the TWO-term roofline
+    ``max(bytes / bw, flops / peak)`` — on TPU the cascade is firmly
+    memory-bound and the compute term vanishes, but on a CPU host the
+    madds are a real fraction of the wall clock, and since ref and fused
+    perform the SAME madds the compute floor is what compresses the
+    predicted ratio toward the measured one. ``byte_ratio`` preserves
+    the raw bandwidth-only claim.
     """
     from repro.core import multistage as MST
+    peaks = measured_peaks()
     ref_stages = MST.with_rerank_policy(
         MST.with_scan_policy(tuple(stages), scan_topk=False),
         rerank_kernel=False)
     fused_stages = MST.with_rerank_policy(
         MST.with_scan_policy(tuple(stages), scan_topk=True),
         rerank_kernel=True)
-    out = {}
+    out = {"peaks": dict(peaks)}
     for name, st in (("ref", ref_stages), ("fused", fused_stages)):
         bill = MST.cascade_hbm_bytes(n_docs, q_tokens, dim, st, store_dims,
                                      vec_dims, batch=batch,
                                      bytes_per_coord=bytes_per_coord)
-        out[name] = {"bytes": bill["total_bytes"],
-                     "seconds": bill["total_bytes"] / HBM_BW,
+        flops = 2.0 * batch * MST.qps_cost_model(n_docs, q_tokens, dim, st,
+                                                 store_dims, vec_dims)
+        out[name] = {"bytes": bill["total_bytes"], "flops": flops,
+                     "seconds": max(bill["total_bytes"] / peaks["hbm_bw"],
+                                    flops / peaks["flops"]),
                      "stages": bill["stages"]}
-    out["speedup"] = out["ref"]["bytes"] / max(out["fused"]["bytes"], 1)
+    out["byte_ratio"] = out["ref"]["bytes"] / max(out["fused"]["bytes"], 1)
+    out["speedup"] = out["ref"]["seconds"] / max(out["fused"]["seconds"],
+                                                 1e-30)
     return out
 
 
@@ -141,8 +226,10 @@ def _candidate_path_cli(args):
     store_dims = {"mean_pooling": 32, "initial": 1024}
     rep = candidate_path_roofline(args.n_docs, args.q_tokens, 128, stages,
                                   store_dims, batch=args.batch)
+    pk = rep["peaks"]
     print(f"candidate-path roofline @ N={args.n_docs} B={args.batch} "
-          f"(v5e HBM {HBM_BW/1e9:.0f} GB/s)")
+          f"({pk['source']}: {pk['hbm_bw']/1e9:.1f} GB/s, "
+          f"{pk['flops']/1e12:.2f} TFLOP/s)")
     for name in ("ref", "fused"):
         r = rep[name]
         print(f"  {name:5s}: {r['bytes']/1e9:8.3f} GB  "
@@ -151,7 +238,8 @@ def _candidate_path_cli(args):
             print(f"         {st['kind']:6s} {st['stage']:14s} "
                   f"read={st['read_bytes']/1e6:10.2f} MB  "
                   f"score_write={st['score_write_bytes']/1e6:8.2f} MB")
-    print(f"  predicted fused speedup: {rep['speedup']:.2f}x")
+    print(f"  predicted fused speedup: {rep['speedup']:.2f}x "
+          f"(bandwidth-only byte ratio: {rep['byte_ratio']:.2f}x)")
 
 
 def main():

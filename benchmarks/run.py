@@ -42,6 +42,18 @@ full result tables to stdout and benchmarks/results/paper_tables.json.
                        on/off, vs legacy build_store+upsert; mixed-size
                        steady-state retrace count asserted == 0
                        (beyond-paper serving)
+  routed_scan          centroid-routed (IVF) candidate generation vs the
+                       exhaustive scan: N-ladder QPS crossover curve,
+                       recall@10 vs exhaustive asserted >= 0.95 at the
+                       benchmarked n_probe, n_probe sweep, BITWISE parity
+                       at n_probe == n_clusters asserted, zero retraces
+                       asserted; rows persist to BENCH_routed_scan.json
+                       by sha
+
+``--suite name`` (repeatable; see SUITES) runs a named subset;
+``--quick`` shrinks sizes for CI. Ledger keys grow a ``-dirty`` suffix
+when the working tree is modified, so dirty reruns never clobber a
+committed sha's row.
 """
 from __future__ import annotations
 
@@ -53,6 +65,46 @@ import numpy as np
 
 RESULTS = os.path.join(os.path.dirname(__file__), "results")
 ROWS = []
+
+
+def _git_sha() -> str:
+    """Ledger key: short sha of HEAD, with a ``-dirty`` suffix when the
+    working tree differs from it. The BENCH_*.json ledgers key rows by
+    sha, so without the suffix a dirty-tree rerun would silently clobber
+    the committed clean-sha row with numbers no commit corresponds to."""
+    import subprocess
+    root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+    try:
+        sha = subprocess.check_output(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=root, text=True).strip()
+        dirty = subprocess.check_output(
+            ["git", "status", "--porcelain"], cwd=root, text=True).strip()
+        return sha + ("-dirty" if dirty else "")
+    except Exception:
+        return "unknown"
+
+
+def _persist_ledger(filename: str, entry: dict) -> None:
+    """Write ``entry`` into the repo-root ledger ``filename`` under the
+    current git sha (see ``_git_sha``). The file is a COMMITTED ledger:
+    each PR's pre-commit quick-bench run appends its row and the PR
+    checks it in, so the perf trajectory accumulates in git history
+    (re-running on the same clean sha overwrites that sha's entry; a
+    fresh CI checkout re-records the current sha and uploads the file as
+    an artifact — the cross-PR trend lives in the committed copy)."""
+    path = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                        filename))
+    hist = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                hist = json.load(f)
+        except Exception:
+            hist = {}
+    hist[_git_sha()] = entry
+    with open(path, "w") as f:
+        json.dump(hist, f, indent=1, default=float)
 
 
 def _t(fn, *args, reps=2):
@@ -464,38 +516,15 @@ def rerank_kernel_vs_ref(table: dict, quick: bool = False):
 
 def _persist_candidate_path(out: dict) -> None:
     """Append this run's candidate-path QPS rows to
-    BENCH_candidate_path.json at the repo root, keyed by git sha.
-
-    The file is a COMMITTED ledger: each PR's pre-commit quick-bench run
-    appends its row and the PR checks it in, so the perf trajectory
-    accumulates in git history (re-running on the same sha overwrites
-    that sha's entry; a fresh CI checkout re-records the current sha and
-    uploads the file as an artifact — the cross-PR trend lives in the
-    committed copy, not in CI state)."""
-    import subprocess
-    path = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
-                                        "BENCH_candidate_path.json"))
-    try:
-        sha = subprocess.check_output(
-            ["git", "rev-parse", "--short", "HEAD"],
-            cwd=os.path.dirname(path), text=True).strip()
-    except Exception:
-        sha = "unknown"
-    hist = {}
-    if os.path.exists(path):
-        try:
-            with open(path) as f:
-                hist = json.load(f)
-        except Exception:
-            hist = {}
-    hist[sha] = {"qps": out["qps"],
-                 "measured_speedup": out["measured_speedup"],
-                 "predicted_speedup": out["predicted_speedup"],
-                 "rerank_micro_speedup": out["rerank_micro_speedup"],
-                 "rerank_impl": out["rerank_impl"],
-                 "n_docs": out["n_docs"], "batch": out["batch"]}
-    with open(path, "w") as f:
-        json.dump(hist, f, indent=1, default=float)
+    BENCH_candidate_path.json (committed-ledger convention: see
+    ``_persist_ledger``)."""
+    _persist_ledger("BENCH_candidate_path.json",
+                    {"qps": out["qps"],
+                     "measured_speedup": out["measured_speedup"],
+                     "predicted_speedup": out["predicted_speedup"],
+                     "rerank_micro_speedup": out["rerank_micro_speedup"],
+                     "rerank_impl": out["rerank_impl"],
+                     "n_docs": out["n_docs"], "batch": out["batch"]})
 
 
 def dynamic_corpus(table: dict, quick: bool = False):
@@ -928,66 +957,204 @@ def mixed_tenant_tail_latency(table: dict, quick: bool = False):
 
 
 def _persist_multi_tenant(out: dict) -> None:
-    """Append this run's mixed-tenant rows to BENCH_multi_tenant.json at
-    the repo root, keyed by git sha — same committed-ledger convention as
-    ``_persist_candidate_path`` (re-running on a sha overwrites that sha's
-    entry; the cross-PR trend lives in the committed copy)."""
-    import subprocess
-    path = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
-                                        "BENCH_multi_tenant.json"))
-    try:
-        sha = subprocess.check_output(
-            ["git", "rev-parse", "--short", "HEAD"],
-            cwd=os.path.dirname(path), text=True).strip()
-    except Exception:
-        sha = "unknown"
-    hist = {}
-    if os.path.exists(path):
-        try:
-            with open(path) as f:
-                hist = json.load(f)
-        except Exception:
-            hist = {}
-    hist[sha] = {k: out[k] for k in
-                 ("quiet_p50_ms", "quiet_p99_ms", "burst_p50_ms",
-                  "burst_p99_ms", "dispatch_ms", "retraces",
-                  "n_requests", "rate")}
-    with open(path, "w") as f:
-        json.dump(hist, f, indent=1, default=float)
+    """Append this run's mixed-tenant rows to BENCH_multi_tenant.json
+    (committed-ledger convention: see ``_persist_ledger``)."""
+    _persist_ledger("BENCH_multi_tenant.json",
+                    {k: out[k] for k in
+                     ("quiet_p50_ms", "quiet_p99_ms", "burst_p50_ms",
+                      "burst_p99_ms", "dispatch_ms", "retraces",
+                      "n_requests", "rate")})
+
+
+def routed_scan(table: dict, quick: bool = False):
+    """Centroid-routed sublinear candidate generation vs the exhaustive
+    scan (paper §3 "multi-stage search", PLAID-style routing):
+
+    - N-ladder QPS curve, exhaustive vs routed, interleaved-min timing —
+      the crossover where routing's K-centroid overhead pays for itself;
+      routed must beat exhaustive at the largest N (asserted)
+    - recall@10 vs the exhaustive oracle at the benchmarked n_probe
+      (asserted >= 0.95) plus an n_probe sweep at the smallest N
+    - BITWISE oracle parity at n_probe == n_clusters (asserted — routing
+      with every cluster probed must be the exhaustive scan, not an
+      approximation of it)
+    - zero steady-state retraces across the timed loop (asserted)
+    - observed dispatch routing of the ivf_route family (recorded)
+
+    Rows persist to BENCH_routed_scan.json at the repo root by git sha."""
+    import jax.numpy as jnp
+    from repro.core import multistage as MST
+    from repro.kernels import dispatch as DSP
+    from repro.retrieval import tracing
+    from repro.retrieval.retriever import Retriever
+    from repro.retrieval.store import VectorStore
+
+    D, d, B, Q, topk = 4, 32, 4, 8, 10
+    ladder = (4096, 16384, 65536) if quick else (10_000, 100_000, 1_000_000)
+    rounds = 5 if quick else 3
+    rng = np.random.default_rng(31)
+    # clustered corpus: a mixture of generator centers, so the data HAS
+    # the structure IVF exploits (uniform noise would make any routed
+    # recall number meaningless — every cluster equally likely). Centers
+    # scale with N so each holds >> topk docs — otherwise the tail of the
+    # true top-k is arbitrary far-away docs and recall measures noise.
+    def corpus(n):
+        G = int(np.clip(n // 64, 64, 1024))
+        centers = rng.standard_normal((G, d)).astype(np.float32)
+        g = rng.integers(0, G, size=n)
+        toks = centers[g][:, None, :] + 0.25 * rng.standard_normal(
+            (n, D, d)).astype(np.float32)
+        return toks.astype(np.float32), centers, g
+
+    def queries(centers, g_of_doc):
+        # each query aims at a random doc's generator center — its true
+        # neighbours share that center, so exhaustive top-k is a real
+        # target, not noise
+        tgt = rng.integers(0, len(g_of_doc), size=B)
+        qs = centers[g_of_doc[tgt]][:, None, :] + 0.25 * \
+            rng.standard_normal((B, Q, d)).astype(np.float32)
+        return jnp.asarray(qs)
+
+    out = {"quick": quick, "topk": topk, "batch": B,
+           "route_impl": DSP.resolve("ivf_route", True)[0],
+           "ladder": []}
+    for li, n in enumerate(ladder):
+        toks, centers, g = corpus(n)
+        k_c = 1 << max(2, int(round(np.log2(np.sqrt(n)))))
+        n_probe = max(4, k_c // 16)
+        r = Retriever(VectorStore({"mean_pooling": jnp.asarray(toks)}, n),
+                      routing=k_c)
+        q = queries(centers, g)
+        qm = jnp.ones((B, Q), bool)
+        ex = (MST.Stage("mean_pooling", topk),)
+        rt = MST.with_routing_policy(ex, n_probe=n_probe, n_clusters=k_c)
+        fn_ex, fn_rt = r.search_fn(ex), r.search_fn(rt)
+        stores = r.store.stores()
+        for fn in (fn_ex, fn_rt):
+            _block(fn(stores, q, qm, None))          # compile + warm
+        warm = tracing.trace_count()
+        best = {"exhaustive": float("inf"), "routed": float("inf")}
+        for _ in range(rounds):                       # interleaved-min A/B
+            for name, fn in (("exhaustive", fn_ex), ("routed", fn_rt)):
+                t0 = time.time()
+                _block(fn(stores, q, qm, None))
+                best[name] = min(best[name], time.time() - t0)
+        retraces = tracing.trace_count() - warm
+        assert retraces == 0, (
+            f"routed/exhaustive timed loop retraced {retraces}x at N={n} — "
+            "the routing companions leaked into a trace axis")
+
+        def recall(probe):
+            st = MST.with_routing_policy(ex, n_probe=probe, n_clusters=k_c)
+            _, ids_p = r.search(q, qm, stages=st)
+            return float(np.mean([
+                len(set(a.tolist()) & set(b.tolist())) / topk
+                for a, b in zip(np.asarray(ids_p), np.asarray(ids_ex))]))
+
+        s_ex, ids_ex = r.search(q, qm, stages=ex)
+        rec = recall(n_probe)
+        assert rec >= 0.95, (
+            f"routed recall@{topk} {rec:.3f} < 0.95 at N={n}, "
+            f"n_probe={n_probe}/{k_c} — routing is dropping true hits")
+        row = {"n_docs": n, "n_clusters": k_c, "n_probe": n_probe,
+               "qps_exhaustive": B / best["exhaustive"],
+               "qps_routed": B / best["routed"],
+               "speedup": best["exhaustive"] / best["routed"],
+               "recall_at_k": rec, "retraces": retraces}
+        out["ladder"].append(row)
+        _emit(f"routed_scan_n{n}", best["routed"],
+              f"speedup={row['speedup']:.2f}x recall={rec:.3f}")
+        if li == 0:
+            # oracle parity: every cluster probed == the exhaustive scan,
+            # bitwise — scores AND translated ids
+            s_all, ids_all = r.search(
+                q, qm, stages=MST.with_routing_policy(
+                    ex, n_probe=k_c, n_clusters=k_c))
+            assert np.array_equal(np.asarray(s_ex), np.asarray(s_all)), \
+                "routed n_probe == n_clusters diverged from exhaustive"
+            assert np.array_equal(ids_ex, ids_all)
+            out["parity_exact"] = True
+            sweep, probe = {}, 1
+            while probe < k_c:
+                sweep[str(probe)] = recall(probe)
+                probe *= 4
+            sweep[str(k_c)] = 1.0                     # parity, asserted
+            out["n_probe_sweep"] = sweep
+    last = out["ladder"][-1]
+    assert last["qps_routed"] > last["qps_exhaustive"], (
+        f"no crossover: routed {last['qps_routed']:.1f} QPS <= exhaustive "
+        f"{last['qps_exhaustive']:.1f} QPS at N={last['n_docs']} — the "
+        "routed read bill should win well before this corpus size")
+    out["crossover_n"] = next(
+        (row["n_docs"] for row in out["ladder"]
+         if row["qps_routed"] > row["qps_exhaustive"]), None)
+    out["route_dispatches"] = DSP.dispatch_count("ivf_route")
+    table["routed_scan"] = out
+    _persist_routed_scan(out)
+
+
+def _persist_routed_scan(out: dict) -> None:
+    """Append this run's routed-vs-exhaustive ladder to
+    BENCH_routed_scan.json (committed-ledger convention: see
+    ``_persist_ledger``)."""
+    _persist_ledger("BENCH_routed_scan.json",
+                    {"ladder": out["ladder"],
+                     "crossover_n": out["crossover_n"],
+                     "parity_exact": out.get("parity_exact", False),
+                     "n_probe_sweep": out.get("n_probe_sweep", {}),
+                     "route_impl": out["route_impl"],
+                     "quick": out["quick"]})
+
+
+# named suites for --suite: subsets a CI job or a dev loop can run
+# without paying for the whole harness (names match the fns above)
+SUITES = {
+    "tables": ("table2_quality_qps", "scope_scaling", "eq1_cost_model",
+               "pooling_ablation", "hygiene_ablation"),
+    "kernels": ("kernel_micro", "kernel_vs_ref_scan"),
+    "candidate": ("rerank_kernel_vs_ref",),
+    "serving": ("dynamic_corpus", "serving_tail_latency",
+                "mixed_tenant_tail_latency", "ingest_throughput"),
+    "routed": ("routed_scan",),
+}
 
 
 def main() -> None:
     import argparse
+    import inspect
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke run: small sizes, core tables only")
+    ap.add_argument("--suite", action="append", choices=sorted(SUITES),
+                    help="run only the named suite(s) (repeatable); "
+                         "composes with --quick; default is everything")
     args = ap.parse_args()
     os.makedirs(RESULTS, exist_ok=True)
     table: dict = {}
     print("name,us_per_call,derived")
-    if args.quick:
-        eq1_cost_model(table)
-        kernel_vs_ref_scan(table, quick=True)
-        rerank_kernel_vs_ref(table, quick=True)
-        dynamic_corpus(table, quick=True)
-        serving_tail_latency(table, quick=True)
-        mixed_tenant_tail_latency(table, quick=True)
-        ingest_throughput(table, quick=True)
-        kernel_micro(table)
+    if args.suite:
+        names = [n for s in args.suite for n in SUITES[s]]
+    elif args.quick:
+        names = ["eq1_cost_model", "kernel_vs_ref_scan",
+                 "rerank_kernel_vs_ref", "routed_scan", "dynamic_corpus",
+                 "serving_tail_latency", "mixed_tenant_tail_latency",
+                 "ingest_throughput", "kernel_micro"]
     else:
-        table2_quality_qps(table)
-        scope_scaling(table)
-        eq1_cost_model(table)
-        pooling_ablation(table)
-        hygiene_ablation(table)
-        kernel_micro(table)
-        kernel_vs_ref_scan(table)
-        rerank_kernel_vs_ref(table)
-        dynamic_corpus(table)
-        serving_tail_latency(table)
-        mixed_tenant_tail_latency(table)
-        ingest_throughput(table)
-    name = "paper_tables_quick.json" if args.quick else "paper_tables.json"
+        names = ["table2_quality_qps", "scope_scaling", "eq1_cost_model",
+                 "pooling_ablation", "hygiene_ablation", "kernel_micro",
+                 "kernel_vs_ref_scan", "rerank_kernel_vs_ref",
+                 "routed_scan", "dynamic_corpus", "serving_tail_latency",
+                 "mixed_tenant_tail_latency", "ingest_throughput"]
+    for name in names:
+        fn = globals()[name]
+        if args.quick and "quick" in inspect.signature(fn).parameters:
+            fn(table, quick=True)
+        else:
+            fn(table)
+    stem = "paper_tables"
+    if args.suite:
+        stem += "_" + "_".join(args.suite)
+    name = f"{stem}_quick.json" if args.quick else f"{stem}.json"
     with open(os.path.join(RESULTS, name), "w") as f:
         json.dump(table, f, indent=1, default=float)
     print(f"\nwrote {os.path.join(RESULTS, name)}")

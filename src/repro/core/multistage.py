@@ -60,6 +60,21 @@ class Stage:
               blockwise jnp twin elsewhere) instead of materialising the
               [B, L, D, d] gathered copy. Single-vector rerank stages
               ignore it (one small gather + GEMM, no memory cliff).
+    n_probe / n_clusters
+              IVF routing policy for the scan (first) stage. With
+              ``n_probe > 0`` the engine scores the query against the
+              store's ``[K, d]`` segment centroids, keeps the top
+              ``n_probe`` clusters, and scans only their member slots —
+              the scan read bill drops from O(N*Q*d) to
+              O((K + N*n_probe/K)*Q*d). ``n_probe == n_clusters`` is the
+              oracle-parity mode: every live slot sits in exactly one
+              member list, so the routed scan recovers the exhaustive
+              result (bitwise for multi-vector stages). ``n_clusters``
+              records the per-segment K the store was clustered with; it
+              is advisory for the cost models — the store's own
+              clustering (``SegmentedStore.enable_routing``) is the
+              source of truth at execution time. The pure-jnp oracle in
+              this module ignores both (it is always exhaustive).
     """
     vector: str            # named vector to score with
     k: int                 # candidates kept after this stage
@@ -68,6 +83,8 @@ class Stage:
     dtype: str | None = None
     scan_topk: bool = False
     rerank_kernel: bool = False
+    n_probe: int = 0
+    n_clusters: int = 0
 
 
 def with_scan_policy(stages: tuple, *, use_kernel: bool | None = None,
@@ -86,6 +103,19 @@ def with_scan_policy(stages: tuple, *, use_kernel: bool | None = None,
         kw["dtype"] = dtype
     if scan_topk is not None:
         kw["scan_topk"] = scan_topk
+    return (dataclasses.replace(first, **kw),) + rest
+
+
+def with_routing_policy(stages: tuple, *, n_probe: int | None = None,
+                        n_clusters: int | None = None) -> tuple:
+    """Return ``stages`` with the scan (first) stage's IVF routing policy
+    replaced; ``None`` keeps the existing value."""
+    first, rest = stages[0], tuple(stages[1:])
+    kw = {}
+    if n_probe is not None:
+        kw["n_probe"] = n_probe
+    if n_clusters is not None:
+        kw["n_clusters"] = n_clusters
     return (dataclasses.replace(first, **kw),) + rest
 
 
@@ -239,14 +269,26 @@ def qps_cost_model(n_docs: int, q_tokens: int, dim: int, stages: tuple,
     the full query ``dim``. Omitting ``vec_dims`` bills every stage at
     ``dim`` (correct only for stores whose vectors all match the query
     width; ``VectorStore.vec_dims()`` supplies the real widths).
+
+    A routed scan stage (``n_probe > 0`` with ``n_clusters > 0``) is
+    billed at the centroid GEMM (K centroid rows at the stage dim —
+    query tokens collapse to one summed vector first, so no q_tokens
+    factor) plus only the expected probed members,
+    ``ceil(N * n_probe / K)``, instead of all N.
     """
     total, cand = 0, n_docs
-    for stage in stages:
+    for si, stage in enumerate(stages):
         cand = min(cand, n_docs)
         d_vecs = store_dims[stage.vector]
         stage_dim = dim if vec_dims is None else \
             min(dim, vec_dims.get(stage.vector, dim))
-        total += q_tokens * d_vecs * cand * stage_dim
+        if si == 0 and stage.n_probe > 0 and stage.n_clusters > 0:
+            k_c = stage.n_clusters
+            probed = min(cand, -(-n_docs * min(stage.n_probe, k_c) // k_c))
+            total += k_c * stage_dim                      # centroid GEMM
+            total += q_tokens * d_vecs * probed * stage_dim
+        else:
+            total += q_tokens * d_vecs * cand * stage_dim
         cand = min(stage.k, cand)
     return total
 
@@ -284,6 +326,15 @@ def cascade_hbm_bytes(n_docs: int, q_tokens: int, dim: int, stages: tuple,
     ``bytes_per_coord`` maps vector name -> stored bytes per coordinate
     (default 2 = bf16; pass 1 for int8-quantised names). Query-side reads
     (``B * Q * d``) are noise at corpus scale and not billed.
+
+    - **routed-scan** (scan stage with ``n_probe``/``n_clusters`` set):
+      one f32 centroid read (``K * d * 4``) plus a candidate-style gather
+      of the expected probed members, ``ceil(N * n_probe / K)`` rows
+      (3x when materialised via ``jnp.take``, 1x when the fused
+      ``use_kernel``/``rerank_kernel`` path streams them), plus the
+      ``B * (K + probed) * 4`` score writes. This is the whole point of
+      routing: the stage's read bill stops scaling with N at fixed
+      ``N * n_probe / K``.
     """
     bpc = bytes_per_coord or {}
     per_stage, cand = [], n_docs
@@ -294,7 +345,19 @@ def cascade_hbm_bytes(n_docs: int, q_tokens: int, dim: int, stages: tuple,
             min(dim, vec_dims.get(stage.vector, dim))
         b = bpc.get(stage.vector, 2)
         k = min(stage.k, cand)
-        if si == 0:
+        if si == 0 and stage.n_probe > 0 and stage.n_clusters > 0:
+            k_c = stage.n_clusters
+            probed = min(n_docs,
+                         -(-n_docs * min(stage.n_probe, k_c) // k_c))
+            read = k_c * vd * 4                      # f32 centroids
+            gather = batch * probed * d_vecs * vd * b
+            if b == 1:
+                gather += batch * probed * d_vecs * 4
+            factor = 1 if (stage.use_kernel or stage.rerank_kernel) else 3
+            entry = {"stage": stage.vector, "kind": "routed-scan",
+                     "read_bytes": read + factor * gather,
+                     "score_write_bytes": batch * (k_c + probed) * 4}
+        elif si == 0:
             read = n_docs * d_vecs * vd * b
             if b == 1:        # int8 codes stream per-vector f32 scales too
                 read += n_docs * d_vecs * 4

@@ -24,7 +24,7 @@ gates — resolves through ``resolve(name, use_kernel)``. Adding a fifth op
 family is one ``register`` call, not a fourth mechanism.
 
 Registered families (see each ops module): ``maxsim_scan``,
-``maxsim_rerank``, ``pooling``, ``embed_bag``.
+``maxsim_rerank``, ``ivf_route``, ``pooling``, ``embed_bag``.
 
 Layering: this module imports nothing from the op packages — each ops
 module imports ``dispatch`` and registers itself at import time.

@@ -314,6 +314,58 @@ def rerank_pallas_available() -> bool:
 
 
 # ---------------------------------------------------------------------------
+# IVF centroid routing
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("impl", "interpret"))
+def centroid_scores(q: jax.Array, centroids: jax.Array,
+                    q_mask: jax.Array | None = None,
+                    *, impl: str = "ref",
+                    interpret: bool = True) -> jax.Array:
+    """Query-vs-centroid routing scores: q [B,Q,d], centroids [K,dc] ->
+    [B,K] f32.
+
+    The routing score of cluster c is the summed-query dot product
+    ``(sum_i mask_i * q_i) . c`` — MaxSim over a single-vector "document"
+    degenerates to exactly this, so the Pallas impl reuses the scan
+    kernel on a ``centroids[:, None, :]`` view (D=1 documents) while the
+    reference is one masked-sum GEMM. The ref GEMM is the bitwise
+    contract (it is ``core.maxsim.maxsim_single_vector`` on the centroid
+    table); the kernel impl reorders the token sum and is allclose-level.
+    Matryoshka centroids (narrower than q) score against the matching
+    query prefix, mirroring every other stage."""
+    B, Q, d = q.shape
+    K, dc = centroids.shape
+    if dc < d:
+        q = q[..., :dc]
+    if q_mask is None:
+        q_mask = jnp.ones((B, Q), jnp.float32)
+    q_mask = q_mask.astype(jnp.float32)
+    DSP.record("ivf_route", impl)
+    if impl == "ref":
+        qs = jnp.sum(q.astype(jnp.float32) * q_mask[..., None], axis=-2)
+        return qs @ centroids.astype(jnp.float32).T
+    qp = _pad_to(q, 1, 8)
+    qmp = _pad_to(q_mask, 1, 8)
+    docs_p = _pad_to(centroids[:, None, :].astype(jnp.float32), 0, 8)
+    dm_p = jnp.ones((docs_p.shape[0], 1), jnp.float32)
+    out = maxsim_pallas(qp, qmp, docs_p, dm_p, block_n=8, block_d=1,
+                        interpret=interpret)
+    return out[:, :K]
+
+
+def _probe_route() -> bool:
+    """Trace a tiny centroid-routing kernel instance (the ``ivf_route``
+    probe; counter snapshot/restore handled by the registry)."""
+    q = jnp.zeros((1, 8, 128), jnp.float32)
+    cents = jnp.zeros((8, 128), jnp.float32)
+    out = centroid_scores(q, cents, impl="pallas",
+                          interpret=default_interpret())
+    jax.block_until_ready(out)
+    return True
+
+
+# ---------------------------------------------------------------------------
 # streamed scan top-k
 # ---------------------------------------------------------------------------
 
@@ -452,3 +504,9 @@ DSP.register(DSP.KernelOp(
 DSP.register(DSP.KernelOp(
     name="maxsim_rerank", probe=_probe_rerank, fallback="jnp",
     interpret_ok=False, kernel_impls=frozenset({"pallas", "jnp"})))
+
+# centroid routing is one small GEMM — the ref IS the fast path off-TPU
+# (and the bitwise oracle contract); the kernel impl only pays on TPU
+DSP.register(DSP.KernelOp(
+    name="ivf_route", probe=_probe_route, fallback="ref",
+    interpret_ok=False, kernel_impls=frozenset({"pallas"})))

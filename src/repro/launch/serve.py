@@ -9,7 +9,11 @@ does the full sweep). Search goes through the ``Retriever`` facade, which
 owns the segmented corpus + mesh and caches the compiled cascade per
 (stages, segment capacities); ``--use-kernel`` dispatches the scan stage to
 the Pallas MaxSim kernel, ``--chunk`` bounds its per-launch corpus tile,
-``--int8`` stores the scan vectors quantised.
+``--int8`` stores the scan vectors quantised. ``--n-clusters K --n-probe p``
+switches the scan stage to IVF centroid routing: the corpus is k-means
+clustered at index time (maintained through every mutation mode below) and
+each query scans only the top-``p`` clusters' members instead of the whole
+corpus (``p == K`` recovers the exhaustive result).
 
 Dynamic-corpus mode:
 
@@ -82,6 +86,7 @@ def _multi_tenant_retriever(args, cfg, bench, stages, int8_on, **kw):
             b = quantize_store(b, names=(stages[0].vector,), stages=stages)
         batches.append(b)
     kw.setdefault("capacity", bucket_capacity(len(pages)))
+    kw.setdefault("routing", args.n_clusters or None)
     retriever = Retriever(batches[0], **kw)       # seed batch = tenant 0
     for t in range(1, T):
         retriever.upsert(batches[t], tenant=t)
@@ -95,7 +100,7 @@ def _run_static(args, cfg, bench, store, stages, int8_on):
 
     if args.tenants > 1:
         return _run_static_tenants(args, cfg, bench, stages, int8_on)
-    retriever = Retriever(store)
+    retriever = Retriever(store, routing=args.n_clusters or None)
     q = jnp.asarray(bench.queries)
     qm = jnp.asarray(bench.query_mask)
     retriever.search(q, qm, stages=stages)                    # compile
@@ -177,7 +182,8 @@ def _run_traffic(args, cfg, bench, store, stages, int8_on):
         retriever = _multi_tenant_retriever(args, cfg, bench, stages,
                                             int8_on, scan_chunk=args.chunk)
     else:
-        retriever = Retriever(store, scan_chunk=args.chunk)
+        retriever = Retriever(store, scan_chunk=args.chunk,
+                              routing=args.n_clusters or None)
     q = jnp.asarray(bench.queries)
     qm = jnp.asarray(bench.query_mask)
 
@@ -258,7 +264,7 @@ def _run_ingest(args, cfg, bench, store, stages, int8_on):
         cfg, quantize=quantize, stages=stages if int8_on else None,
         use_kernel=args.use_kernel) if args.ingest_pipeline else None
     retriever = Retriever(store, capacity=cap, scan_chunk=args.chunk,
-                          ingest=pipe)
+                          ingest=pipe, routing=args.n_clusters or None)
     q = jnp.asarray(bench.queries)
     qm = jnp.asarray(bench.query_mask)
 
@@ -348,6 +354,15 @@ def main():
                          "materialised [B, L, D, d] candidate copy")
     ap.add_argument("--int8", action="store_true",
                     help="int8-quantise the scan-stage vectors")
+    ap.add_argument("--n-clusters", type=int, default=0,
+                    help="enable IVF centroid routing: cluster each "
+                         "segment's routing vectors into this many "
+                         "clusters (k-means at index time, maintained "
+                         "through upsert/delete/compact)")
+    ap.add_argument("--n-probe", type=int, default=0,
+                    help="clusters probed per query by the routed scan "
+                         "stage (requires --n-clusters; n-probe == "
+                         "n-clusters is the exhaustive-parity mode)")
     ap.add_argument("--ingest-batches", type=int, default=0,
                     help="dynamic-corpus mode: upsert this many batches "
                          "into preallocated headroom, measuring steady-"
@@ -404,6 +419,11 @@ def main():
                                   scan_topk=args.scan_topk)
     stages = MST.with_rerank_policy(stages,
                                     rerank_kernel=args.rerank_kernel)
+    if args.n_probe > 0:
+        if args.n_clusters <= 0:
+            ap.error("--n-probe requires --n-clusters")
+        stages = MST.with_routing_policy(stages, n_probe=args.n_probe,
+                                         n_clusters=args.n_clusters)
     int8_on = False
     if args.int8:
         # quantise the vector the scan stage scores; a single-vector scan

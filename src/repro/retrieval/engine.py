@@ -40,7 +40,21 @@ API call", pod-scale edition). Design rules:
   blockwise jnp twin elsewhere);
 - in the sharded rerank merge, non-owned candidate copies DROP their slot
   id (-1 sentinel): NEG filler can then never re-enter a top-k as a
-  duplicate of a live document (k > live candidates is the trigger).
+  duplicate of a live document (k > live candidates is the trigger);
+- ``Stage.n_probe > 0`` replaces the stage-0 exhaustive scan with IVF
+  centroid ROUTING: the query is scored against each segment's replicated
+  [K, d] centroid table (``kernels.maxsim.ops.centroid_scores``), the top
+  ``n_probe`` clusters' padded member-slot lists become the candidate
+  rows, and those rows run through the SAME candidate-scoring machinery
+  the rerank stages use (``_score_candidates`` — fused gather kernel when
+  the stage asks for it). Sharded, the routing companions are replicated
+  so every shard derives the identical row set, then scores only its
+  owned slots via the rerank path's mine/compact/all-gather merge. The
+  read bill drops from O(N*Q*d) to O((K + N*n_probe/K)*Q*d); at
+  ``n_probe == K`` every live slot sits in exactly one member list so the
+  routed scan recovers the exhaustive result (bitwise on multi-vector
+  float stages; the routed scan ignores ``Stage.dtype``/``chunk`` — its
+  working set is the probed members, not the corpus).
 
 The single-device oracle is repro.core.multistage.search; tests assert
 equality on a 1-shard mesh and overlap on multi-shard CPU meshes.
@@ -56,9 +70,10 @@ from repro.core import maxsim as MS
 from repro.core.multistage import DEFAULT_SCAN_TOPK_CHUNK, Stage
 from repro.kernels import dispatch as DSP
 from repro.kernels.maxsim import ops as KOPS
-from repro.retrieval.store import (VALIDITY_KEY, as_filter_arrays,
-                                   effective_validity, filter_words,
-                                   rerank_arrays, scan_arrays)
+from repro.retrieval.store import (ROUTING_KEYS, VALIDITY_KEY,
+                                   as_filter_arrays, effective_validity,
+                                   filter_words, rerank_arrays,
+                                   routing_arrays, scan_arrays)
 from repro.retrieval.topk import (allgather_topk, gathered_merge_topk,
                                   merge_topk)
 from repro.retrieval.tracing import record_trace
@@ -210,6 +225,28 @@ def _score_candidates(stage_vecs, stage_mask, stage_scales, q, q_mask,
     return jnp.where(ok, s, NEG)
 
 
+def _routed_rows(store: dict, stage: Stage, q, q_mask, impl: str,
+                 interpret: bool):
+    """Stage-0 candidate generation by centroid routing for ONE segment:
+    score the query against the segment's [K, d] centroids, keep the top
+    ``n_probe`` clusters, and emit their member-slot lists as one
+    [B, n_probe * C] candidate row set (-1 marks padded member slots).
+    All inputs are replicated under shard_map, so every shard derives the
+    identical row set and then scores only the slots it owns."""
+    routing = routing_arrays(store)
+    if routing is None:
+        raise ValueError(
+            f"stage '{stage.vector}' sets n_probe={stage.n_probe} but the "
+            "store carries no routing companions — enable routing on the "
+            "SegmentedStore (Retriever(routing=...) or "
+            "store.enable_routing(...)) before building the search fn")
+    cents, members = routing                          # [K, d], [K, C]
+    cs = KOPS.centroid_scores(q, cents, q_mask, impl=impl,
+                              interpret=interpret)    # [B, K]
+    _, cid = jax.lax.top_k(cs, min(stage.n_probe, cents.shape[0]))
+    return jnp.take(members, cid, axis=0).reshape(q.shape[0], -1)
+
+
 def _offsets(capacities: tuple) -> tuple:
     offs, off = [], 0
     for cap in capacities:
@@ -237,6 +274,18 @@ def _build_body(mesh: Mesh | None, stages: tuple, capacities: tuple,
         "maxsim_scan", bool(stages and stages[0].use_kernel))
     rr_impl, rr_interpret = DSP.resolve(
         "maxsim_rerank", any(s.rerank_kernel for s in stages[1:]))
+    # a routed stage 0 resolves two more families: the centroid-scoring op
+    # (kernel only when the stage asks — the ref GEMM is the off-TPU fast
+    # path AND the bitwise contract) and the candidate scorer the probed
+    # member rows run through (the fused gather path when either kernel
+    # flag is set; the ref gather otherwise, which keeps n_probe == K
+    # bitwise the exhaustive oracle on multi-vector float stages)
+    routed = bool(stages and stages[0].n_probe > 0)
+    rt_impl, rt_interpret = DSP.resolve(
+        "ivf_route", routed and stages[0].use_kernel)
+    r0_impl, r0_interpret = DSP.resolve(
+        "maxsim_rerank",
+        routed and (stages[0].use_kernel or stages[0].rerank_kernel))
     offsets = _offsets(capacities)
     total_cap = sum(capacities)
 
@@ -257,6 +306,27 @@ def _build_body(mesh: Mesh | None, stages: tuple, capacities: tuple,
                     parts_v, parts_i = [], []
                     for store, eff, cap, off in zip(stores, effs, capacities,
                                                     offsets):
+                        if routed:
+                            rows = _routed_rows(store, stage, q, q_mask,
+                                                rt_impl, rt_interpret)
+                            rclip = jnp.clip(rows, 0, cap - 1)
+                            ok = rows >= 0      # -1 = padded member slot
+                            if eff is not None:
+                                ok = ok & jnp.take(eff, rclip, axis=0)
+                            s = _score_candidates(
+                                *_scan_arrays(store, stage), q, q_mask,
+                                rclip, ok, r0_impl, r0_interpret)
+                            v, sel = jax.lax.top_k(
+                                s, min(stage.k, cap, rows.shape[1]))
+                            # dead winners (k > live probed members) drop
+                            # their slot id — -1 is the filler sentinel
+                            i = jnp.where(
+                                jnp.take_along_axis(ok, sel, axis=1),
+                                jnp.take_along_axis(rclip, sel, axis=1)
+                                + off, -1)
+                            parts_v.append(v)
+                            parts_i.append(i)
+                            continue
                         vecs, mask, scales = _scan_arrays(store, stage)
                         if stage.scan_topk:
                             v, i = _dispatch_scan_topk(
@@ -316,6 +386,42 @@ def _build_body(mesh: Mesh | None, stages: tuple, capacities: tuple,
                 for store, eff, cap, off in zip(stores, effs, capacities,
                                                 offsets):
                     n_local = cap // n_shards
+                    if routed:
+                        # replicated routing inputs -> every shard derives
+                        # the identical candidate rows, then the rerank
+                        # stages' mine/compact machinery scores only the
+                        # owned slots. cap_slots >= n_local whenever
+                        # K*C >= capacity (the member-width invariant), so
+                        # the compaction is EXACT at n_probe == K — parity
+                        # mode survives sharding.
+                        rows = _routed_rows(store, stage, q, q_mask,
+                                            rt_impl, rt_interpret)
+                        R = rows.shape[1]
+                        rclip = jnp.clip(rows, 0, cap - 1)
+                        cap_slots = min(R, max(1, -(-R // n_shards))
+                                        * rerank_overcommit)
+                        mine = (rows >= 0) & (rclip // n_local == shard_idx)
+                        order = jnp.argsort(~mine, axis=1)[:, :cap_slots]
+                        rsel = jnp.take_along_axis(rclip % n_local, order,
+                                                   axis=1)
+                        gsel = jnp.take_along_axis(rclip, order, axis=1)
+                        ok = jnp.take_along_axis(mine, order, axis=1)
+                        if eff is not None:
+                            ok = ok & jnp.take(eff, rsel, axis=0)
+                        s = _score_candidates(
+                            *_scan_arrays(store, stage), q, q_mask,
+                            rsel, ok, r0_impl, r0_interpret)
+                        v, sel = jax.lax.top_k(
+                            s, min(stage.k, cap, cap_slots))
+                        gi = jnp.where(
+                            jnp.take_along_axis(ok, sel, axis=1),
+                            jnp.take_along_axis(gsel, sel, axis=1) + off,
+                            -1)
+                        v, i = gathered_merge_topk(v, gi,
+                                                   min(stage.k, cap), axes)
+                        parts_v.append(v)
+                        parts_i.append(i)
+                        continue
                     vecs, mask, scales = _scan_arrays(store, stage)
                     if stage.scan_topk:
                         # streamed per-shard running top-k; ids shift into
@@ -381,7 +487,10 @@ def _build_body(mesh: Mesh | None, stages: tuple, capacities: tuple,
         return scores, cand
 
     def searcher(stores, q, q_mask, fspec):
-        specs = tuple({k: P(axes) if v.ndim >= 1 else P()
+        # the [K, d]/[K, C] routing companions are replicated — their
+        # member slot ids index the WHOLE segment, not a shard slab
+        specs = tuple({k: (P() if k in ROUTING_KEYS else
+                           (P(axes) if v.ndim >= 1 else P()))
                        for k, v in store.items()} for store in stores)
         # the filter triple is replicated: every shard applies the same
         # request predicate to its local slab
@@ -468,4 +577,5 @@ def store_shardings(mesh: Mesh | None, store_vectors: dict) -> dict | None:
     if mesh is None:
         return None
     axes = _flat_axes(mesh)
-    return {k: NamedSharding(mesh, P(axes)) for k in store_vectors}
+    return {k: NamedSharding(mesh, P() if k in ROUTING_KEYS else P(axes))
+            for k in store_vectors}

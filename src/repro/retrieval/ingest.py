@@ -336,7 +336,14 @@ class IngestPipeline:
 
         ``tenant``/``tags`` stamp the batch's store companions exactly as
         ``SegmentedStore.add_pages`` does, as traced values inside the
-        same fused write program."""
+        same fused write program.
+
+        ``store.commit`` is the single landing point for both this path
+        and ``add_pages``, so when the store has IVF routing enabled
+        (``SegmentedStore.enable_routing``) the freshly written slots are
+        assigned to their nearest cluster there — ingested pages are
+        immediately reachable by routed scan stages, at the same
+        zero-steady-state-retrace cost (see ``repro.retrieval.routing``)."""
         pages, tt = self._admit(pages, token_types)
         n = int(pages.shape[0])
         if store.segments:

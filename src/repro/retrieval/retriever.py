@@ -61,7 +61,7 @@ class Retriever:
     def __init__(self, store, mesh=None,
                  rerank_overcommit: int = 8, scan_chunk: int = 0,
                  place: bool = True, capacity: int | None = None,
-                 ingest=None, filter_words: int = 1):
+                 ingest=None, filter_words: int = 1, routing=None):
         """``store`` is a built ``VectorStore`` (wrapped as segment 0 —
         exact-fit by default, or preallocated to ``capacity`` slots for
         ingestion headroom) or an existing ``SegmentedStore``. place=True
@@ -70,7 +70,11 @@ class Retriever:
         ``Retriever.ingest`` (raw pages in, stable ids out).
         ``filter_words`` sizes the packed metadata-tag bitset (32 tags per
         word) when wrapping a ``VectorStore``; an existing
-        ``SegmentedStore`` keeps its own width."""
+        ``SegmentedStore`` keeps its own width. ``routing`` enables IVF
+        centroid routing on the store (an int target cluster count, or a
+        ``repro.retrieval.routing.RoutingPolicy``): segments get clustered
+        now and maintained through upsert/ingest/delete/compact, and scan
+        stages with ``Stage.n_probe > 0`` route through the clusters."""
         self.mesh = mesh
         self.rerank_overcommit = rerank_overcommit
         self.scan_chunk = scan_chunk
@@ -91,6 +95,10 @@ class Retriever:
             if mesh is not None and place:
                 store.place_on(mesh)
         self.store = store
+        if routing is not None:
+            # changes the layout key (new store companions), so search fns
+            # built before enabling routing are naturally invalidated
+            self.store.enable_routing(routing)
 
     @property
     def n_docs(self) -> int:

@@ -1,0 +1,377 @@
+"""IVF cluster routing over the segmented corpus (PLAID-style).
+
+The scan stage's read bill is O(N * Q * d): every query streams the whole
+corpus. This module maintains a coarse cluster index over each segment's
+POOLED/GLOBAL routing vectors so the engine can score query-vs-centroids
+cheaply, probe the top ``n_probe`` clusters, and scan only their members —
+the read bill drops to O((K + N * n_probe / K) * Q * d).
+
+Two companion arrays per segment (reserved keys owned by
+``repro.retrieval.store``), sized so MEMBERSHIP IS DATA, NOT A SHAPE:
+
+- ``ivf_centroids`` [K, d] f32 — cluster centroids of the routing vectors;
+- ``ivf_members``   [K, C] int32 — per-cluster member SLOT lists, padded
+  with -1. ``C`` is a power of two >= 2 * capacity / K, so the lists hold
+  every slot the segment can ever fill with headroom to spare: an add can
+  always find a cluster with room, and mutation never changes a shape.
+
+Every live slot appears in EXACTLY ONE member list, so probing all K
+clusters recovers the exhaustive candidate set — the engine's
+``n_probe == K`` parity mode is structural, not approximate.
+
+Maintenance keeps the no-retrace contract:
+
+- **clustering** (``cluster_segment``) — a jitted k-means pass:
+  deterministic greedy k-means++ init (farthest-point traversal, the
+  argmax variant of D²-sampling) + a few Lloyd iterations, chunked so the
+  [chunk, K] assignment intermediate is bounded at any corpus size. Runs
+  at ``enable_routing`` time and again whenever drift trips.
+- **add** (``on_commit``) — freshly committed slots are assigned to the
+  nearest centroid WITH ROOM (ranked walk on overflow) and scattered into
+  the member lists by a shape-stable jitted ``.at[].set(mode="drop")``
+  over the same padded bucket family segment deletes use.
+- **delete** — nothing moves: dead members are NEG-masked by
+  ``effective_validity`` at query time, exactly like the exhaustive scan.
+  The drift counter still ticks.
+- **drift** — ``RouteState.drift`` counts mutations since the last
+  clustering; past ``drift_threshold`` (a fraction of the segment's fill)
+  the segment re-clusters AT THE SAME [K, d]/[K, C] SHAPES — a pure data
+  update, invisible to ``layout_key`` and the compiled search fns.
+
+Layering: this module sits between ``store`` (whose key schema owns the
+companion names) and ``segments`` (which calls the hooks below). It never
+imports ``segments`` — the store objects passed in are used through two
+attributes only (``router``, ``_place_replicated``).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.retrieval.store import (CENTROIDS_KEY, MEMBERS_KEY, ROUTING_KEYS,
+                                   VALIDITY_KEY, VectorSchema, rerank_arrays)
+from repro.retrieval.tracing import record_trace
+
+KMEANS_ITERS = 8
+KMEANS_CHUNK = 16384       # bounds the [chunk, K] assignment intermediate
+MIN_DRIFT = 64             # re-cluster at most once per MIN_DRIFT mutations
+ASSIGN_BUCKET_MIN = 8      # same padded-bucket family as segment deletes
+
+
+@dataclass(frozen=True)
+class RoutingPolicy:
+    """Store-side IVF policy (the query-side knob — ``Stage.n_probe`` —
+    lives on the cascade, see ``core.multistage``).
+
+    n_clusters        K, clamped per segment to its capacity
+    cluster_capacity  member-list width C; 0 = auto (power of two >=
+                      2 * capacity / K, so K * C >= 2 * capacity and an
+                      assign-with-room slot always exists)
+    iters             Lloyd iterations after the k-means++ style init
+    drift_threshold   fraction of the segment's high-water fill whose
+                      mutations trigger a re-cluster (drift also has the
+                      absolute floor ``MIN_DRIFT`` so tiny segments don't
+                      re-cluster on every add)
+    """
+    n_clusters: int
+    cluster_capacity: int = 0
+    iters: int = KMEANS_ITERS
+    drift_threshold: float = 0.5
+
+
+@dataclass
+class RouteState:
+    """Host-side per-segment cluster bookkeeping (the device arrays live
+    in the segment's vectors dict under the reserved routing keys)."""
+    fills: np.ndarray          # [K] occupied member-list entries
+    drift: int = 0             # mutations since the last clustering
+
+
+def segment_clusters(policy: RoutingPolicy, capacity: int) -> int:
+    return max(1, min(int(policy.n_clusters), capacity))
+
+
+def member_width(policy: RoutingPolicy, capacity: int, k: int) -> int:
+    """Member-list width C: a power of two with K * C >= 4 * capacity.
+
+    Occupied member entries never exceed the high-water fill (slots are
+    assigned once per life; deletes leave them in place until the next
+    re-cluster), so any headroom >= 1x guarantees the ranked
+    assign-with-room walk terminates. The default is 4x the MEAN fill
+    because k-means cluster sizes are heavy-tailed on real clustered
+    data: at 2x, a dense cluster saturates its list and the overflow
+    spills into the emptiest (= least query-relevant) cluster, silently
+    costing recall at low n_probe. 4x keeps the members array tiny
+    relative to the vectors it indexes (int32 slot ids vs [D, d] token
+    blocks) while making spill a pathological-input event, not a
+    steady-state one."""
+    if policy.cluster_capacity:
+        c = int(policy.cluster_capacity)
+        if k * c < capacity:
+            raise ValueError(
+                f"cluster_capacity {c} too small: {k} clusters x {c} < "
+                f"segment capacity {capacity}")
+        return c
+    target = max(1, -(-4 * capacity // k))
+    return 1 << (target - 1).bit_length()
+
+
+def _source_record(schema: VectorSchema):
+    """The named vector routing clusters over: ``global_pooling`` when
+    present, else any single-vector name, else the pooled multi-vector
+    (``mean_pooling`` preferred) reduced to its masked token mean."""
+    singles = sorted((nv for nv in schema if nv.role == "single"),
+                     key=lambda nv: (nv.name != "global_pooling", nv.name))
+    if singles:
+        return singles[0]
+    multis = sorted(schema,
+                    key=lambda nv: (nv.name != "mean_pooling", nv.name))
+    if not multis:
+        raise ValueError("store has no named vectors to route over")
+    return multis[0]
+
+
+def routing_dim(vectors: dict) -> int:
+    """Embedding dim of the routing source (sizes fresh centroid arrays
+    before any data exists)."""
+    return _source_record(VectorSchema.infer(vectors)).vec_dim
+
+
+def routing_source(vectors: dict) -> jax.Array:
+    """[N, d] f32 routing vectors for every row of ``vectors`` (dead rows
+    included — callers weight them out). Single-vector sources are used
+    as-is (dequantised when the float copy was dropped); multi-vector
+    sources reduce to their masked token mean."""
+    nv = _source_record(VectorSchema.infer(vectors))
+    vecs, mask, scales = rerank_arrays(vectors, nv.name)
+    v = vecs.astype(jnp.float32)
+    if scales is not None:
+        v = v * scales[..., None].astype(jnp.float32)
+    if nv.role == "single":
+        return v
+    if mask is None:
+        return jnp.mean(v, axis=1)
+    m = mask.astype(jnp.float32)
+    return (jnp.sum(v * m[..., None], axis=1)
+            / jnp.maximum(jnp.sum(m, axis=1), 1.0)[..., None])
+
+
+# ---------------------------------------------------------------------------
+# jitted k-means (shape-stable: one trace per (capacity, d, K, iters))
+# ---------------------------------------------------------------------------
+
+def _nearest(x: jax.Array, cents: jax.Array,
+             chunk: int = KMEANS_CHUNK) -> jax.Array:
+    """[N] int32 nearest centroid by L2 (||x||² dropped — it is constant
+    per row under the argmin). Chunked via ``lax.map`` so the [chunk, K]
+    distance block, not [N, K], is the live intermediate."""
+    n = x.shape[0]
+    c2 = jnp.sum(cents * cents, axis=-1)[None, :]
+
+    def blk(xb):
+        d2 = c2 - 2.0 * (xb @ cents.T)
+        return jnp.argmin(d2, axis=1).astype(jnp.int32)
+
+    if chunk <= 0 or chunk >= n:
+        return blk(x)
+    pad = (-n) % chunk
+    xp = jnp.pad(x, ((0, pad), (0, 0)))
+    out = jax.lax.map(blk, xp.reshape(-1, chunk, x.shape[1]))
+    return out.reshape(-1)[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters"))
+def _kmeans(x: jax.Array, w: jax.Array, k: int, iters: int) -> jax.Array:
+    """x [N, d] f32, w [N] f32 row weights (0 = dead slot) -> [K, d] f32.
+
+    Init is the deterministic greedy form of k-means++: start from the
+    first live row, then repeatedly take the live row farthest (weighted
+    min-distance) from the chosen set — argmax where D²-sampling would
+    draw. Lloyd then refines; empty clusters keep their centroid."""
+    record_trace()
+    first = jnp.argmax(w)                     # first live row
+    c0 = x[first]
+    cents = jnp.zeros((k, x.shape[1]), jnp.float32).at[0].set(c0)
+    d2 = jnp.sum((x - c0[None, :]) ** 2, axis=-1) * w
+
+    def init_step(i, state):
+        cents, d2 = state
+        c = x[jnp.argmax(d2)]
+        return (cents.at[i].set(c),
+                jnp.minimum(d2, jnp.sum((x - c[None, :]) ** 2, -1) * w))
+
+    cents, _ = jax.lax.fori_loop(1, k, init_step, (cents, d2))
+
+    def lloyd(_, cents):
+        a = _nearest(x, cents)
+        sums = jax.ops.segment_sum(x * w[:, None], a, num_segments=k)
+        cnt = jax.ops.segment_sum(w, a, num_segments=k)
+        new = sums / jnp.maximum(cnt, 1.0)[:, None]
+        return jnp.where(cnt[:, None] > 0, new, cents)
+
+    return jax.lax.fori_loop(0, iters, lloyd, cents)
+
+
+@jax.jit
+def _assign_jit(x: jax.Array, cents: jax.Array) -> jax.Array:
+    record_trace()
+    return _nearest(x, cents)
+
+
+@jax.jit
+def _rank_jit(x: jax.Array, cents: jax.Array) -> jax.Array:
+    """[m, K] cluster ids by ascending distance — the assign-with-room
+    walk's fallback order when the nearest cluster's list is full."""
+    record_trace()
+    d2 = jnp.sum(cents * cents, -1)[None, :] - 2.0 * (x @ cents.T)
+    return jnp.argsort(d2, axis=1).astype(jnp.int32)
+
+
+@jax.jit
+def _scatter_members(members: jax.Array, cids: jax.Array, pos: jax.Array,
+                     slots: jax.Array) -> jax.Array:
+    record_trace()
+    # padding entries carry cid == K (out of bounds) and are dropped —
+    # one trace serves every batch size in the bucket
+    return members.at[cids, pos].set(slots, mode="drop")
+
+
+# ---------------------------------------------------------------------------
+# clustering + host-side member packing
+# ---------------------------------------------------------------------------
+
+def _pack_members(assign: np.ndarray, live: np.ndarray, k: int,
+                  c: int) -> tuple:
+    """Assignment [N] + liveness [N] -> (-1-padded members [K, C] int32,
+    fills [K]). Vectorised: rows sort by cluster, position = rank within
+    the cluster; the rare overflow rows (a cluster k-means filled past C)
+    spill to the emptiest list."""
+    members = np.full((k, c), -1, np.int32)
+    rows = np.flatnonzero(live)
+    if rows.size == 0:
+        return members, np.zeros((k,), np.int64)
+    a = assign[rows]
+    order = np.argsort(a, kind="stable")
+    rows, a = rows[order], a[order]
+    starts = np.searchsorted(a, np.arange(k))
+    pos = np.arange(rows.size) - starts[a]
+    fit = pos < c
+    members[a[fit], pos[fit]] = rows[fit]
+    fills = np.bincount(a[fit], minlength=k).astype(np.int64)
+    for s in rows[~fit]:
+        cid = int(np.argmin(fills))
+        members[cid, fills[cid]] = s
+        fills[cid] += 1
+    return members, fills
+
+
+def cluster_segment(vectors: dict, policy: RoutingPolicy,
+                    capacity: int) -> tuple:
+    """Full (re-)cluster of one segment: (centroids [K, d] f32, members
+    [K, C] int32, fills [K]). Shapes depend only on (policy, capacity,
+    routing dim) — re-clustering an existing segment is a pure data
+    update."""
+    k = segment_clusters(policy, capacity)
+    c = member_width(policy, capacity, k)
+    x = routing_source(vectors)
+    w = vectors[VALIDITY_KEY].astype(jnp.float32)
+    cents = _kmeans(x, w, k, int(policy.iters))
+    assign = np.asarray(_assign_jit(x, cents))
+    live = np.asarray(vectors[VALIDITY_KEY])
+    members, fills = _pack_members(assign, live, k, c)
+    return cents, jnp.asarray(members), fills
+
+
+def alloc_arrays(policy: RoutingPolicy, like_vectors: dict,
+                 capacity: int) -> tuple:
+    """Zero-state routing arrays for a FRESH segment: all-zero centroids
+    (early adds land via the ranked with-room walk, spreading over the
+    lists) and empty member lists. The drift counter then schedules the
+    first real clustering once enough rows exist."""
+    k = segment_clusters(policy, capacity)
+    c = member_width(policy, capacity, k)
+    d = routing_dim(like_vectors)
+    return ({CENTROIDS_KEY: jnp.zeros((k, d), jnp.float32),
+             MEMBERS_KEY: jnp.full((k, c), -1, jnp.int32)},
+            RouteState(fills=np.zeros((k,), np.int64)))
+
+
+# ---------------------------------------------------------------------------
+# maintenance hooks (called by SegmentedStore)
+# ---------------------------------------------------------------------------
+
+def recluster(store, seg) -> None:
+    """Re-cluster one segment in place (same shapes — data, not layout)."""
+    cents, members, fills = cluster_segment(seg.vectors, store.router,
+                                            seg.capacity)
+    seg.vectors[CENTROIDS_KEY] = store._place_replicated(cents)
+    seg.vectors[MEMBERS_KEY] = store._place_replicated(members)
+    seg.routing = RouteState(fills=fills)
+
+
+def maybe_recluster(store, seg) -> bool:
+    """Re-cluster when accumulated drift passes the policy threshold."""
+    st = seg.routing
+    if st is None or store.router is None:
+        return False
+    limit = max(MIN_DRIFT,
+                int(store.router.drift_threshold * max(seg.n_docs, 1)))
+    if st.drift < limit:
+        return False
+    recluster(store, seg)
+    return True
+
+
+def on_commit(store, seg, slots: np.ndarray) -> None:
+    """Assign freshly committed tail slots to their nearest cluster with
+    room and scatter them into the member lists. Steady-state cost: two
+    small jitted dispatches (rank + scatter) per commit, shape-keyed on
+    the same power-of-two bucket family as deletes — zero retraces once
+    warm."""
+    st = seg.routing
+    m = int(slots.size)
+    if st is None or m == 0:
+        return
+    k = st.fills.shape[0]
+    c = seg.vectors[MEMBERS_KEY].shape[1]
+    width = max(ASSIGN_BUCKET_MIN, 1 << max(0, int(m - 1).bit_length()))
+    padded = np.zeros((width,), np.int32)
+    padded[:m] = slots
+    pad_dev = jnp.asarray(padded)
+    # routing source of just the new rows: gather the padded row bucket
+    # from every per-doc array, then reduce — O(width), not O(capacity)
+    sub = {kk: jnp.take(v, pad_dev, axis=0)
+           for kk, v in seg.vectors.items()
+           if kk not in ROUTING_KEYS and v.ndim >= 1
+           and v.shape[0] == seg.capacity}
+    ranked = np.asarray(_rank_jit(routing_source(sub),
+                                  seg.vectors[CENTROIDS_KEY]))
+    cids = np.full((width,), k, np.int32)      # OOB sentinel: dropped
+    pos = np.zeros((width,), np.int32)
+    for i in range(m):
+        for cid in ranked[i]:
+            if st.fills[cid] < c:
+                cids[i] = cid
+                pos[i] = st.fills[cid]
+                st.fills[cid] += 1
+                break
+        else:                                  # K * C >= 2 * capacity
+            raise AssertionError("no cluster with room — invariant broken")
+    seg.vectors[MEMBERS_KEY] = store._place_replicated(_scatter_members(
+        seg.vectors[MEMBERS_KEY], jnp.asarray(cids), jnp.asarray(pos),
+        pad_dev))
+    st.drift += m
+    maybe_recluster(store, seg)
+
+
+def on_delete(store, seg, n_deleted: int) -> None:
+    """Deletes move no data (``effective_validity`` NEGs dead members at
+    query time, exactly like the exhaustive scan) — only drift ticks."""
+    if seg.routing is None or n_deleted <= 0:
+        return
+    seg.routing.drift += int(n_deleted)
+    maybe_recluster(store, seg)

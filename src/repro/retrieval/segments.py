@@ -62,8 +62,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.retrieval.store import (FILTER_KEY, TENANT_KEY, VALIDITY_KEY,
-                                   VectorSchema, VectorStore,
+from repro.retrieval import routing as RT
+from repro.retrieval.store import (FILTER_KEY, ROUTING_KEYS, TENANT_KEY,
+                                   VALIDITY_KEY, VectorSchema, VectorStore,
                                    is_store_companion, pack_tags)
 from repro.retrieval.tracing import record_trace
 
@@ -115,6 +116,11 @@ class Segment:
     capacity: int
     n_docs: int
     doc_ids: np.ndarray
+    # host-side IVF bookkeeping (``repro.retrieval.routing.RouteState``);
+    # None until the store's router is enabled. The device-side centroid /
+    # member arrays live in ``vectors`` under the reserved routing keys so
+    # they thread through layout_key / placement like everything else.
+    routing: object = None
 
     @property
     def free(self) -> int:
@@ -139,6 +145,10 @@ class SegmentedStore:
         # width of the packed tag bitset (32 tags per word); part of the
         # layout, so it is fixed at store construction
         self.filter_words = max(int(filter_words), 1)
+        # IVF routing policy (``routing.RoutingPolicy``); None = exhaustive
+        # scans only. Set via ``enable_routing`` — it changes layout_key
+        # (two new companion arrays), so compiled search fns rebuild once.
+        self.router = None
         self._slot_ids: np.ndarray | None = None   # slot->page-id cache
         # bumped on every content mutation (upsert/delete/compact) so
         # result caches keyed on it can never serve pre-mutation answers
@@ -194,16 +204,27 @@ class SegmentedStore:
 
     def place_on(self, mesh) -> None:
         """Lay every segment array out with ``mesh``'s doc-sharded layout
-        (done once at placement, never per search call)."""
+        (done once at placement, never per search call). The IVF routing
+        companions replicate instead: every shard routes the same query
+        through the same centroids/member lists, then scores only the
+        member slots it owns."""
         self.mesh = mesh
         for seg in self.segments:
-            seg.vectors = {k: self._place(v) for k, v in seg.vectors.items()}
+            seg.vectors = {
+                k: (self._place_replicated(v) if k in ROUTING_KEYS
+                    else self._place(v))
+                for k, v in seg.vectors.items()}
 
     def _place(self, arr: jax.Array) -> jax.Array:
         if self.mesh is None:
             return arr
         spec = P(tuple(self.mesh.axis_names))
         return jax.device_put(arr, NamedSharding(self.mesh, spec))
+
+    def _place_replicated(self, arr: jax.Array) -> jax.Array:
+        if self.mesh is None:
+            return arr
+        return jax.device_put(arr, NamedSharding(self.mesh, P()))
 
     def _alloc_segment(self, like_vectors: dict, capacity: int) -> Segment:
         vecs = {}
@@ -219,8 +240,30 @@ class SegmentedStore:
         vecs[FILTER_KEY] = self._place(
             jnp.zeros((capacity, self.filter_words), jnp.uint32))
         seg = Segment(vecs, capacity, 0, np.full((capacity,), -1, np.int64))
+        if self.router is not None:
+            arrays, state = RT.alloc_arrays(self.router, like_vectors,
+                                            capacity)
+            for k, v in arrays.items():
+                seg.vectors[k] = self._place_replicated(v)
+            seg.routing = state
         self.segments.append(seg)
         return seg
+
+    def enable_routing(self, policy) -> None:
+        """Build (or rebuild) the IVF cluster index over every segment.
+
+        ``policy`` is a ``routing.RoutingPolicy`` or a plain int K. Adds
+        the centroid/member companion arrays — a one-time layout change —
+        then ``add_pages``/``ingest``/``delete`` maintain them
+        incrementally (assign-to-nearest on commit, drift-triggered
+        re-clustering) with zero steady-state retraces. Query-side, opt a
+        cascade in with ``Stage.n_probe`` (``multistage
+        .with_routing_policy``)."""
+        if not isinstance(policy, RT.RoutingPolicy):
+            policy = RT.RoutingPolicy(n_clusters=int(policy))
+        self.router = policy
+        for seg in self.segments:
+            RT.recluster(self, seg)
 
     # ------------------------------------------------------------------
     # mutation
@@ -263,6 +306,9 @@ class SegmentedStore:
         self.next_id += n
         self._slot_ids = None
         self.generation += 1
+        if self.router is not None:
+            RT.on_commit(self, seg,
+                         np.arange(start, start + n, dtype=np.int64))
         return ids
 
     def add_pages(self, batch: VectorStore, tenant: int = 0,
@@ -327,6 +373,8 @@ class SegmentedStore:
                 seg.vectors[VALIDITY_KEY], jnp.asarray(padded))
             seg.doc_ids[slots] = -1
             deleted += int(slots.size)
+            if self.router is not None:
+                RT.on_delete(self, seg, int(slots.size))
         if deleted:
             self._slot_ids = None
             self.generation += 1
@@ -341,8 +389,12 @@ class SegmentedStore:
             return self
         # doc_tenant / doc_filter ride the gather loop like any data array
         # (each survivor keeps its tenancy and tags); doc_valid is the one
-        # companion rebuilt from scratch — every survivor is live
-        names = [k for k in self.segments[0].vectors if k != VALIDITY_KEY]
+        # companion rebuilt from scratch — every survivor is live. The IVF
+        # routing companions are per-CLUSTER, not per-doc: compaction
+        # renumbers every slot, so they are rebuilt by a fresh clustering
+        # below instead of riding the gather
+        names = [k for k in self.segments[0].vectors
+                 if k != VALIDITY_KEY and k not in ROUTING_KEYS]
         like = {k: self.segments[0].vectors[k] for k in names}
         rows = {k: [] for k in names}
         ids = []
@@ -368,6 +420,8 @@ class SegmentedStore:
                 seg.vectors[VALIDITY_KEY], jnp.ones((total,), bool), s32)
             seg.doc_ids[:total] = np.concatenate(ids)
         seg.n_docs = total
+        if self.router is not None:
+            RT.recluster(self, seg)
         self._slot_ids = None
         self.generation += 1
         return self

@@ -58,7 +58,17 @@ from repro.kernels.maxsim.ops import quantize_int8
 VALIDITY_KEY = "doc_valid"           # [N] bool, per-document liveness
 TENANT_KEY = "doc_tenant"            # [N] int32, owning tenant id
 FILTER_KEY = "doc_filter"            # [N, W] uint32, packed tag bitset
-STORE_COMPANIONS = (VALIDITY_KEY, TENANT_KEY, FILTER_KEY)
+# IVF routing companions (repro.retrieval.routing): per-CLUSTER arrays, not
+# per-document — centroids of the segment's routing vectors plus the padded
+# member-slot lists that make cluster membership DATA rather than a shape.
+# They are store companions (segment-owned, never part of a batch payload)
+# but, unlike the doc triple, they replicate across shards instead of
+# sharding along docs: every shard routes the same query through the same
+# centroids and then scores only the member slots it owns.
+CENTROIDS_KEY = "ivf_centroids"      # [K, d] f32, cluster centroids
+MEMBERS_KEY = "ivf_members"          # [K, C] int32 member slots, -1 padded
+ROUTING_KEYS = (CENTROIDS_KEY, MEMBERS_KEY)
+STORE_COMPANIONS = (VALIDITY_KEY, TENANT_KEY, FILTER_KEY) + ROUTING_KEYS
 TAGS_PER_WORD = 32
 _MASK, _INT8, _SCALE = "_mask", "_int8", "_scale"
 
@@ -252,6 +262,18 @@ def filter_words(vectors: dict) -> int:
     """The store's packed tag-bitset width W (0 = no filter metadata)."""
     f = vectors.get(FILTER_KEY)
     return 0 if f is None else f.shape[1]
+
+
+def routing_arrays(vectors: dict):
+    """The IVF routing companions ``(centroids [K, d] f32, members [K, C]
+    int32)``, or None when the store carries no cluster index (exhaustive
+    scan only). Member lists are -1-padded; a slot id appears in exactly
+    one list, so probing all K clusters recovers the exhaustive candidate
+    set (the ``n_probe == K`` parity mode)."""
+    c = vectors.get(CENTROIDS_KEY)
+    if c is None:
+        return None
+    return c, vectors[MEMBERS_KEY]
 
 
 # ---------------------------------------------------------------------------

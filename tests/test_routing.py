@@ -1,0 +1,320 @@
+"""IVF centroid routing: sublinear candidate generation contracts.
+
+What must hold (and is asserted here):
+
+- **Partition invariant** — every live slot of a routed segment appears
+  in EXACTLY one member list; deletes leave members in place (masked at
+  query time via ``effective_validity``), compaction rebuilds the lists
+  from a fresh clustering over the survivors.
+- **Oracle parity** — a routed scan stage with ``n_probe == n_clusters``
+  is the exhaustive scan, BITWISE (scores and translated ids), not an
+  approximation of it: every live slot sits in exactly one member list,
+  dead/padding candidates score exactly ``NEG`` both ways, and the
+  Retriever masks NEG-scored filler ids identically. The hypothesis
+  property drives this through arbitrary upsert/delete/compact
+  sequences; the composition test adds tenant/tag filtering on top; the
+  subprocess test replays it on a real 4-shard mesh.
+- **No retrace axis** — routing membership is data, not shape: a warmed
+  upsert + routed-search + delete loop dispatches cached executables
+  only.
+- **Cost model** — ``qps_cost_model`` / ``cascade_hbm_bytes`` bill the
+  routed stage at the centroid GEMM plus the expected probed members,
+  so the bill stops scaling with N at fixed ``N * n_probe / K``.
+
+Single-vector routed stages are allclose-level only (a gathered per-row
+matvec is not bitwise a full GEMM), so every bitwise assertion here uses
+a multi-vector (``mean_pooling``) stage.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import multistage as MST
+from repro.retrieval import routing as RT
+from repro.retrieval import tracing
+from repro.retrieval.retriever import Retriever
+from repro.retrieval.store import (CENTROIDS_KEY, MEMBERS_KEY, FilterSpec,
+                                   VectorStore)
+
+D, DIM = 3, 8
+TOPK = 6
+EX = (MST.Stage("mean_pooling", TOPK),)
+
+
+def batch(n, seed=0):
+    r = np.random.default_rng(seed)
+    return VectorStore({
+        "mean_pooling": jnp.asarray(
+            r.normal(size=(n, D, DIM)).astype(np.float32)),
+        "global_pooling": jnp.asarray(
+            r.normal(size=(n, DIM)).astype(np.float32)),
+    }, n, "float32")
+
+
+def queries(seed=9, b=2, q=4):
+    return jnp.asarray(np.random.default_rng(seed).normal(
+        size=(b, q, DIM)).astype(np.float32))
+
+
+def routed(k_c, n_probe=None):
+    return MST.with_routing_policy(
+        EX, n_probe=k_c if n_probe is None else n_probe, n_clusters=k_c)
+
+
+def live_members(r):
+    m = np.asarray(r.store.segments[0].vectors[MEMBERS_KEY]).ravel()
+    return sorted(int(s) for s in m if s >= 0)
+
+
+def assert_parity(r, q, k_c, filter=None):
+    s0, i0 = r.search(q, stages=EX, filter=filter)
+    s1, i1 = r.search(q, stages=routed(k_c), filter=filter)
+    np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+    np.testing.assert_array_equal(i0, i1)
+    return s0, i0
+
+
+# ----------------------------------------------------------------------
+# membership + clustering units
+# ----------------------------------------------------------------------
+
+def test_member_lists_partition_live_slots():
+    r = Retriever(batch(40), capacity=64, routing=4)
+    assert live_members(r) == list(range(40))
+    ids = r.upsert(batch(10, seed=1))
+    # every occupied slot exactly once — fresh commits included
+    assert live_members(r) == list(range(50))
+    r.delete(ids[:4])
+    # deletes move no member data: the lists still carry the dead slots
+    # (validity masking NEGs them at query time)
+    assert live_members(r) == list(range(50))
+    r.compact()
+    # compaction re-clusters the survivors from scratch
+    assert live_members(r) == list(range(46))
+
+
+def test_member_width_headroom():
+    pol = RT.RoutingPolicy(n_clusters=4)
+    c = RT.member_width(pol, 64, 4)
+    assert c & (c - 1) == 0 and 4 * c >= 4 * 64
+    # explicit cluster_capacity wins, but must still cover the segment
+    assert RT.member_width(RT.RoutingPolicy(4, cluster_capacity=32),
+                           64, 4) == 32
+    with pytest.raises(ValueError):
+        RT.member_width(RT.RoutingPolicy(4, cluster_capacity=8), 64, 4)
+
+
+def test_kmeans_separated_clusters_route_with_one_probe():
+    # 4 well-separated generator centers; with n_probe=1 the routed scan
+    # reads ONE cluster yet matches the exhaustive top-k — k-means must
+    # have recovered the mixture for that to hold
+    rng = np.random.default_rng(3)
+    centers = 8.0 * np.eye(4, DIM, dtype=np.float32)
+    g = np.repeat(np.arange(4), 16)
+    toks = (centers[g][:, None, :]
+            + 0.1 * rng.normal(size=(64, D, DIM))).astype(np.float32)
+    r = Retriever(VectorStore(
+        {"mean_pooling": jnp.asarray(toks)}, 64, "float32"), routing=4)
+    q = jnp.asarray((centers[:2][:, None, :] + 0.1 * rng.normal(
+        size=(2, 4, DIM))).astype(np.float32))
+    s0, i0 = r.search(q, stages=EX)
+    s1, i1 = r.search(q, stages=routed(4, n_probe=1))
+    np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+    np.testing.assert_array_equal(i0, i1)
+
+
+def test_routed_stage_without_routing_companions_raises():
+    r = Retriever(batch(16))
+    with pytest.raises(ValueError, match="no routing companions"):
+        r.search(queries(), stages=routed(4))
+
+
+# ----------------------------------------------------------------------
+# oracle parity under mutation (the structural contract)
+# ----------------------------------------------------------------------
+
+def _mutation_sequence_parity(ops, qseed):
+    """Apply an upsert/delete/compact sequence, asserting full-probe
+    bitwise parity after every step."""
+    r = Retriever(batch(12, seed=qseed), capacity=64, routing=4)
+    q = queries(seed=qseed)
+    alive = list(r.store.translate_slots(np.arange(12, dtype=np.int64)))
+    for kind, arg in ops:
+        if kind == "upsert" and r.store.segments[0].free >= 8:
+            alive += list(r.upsert(batch(1 + arg % 4, seed=arg)))
+        elif kind == "delete" and alive:
+            r.delete([int(alive.pop(arg % len(alive)))])
+        elif kind == "compact":
+            r.compact()
+        assert_parity(r, q, 4)
+
+
+def test_routed_parity_mutation_sequences_deterministic():
+    # always-on floor under the hypothesis property below: the
+    # representative orderings (mutate-then-compact, compact-then-grow,
+    # interleaved churn) run even where hypothesis isn't installed
+    for ops, qseed in (
+        ([("upsert", 3), ("delete", 1), ("compact", 0)], 0),
+        ([("compact", 0), ("upsert", 5), ("upsert", 2), ("delete", 0)], 1),
+        ([("delete", 2), ("upsert", 1), ("delete", 0), ("compact", 0),
+          ("upsert", 6)], 2),
+    ):
+        _mutation_sequence_parity(ops, qseed)
+
+
+def test_routed_full_probe_parity_under_mutation():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    op = st.tuples(st.sampled_from(["upsert", "delete", "compact"]),
+                   st.integers(0, 7))
+
+    @settings(deadline=None, max_examples=15)
+    @given(st.lists(op, max_size=5), st.integers(0, 3))
+    def run(ops, qseed):
+        _mutation_sequence_parity(ops, qseed)
+
+    run()
+
+
+def test_filtered_routed_composition():
+    r = Retriever(batch(24), capacity=64, routing=4)
+    ids_a = r.upsert(batch(10, seed=1), tenant=1, tags=(2,))
+    ids_b = r.upsert(batch(8, seed=2), tenant=2)
+    r.delete(ids_a[:3])
+    q = queries()
+    for spec in (FilterSpec(tenant=1), FilterSpec(tenant=2),
+                 FilterSpec(tenant=1, any_tags=(2,)), None):
+        _, ids = assert_parity(r, q, 4, filter=spec)
+        if spec is not None and spec.tenant == 2:
+            hits = set(int(i) for i in np.asarray(ids).ravel()) - {-1}
+            assert hits, "tenant-2 filter returned nothing"
+            assert hits <= set(int(i) for i in ids_b), \
+                "routed + filtered search leaked another tenant's pages"
+
+
+def test_zero_steady_state_retraces_with_routing():
+    r = Retriever(batch(32), capacity=256, routing=4)
+    q = queries()
+    st_r = routed(4, n_probe=2)
+    # warm one full mutate + routed-search cycle (bucket compiles land
+    # here), keeping capacity headroom so the loop never splits a segment
+    ids = r.upsert(batch(4, seed=50))
+    r.search(q, stages=st_r)
+    r.delete([int(ids[0])])
+    before = tracing.trace_count()
+    for k in range(4):
+        ids = r.upsert(batch(4, seed=60 + k))
+        r.search(q, stages=st_r)
+        r.delete([int(ids[1])])
+    assert tracing.trace_count() == before, \
+        "steady-state mutation + routed search retraced"
+
+
+# ----------------------------------------------------------------------
+# cost model (routed branch)
+# ----------------------------------------------------------------------
+
+def test_routed_cost_model_sublinear():
+    dims = {"mean_pooling": D}
+    n, k_c = 100_000, 128
+    ex = (MST.Stage("mean_pooling", 10),)
+    rt = MST.with_routing_policy(ex, n_probe=8, n_clusters=k_c)
+    full = MST.with_routing_policy(ex, n_probe=k_c, n_clusters=k_c)
+    assert MST.qps_cost_model(n, 4, DIM, rt, dims) < \
+        MST.qps_cost_model(n, 4, DIM, ex, dims) / 4
+    # every cluster probed bills (at least) the exhaustive madds: all N
+    # members plus the centroid GEMM
+    assert MST.qps_cost_model(n, 4, DIM, full, dims) >= \
+        MST.qps_cost_model(n, 4, DIM, ex, dims)
+    b_ex = MST.cascade_hbm_bytes(n, 4, DIM, ex, dims)
+    b_rt = MST.cascade_hbm_bytes(n, 4, DIM, rt, dims)
+    assert b_rt["stages"][0]["kind"] == "routed-scan"
+    assert b_rt["total_bytes"] < b_ex["total_bytes"]
+    # the read bill stops scaling with N at fixed n_probe / K
+    b_rt2 = MST.cascade_hbm_bytes(2 * n, 4, DIM, rt, dims)
+    assert b_rt2["stages"][0]["read_bytes"] < \
+        2.5 * b_rt["stages"][0]["read_bytes"]
+
+
+# ----------------------------------------------------------------------
+# sharded routed parity (real 4-shard mesh => subprocess)
+# ----------------------------------------------------------------------
+
+ROUTING_SHARD_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    os.environ["JAX_PLATFORMS"] = "cpu"
+    import numpy as np, jax.numpy as jnp
+    from repro.core import multistage as MST
+    from repro.launch.mesh import make_mesh
+    from repro.retrieval import tracing
+    from repro.retrieval.retriever import Retriever
+    from repro.retrieval.store import FilterSpec, VectorStore
+
+    D, DIM, TOPK = 3, 8, 6
+    def batch(n, seed):
+        r = np.random.default_rng(seed)
+        return VectorStore({
+            "mean_pooling": jnp.asarray(
+                r.normal(size=(n, D, DIM)).astype(np.float32)),
+        }, n, "float32")
+
+    q = jnp.asarray(np.random.default_rng(9).normal(
+        size=(2, 4, DIM)).astype(np.float32))
+    ex = (MST.Stage("mean_pooling", TOPK),)
+    rt = MST.with_routing_policy(ex, n_probe=4, n_clusters=4)
+    mesh = make_mesh((4,), ("data",))
+
+    r = Retriever(batch(30, 0), mesh=mesh, capacity=64, routing=4)
+    r.upsert(batch(9, 1), tenant=1)
+    r.delete([2, 17, 31])
+
+    # sharded routed (full probe) == sharded exhaustive, bitwise: the
+    # routing companions are REPLICATED, every shard selects the same
+    # candidate rows, scores only its owned slots, and the merge sees
+    # the same (score, id) set as the exhaustive shard-local scan
+    for spec in (None, FilterSpec(tenant=1)):
+        s0, i0 = r.search(q, stages=ex, filter=spec)
+        s1, i1 = r.search(q, stages=rt, filter=spec)
+        np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+        np.testing.assert_array_equal(i0, i1)
+
+    # single-device oracle parity: same corpus, no mesh
+    r1 = Retriever(batch(30, 0), capacity=64, routing=4)
+    r1.upsert(batch(9, 1), tenant=1)
+    r1.delete([2, 17, 31])
+    s0, i0 = r1.search(q, stages=rt)
+    s1, i1 = r.search(q, stages=rt)
+    np.testing.assert_allclose(np.asarray(s0), np.asarray(s1),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(i0, i1)
+
+    # routed mutation + search on the mesh is retrace-free once warm
+    ids = r.upsert(batch(4, 2)); r.search(q, stages=rt)
+    r.delete([int(ids[0])])
+    before = tracing.trace_count()
+    ids = r.upsert(batch(4, 3)); r.search(q, stages=rt)
+    r.delete([int(ids[0])])
+    assert tracing.trace_count() == before, "sharded routing retraced"
+    print("ROUTING_SHARD_OK")
+""")
+
+
+def test_routed_multi_shard_parity_subprocess():
+    """Routed full-probe parity + oracle agreement on a real 4-shard mesh
+    (fake CPU devices must exist before jax init => subprocess)."""
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", ROUTING_SHARD_SCRIPT],
+                         env=env, capture_output=True, text=True,
+                         timeout=500)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "ROUTING_SHARD_OK" in out.stdout
