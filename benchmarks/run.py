@@ -1145,7 +1145,14 @@ def main() -> None:
                  "kernel_vs_ref_scan", "rerank_kernel_vs_ref",
                  "routed_scan", "dynamic_corpus", "serving_tail_latency",
                  "mixed_tenant_tail_latency", "ingest_throughput"]
+    from repro.kernels import dispatch as DSP
     for name in names:
+        # dispatch counters are per-process; without a reset a counter
+        # bumped by one benchmark could satisfy a later --suite run's
+        # observed-routing gate (per-benchmark deltas stay correct, and
+        # absolute reads like routed_scan's route_dispatches become
+        # clean per-run counts)
+        DSP.reset_counts()
         fn = globals()[name]
         if args.quick and "quick" in inspect.signature(fn).parameters:
             fn(table, quick=True)

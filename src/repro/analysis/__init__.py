@@ -1,0 +1,94 @@
+"""Static contract auditor: compiler-grade enforcement of the serving
+contracts that benchmarks and CI gates only check dynamically.
+
+The serving stack rests on three hard contracts:
+
+- **zero steady-state retraces** — every serving/ingest/mutation jit body
+  calls ``repro.retrieval.tracing.record_trace()`` so the runtime counter
+  can observe retraces;
+- **observed kernel routing** — every kernel ops wrapper calls
+  ``repro.kernels.dispatch.record(name, impl)`` inside its traced body so
+  the CI routing gates diff real trace-time dispatches;
+- **int8/HBM memory discipline** — the quantised corpus is never shadowed
+  by an eager full-corpus f32 copy, and scan intermediates stay chunked.
+
+Dynamic checks can be silently skipped or simply never exercise a new
+code path. This package enforces the same contracts statically, in two
+layers:
+
+- ``astlint`` + ``rules`` — repo-specific AST rules (R1–R5) over
+  ``src/repro/``: call-graph reachability from jit sites, dispatch-record
+  coverage, host-sync idioms in traced scope, stringly vector-key suffix
+  leaks, module-level eager ``jnp`` computation.
+- ``jaxpr_audit`` — traces the actual built cascade/ingest executables
+  for representative quick configs and walks the jaxprs: int8→f32
+  full-corpus upcasts (J1), max-live-intermediate bytes budget (J2),
+  host callbacks/transfers (J3), weak-type scalar retrace axes (J4).
+
+Findings are stable fingerprints gated against ``baseline.json`` (an
+explicit allowlist — empty for ``src/repro/`` by construction). CLI::
+
+    PYTHONPATH=src python -m repro.analysis --check
+
+Inline exemptions: a ``# audit: allow-R3 <reason>`` comment on the
+finding's line (or the line above) suppresses that rule there. Use it
+only for sanctioned exceptions (e.g. ``block_until_ready`` inside a
+dispatch availability probe) — the reason is part of the code review
+surface.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from pathlib import Path
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One contract violation.
+
+    ``fingerprint`` is the gate identity: rule + path + a stable symbol
+    anchor (qualname / literal / primitive), NOT the line number — so a
+    baseline entry survives unrelated edits to the file.
+    """
+    rule: str      # "R1".."R5" (AST) or "J1".."J4" (jaxpr)
+    path: str      # repo-relative path, or "<jaxpr:scenario>" pseudo-path
+    line: int      # 1-based; 0 when the anchor is not a source line
+    symbol: str    # stable anchor within (rule, path)
+    message: str
+
+    @property
+    def fingerprint(self) -> str:
+        return f"{self.rule}:{self.path}:{self.symbol}"
+
+    def to_json(self) -> dict:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "symbol": self.symbol, "message": self.message,
+                "fingerprint": self.fingerprint}
+
+
+def dedupe(findings: list) -> list:
+    seen, out = set(), []
+    for f in findings:
+        key = (f.fingerprint, f.line)
+        if key not in seen:
+            seen.add(key)
+            out.append(f)
+    return out
+
+
+def load_baseline(path: Path | str) -> set:
+    """The allowlist: a JSON file ``{"allow": [fingerprint, ...]}``."""
+    p = Path(path)
+    if not p.exists():
+        return set()
+    data = json.loads(p.read_text())
+    return set(data.get("allow", []))
+
+
+def apply_baseline(findings: list, allow: set) -> tuple:
+    """Split findings into (gated, baselined). Gated findings fail the
+    check; baselined ones are reported but allowed."""
+    gated = [f for f in findings if f.fingerprint not in allow]
+    baselined = [f for f in findings if f.fingerprint in allow]
+    return gated, baselined

@@ -1,0 +1,88 @@
+"""CLI for the static contract auditor.
+
+    PYTHONPATH=src python -m repro.analysis --check
+
+Exit code 0 when every finding is baselined (the shipped baseline is
+empty for ``src/repro/``), 1 when any non-baselined finding exists.
+The JSON report is written regardless of outcome so CI can archive it.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from repro.analysis import apply_baseline, load_baseline
+from repro.analysis.astlint import lint_tree
+
+
+def _repo_root() -> Path:
+    # src/repro/analysis/__main__.py -> repo root
+    return Path(__file__).resolve().parents[3]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="AST lint + jaxpr audit of the serving contracts")
+    ap.add_argument("--check", action="store_true",
+                    help="run both layers and gate against the baseline")
+    ap.add_argument("--no-jaxpr", action="store_true",
+                    help="skip the jaxpr audit layer (pure-AST iteration)")
+    ap.add_argument("--src", default=None,
+                    help="source root holding the repro package "
+                         "(default: <repo>/src)")
+    ap.add_argument("--baseline", default=None,
+                    help="allowlist JSON (default: analysis/baseline.json)")
+    ap.add_argument("--report", default=None,
+                    help="where to write the findings JSON (default: "
+                         "benchmarks/results/contract_audit.json)")
+    args = ap.parse_args(argv)
+    if not args.check:
+        ap.print_help()
+        return 2
+
+    root = _repo_root()
+    src = Path(args.src) if args.src else root / "src"
+    baseline_path = Path(args.baseline) if args.baseline else \
+        Path(__file__).parent / "baseline.json"
+    report_path = Path(args.report) if args.report else \
+        root / "benchmarks" / "results" / "contract_audit.json"
+
+    findings = lint_tree(src, repo_root=root)
+    metrics: dict = {}
+    if not args.no_jaxpr:
+        from repro.analysis.jaxpr_audit import run_jaxpr_audit
+        jf, metrics = run_jaxpr_audit()
+        findings.extend(jf)
+
+    allow = load_baseline(baseline_path)
+    gated, baselined = apply_baseline(findings, allow)
+
+    report = {
+        "gated": [f.to_json() for f in gated],
+        "baselined": [f.to_json() for f in baselined],
+        "jaxpr_metrics": metrics,
+        "n_gated": len(gated),
+        "n_baselined": len(baselined),
+    }
+    report_path.parent.mkdir(parents=True, exist_ok=True)
+    report_path.write_text(json.dumps(report, indent=2, sort_keys=True))
+
+    for f in gated:
+        loc = f"{f.path}:{f.line}" if f.line else f.path
+        print(f"FAIL {f.rule} {loc} [{f.symbol}]\n     {f.message}")
+    for f in baselined:
+        print(f"allow {f.rule} {f.path} [{f.symbol}]")
+    for name, m in sorted(metrics.items()):
+        print(f"jaxpr {name}: max_live={m['max_live_bytes'] / 2**20:.2f}"
+              f"MiB ({m['max_live_eqn']}) budget="
+              f"{m['budget_bytes'] / 2**20:.0f}MiB eqns={m['n_eqns']}")
+    print(f"contract audit: {len(gated)} gated finding(s), "
+          f"{len(baselined)} baselined -> {report_path}")
+    return 1 if gated else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

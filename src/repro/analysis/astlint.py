@@ -1,0 +1,704 @@
+"""AST lint layer: repo-specific contract rules over ``src/repro/``.
+
+The engine builds a best-effort interprocedural view of the package —
+imports, functions (including nested closures, methods, and lambdas), a
+call graph with function-valued arguments and returns — then evaluates
+the rules in ``repro.analysis.rules``:
+
+R1  every jit site in ``repro.retrieval.*`` must reach a
+    ``tracing.record_trace()`` call through its traced body. Jit targets
+    are resolved through the three idioms the codebase uses: decorator
+    (``@jax.jit`` / ``@partial(jax.jit, ...)``), direct wrap
+    (``jax.jit(inner)``, ``jax.jit(self._write_body)``, a lambda), and
+    builder wrap (``jax.jit(_build_body(...))`` — the traced functions
+    are the builder's returned closures).
+R2  in ``repro.kernels.*.ops`` modules, every dispatch wrapper (any
+    function taking an ``impl`` parameter) must reach
+    ``dispatch.record()``; and every module calling
+    ``dispatch.register()`` must match the registry's discovery pattern
+    so ``_ensure_registered`` actually imports it.
+R3  host-sync idioms: ``.item()``, ``jax.device_get``,
+    ``block_until_ready`` in traced scope (and, for
+    ``block_until_ready``, anywhere in serving modules);
+    ``np.asarray``/``np.array``/``float()``/``int()``/``bool()`` applied
+    to a parameter of a traced function; Python ``if``/``while`` on a
+    bare non-static parameter of a direct jit body.
+R4  vector-key suffix literals (``"_mask"``, ``"_int8"``, ``"_scale"``)
+    outside ``retrieval/store.py``.
+R5  module-level eager ``jnp.`` computation.
+
+Reachability is deliberately asymmetric: the *provides-record_trace*
+property propagates through every edge kind (calls, references,
+function-valued args, returns) so R1 never false-positives on indirect
+plumbing, while the *traced-scope* set for R3 grows only through calls
+and function-valued arguments (the edges a tracer actually follows), so
+host-side builder code never lands in traced scope by accident.
+
+Inline exemption: ``# audit: allow-<RULE> <reason>`` on the finding's
+line or the line above.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+from repro.analysis import Finding, dedupe
+from repro.analysis import rules as R
+
+# --- per-function record -------------------------------------------------
+
+
+class FuncInfo:
+    def __init__(self, module: str, qualname: str, node, cls: str | None,
+                 parent: str | None):
+        self.module = module
+        self.qualname = qualname
+        self.node = node
+        self.cls = cls
+        self.parent = parent          # qualname of enclosing function
+        self.lineno = getattr(node, "lineno", 0)
+        self.params: set = set()
+        self.static_params: set = set()   # from jit static_argnames
+        self.children: dict = {}      # bare name -> qualname
+        self.calls: set = set()       # resolved ids ("mod:qual" or dotted)
+        self.refs: set = set()        # function ids referenced (loads)
+        self.fn_args: set = set()     # function ids passed as call args
+        self.returns_funcs: set = set()
+        self.aliases: dict = {}       # local name -> ids of called funcs
+        self.jit_decorated = False
+
+    @property
+    def fid(self) -> str:
+        return f"{self.module}:{self.qualname}"
+
+
+class JitSite:
+    def __init__(self, module: str, lineno: int, anchor: str,
+                 direct_ids=(), result_of=(), static=()):
+        self.module = module
+        self.lineno = lineno
+        self.anchor = anchor          # stable symbol for the finding
+        self.direct_ids = tuple(direct_ids)      # jit(f) / @jax.jit
+        self.result_of = tuple(result_of)        # jit(builder(...))
+        self.static = tuple(static)              # static_argnames
+
+
+# --- module analysis -----------------------------------------------------
+
+
+class ModuleInfo:
+    def __init__(self, name: str, path: str, source: str):
+        self.name = name
+        self.path = path
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=path)
+        self.imports: dict = {}       # alias -> dotted module
+        self.symbols: dict = {}       # alias -> (module, symbol)
+        self.funcs: dict = {}         # qualname -> FuncInfo
+        self.jit_sites: list = []
+        self.module_level: list = []  # top-level non-def statements
+        self.register_lines: list = []  # dispatch.register() call linenos
+        self._collect_imports()
+        self._collect(self.tree.body, prefix="", cls=None, parent=None)
+
+    # -- imports ---------------------------------------------------------
+    def _collect_imports(self) -> None:
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    self.imports[a.asname or a.name.split(".")[0]] = (
+                        a.name if a.asname else a.name.split(".")[0])
+                    if a.asname:
+                        self.imports[a.asname] = a.name
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                mod = node.module
+                if node.level:           # relative import -> absolutise
+                    base = self.name.split(".")[: -node.level]
+                    mod = ".".join(base + [node.module])
+                for a in node.names:
+                    self.symbols[a.asname or a.name] = (mod, a.name)
+
+    # -- function/class collection --------------------------------------
+    def _collect(self, body, prefix: str, cls: str | None,
+                 parent: str | None, top: bool = True) -> None:
+        for node in body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                qual = f"{prefix}{node.name}"
+                fi = FuncInfo(self.name, qual, node, cls, parent)
+                self.funcs[qual] = fi
+                if parent is not None:
+                    self.funcs[parent].children[node.name] = qual
+                self._collect(node.body, prefix=f"{qual}.<locals>.",
+                              cls=cls, parent=qual)
+            elif isinstance(node, ast.ClassDef):
+                self._collect(node.body, prefix=f"{node.name}.",
+                              cls=node.name, parent=None)
+            else:
+                if top and prefix == "" and cls is None:
+                    self.module_level.append(node)
+                # descend into compound statements so defs nested under
+                # if/for/while/with/try still become functions
+                for f in ("body", "orelse", "finalbody"):
+                    sub = getattr(node, f, None)
+                    if sub and isinstance(sub, list):
+                        self._collect(sub, prefix, cls, parent, top=False)
+                for h in getattr(node, "handlers", []) or []:
+                    self._collect(h.body, prefix, cls, parent, top=False)
+
+    # -- name resolution -------------------------------------------------
+    def _dotted(self, node) -> str | None:
+        """Flatten a Name/Attribute chain to a dotted string."""
+        parts = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if isinstance(node, ast.Name):
+            parts.append(node.id)
+            return ".".join(reversed(parts))
+        return None
+
+    def resolve_name(self, name: str, scope: FuncInfo | None) -> list:
+        """Resolve a bare name to global ids (best effort, may be [])."""
+        # closure chain: innermost enclosing function's children first
+        fi = scope
+        while fi is not None:
+            if name in fi.children:
+                return [f"{self.name}:{fi.children[name]}"]
+            if name in fi.aliases:       # x = builder(...)  -> result-of
+                return list(fi.aliases[name])
+            fi = self.funcs.get(fi.parent) if fi.parent else None
+        if name in self.funcs:           # module top-level function
+            return [f"{self.name}:{name}"]
+        if name in self.symbols:
+            mod, sym = self.symbols[name]
+            dotted = f"{mod}.{sym}"
+            return [f"{mod}:{sym}" if mod.startswith("repro") else dotted]
+        if name in self.imports:
+            return [self.imports[name]]
+        return []
+
+    def resolve_callable(self, node, scope: FuncInfo | None) -> list:
+        """Resolve a call target / function reference to ids."""
+        if isinstance(node, ast.Name):
+            return self.resolve_name(node.id, scope)
+        if isinstance(node, ast.Attribute):
+            if isinstance(node.value, ast.Name):
+                base = node.value.id
+                if base == "self" and scope is not None and scope.cls:
+                    meth = f"{scope.cls}.{node.attr}"
+                    if meth in self.funcs:
+                        return [f"{self.name}:{meth}"]
+                    return []
+                roots = self.resolve_name(base, scope)
+                out = []
+                for r in roots:
+                    if isinstance(r, tuple):
+                        continue          # attribute on a call-result var
+                    if ":" in r:         # repro module alias -> symbol
+                        mod = r.replace(":", ".")
+                        out.append(f"{mod}:{node.attr}"
+                                   if mod.startswith("repro")
+                                   else f"{mod}.{node.attr}")
+                    else:
+                        out.append(f"{r}:{node.attr}"
+                                   if r.startswith("repro")
+                                   else f"{r}.{node.attr}")
+                return out
+            dotted = self._dotted(node)
+            if dotted:
+                head, _, rest = dotted.partition(".")
+                if head in self.imports:
+                    full = f"{self.imports[head]}.{rest}"
+                    if full.startswith("repro"):
+                        mod, _, sym = full.rpartition(".")
+                        return [f"{mod}:{sym}"]
+                    return [full]
+            return []
+        return []
+
+    def allowed(self, line: int, rule: str) -> bool:
+        for ln in (line, line - 1):
+            if 1 <= ln <= len(self.lines) and \
+                    f"audit: allow-{rule}" in self.lines[ln - 1]:
+                return True
+        return False
+
+
+# --- body analysis -------------------------------------------------------
+
+_JIT_IDS = {"jax.jit", "jax.pjit", "jax.experimental.pjit.pjit"}
+_PARTIAL_IDS = {"functools.partial"}
+
+
+def _param_names(node) -> set:
+    a = node.args
+    names = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return set(names)
+
+
+def _static_names(call: ast.Call, param_order: list) -> list:
+    out = []
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, str):
+                    out.append(n.value)
+        elif kw.arg == "static_argnums":
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, int):
+                    if 0 <= n.value < len(param_order):
+                        out.append(param_order[n.value])
+    return out
+
+
+def _iter_body(fn_node):
+    """Walk a function body without descending into nested defs/lambdas.
+    Yields (node, inside) pairs; nested defs are yielded but not entered.
+    """
+    body = fn_node.body if not isinstance(fn_node, ast.Lambda) \
+        else [ast.Expr(fn_node.body)]
+    stack = list(body)
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda, ast.ClassDef)):
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+
+
+class Analyzer:
+    """Cross-module lint driver over {module_name: source}."""
+
+    def __init__(self, sources: dict, paths: dict | None = None):
+        self.modules: dict = {}
+        for name, src in sources.items():
+            path = (paths or {}).get(name, f"<{name}>")
+            self.modules[name] = ModuleInfo(name, path, src)
+        self.funcs: dict = {}         # fid -> FuncInfo
+        self._lambda_n = 0
+        for mi in self.modules.values():
+            self._analyze_module(mi)
+        for mi in self.modules.values():
+            for fi in list(mi.funcs.values()):
+                self.funcs[fi.fid] = fi
+        self.provides_trace = self._fixpoint(
+            seed_id=R.TRACING_RECORD,
+            edges=lambda f: f.calls | f.refs | f.fn_args | f.returns_funcs)
+        self.provides_record = self._fixpoint(
+            seed_id=R.DISPATCH_RECORD,
+            edges=lambda f: f.calls | f.refs | f.fn_args)
+        self.traced = self._traced_scope()
+
+    # -- per-module body walk -------------------------------------------
+    def _lambda_info(self, mi: ModuleInfo, scope: FuncInfo,
+                     node: ast.Lambda) -> FuncInfo:
+        self._lambda_n += 1
+        qual = f"{scope.qualname}.<locals>.<lambda#{self._lambda_n}>"
+        fi = FuncInfo(mi.name, qual, node, scope.cls, scope.qualname)
+        mi.funcs[qual] = fi
+        fi.params = _param_names(node)
+        self._walk_func(mi, fi)
+        return fi
+
+    def _analyze_module(self, mi: ModuleInfo) -> None:
+        for fi in list(mi.funcs.values()):
+            fi.params = _param_names(fi.node)
+            self._detect_decorator_jit(mi, fi)
+        for fi in list(mi.funcs.values()):
+            self._walk_func(mi, fi)
+        # module-level jax.jit(...) wrap sites
+        for stmt in mi.module_level:
+            for node in ast.walk(stmt):
+                if isinstance(node, ast.Call):
+                    ids = mi.resolve_callable(node.func, None)
+                    if set(i for i in ids
+                           if isinstance(i, str)) & _JIT_IDS:
+                        self._handle_jit_call(mi, None, node)
+
+    def _detect_decorator_jit(self, mi: ModuleInfo, fi: FuncInfo) -> None:
+        order = [p.arg for p in fi.node.args.posonlyargs +
+                 fi.node.args.args]
+        for dec in fi.node.decorator_list:
+            ids = mi.resolve_callable(
+                dec.func if isinstance(dec, ast.Call) else dec, None)
+            if isinstance(dec, ast.Call) and \
+                    set(ids) & _PARTIAL_IDS | ({"partial"} & set(ids)):
+                inner = dec.args[0] if dec.args else None
+                inner_ids = mi.resolve_callable(inner, None) \
+                    if inner is not None else []
+                if set(inner_ids) & _JIT_IDS:
+                    fi.jit_decorated = True
+                    fi.static_params |= set(_static_names(dec, order))
+            elif set(ids) & _JIT_IDS:
+                fi.jit_decorated = True
+                if isinstance(dec, ast.Call):
+                    fi.static_params |= set(_static_names(dec, order))
+        if fi.jit_decorated:
+            mi.jit_sites.append(JitSite(
+                mi.name, fi.lineno, anchor=fi.qualname,
+                direct_ids=[fi.fid], static=sorted(fi.static_params)))
+
+    def _walk_func(self, mi: ModuleInfo, fi: FuncInfo) -> None:
+        for node in _iter_body(fi.node):
+            if isinstance(node, ast.Lambda):
+                sub = self._lambda_info(mi, fi, node)
+                fi.refs.add(sub.fid)
+                continue
+            if isinstance(node, ast.Call):
+                self._handle_call(mi, fi, node)
+            elif isinstance(node, ast.Name) and \
+                    isinstance(node.ctx, ast.Load):
+                for rid in mi.resolve_name(node.id, fi):
+                    if rid in (f.fid for f in mi.funcs.values()) or \
+                            ":" in rid:
+                        fi.refs.add(rid)
+            elif isinstance(node, ast.Return) and node.value is not None:
+                vals = node.value.elts \
+                    if isinstance(node.value, ast.Tuple) else [node.value]
+                for v in vals:
+                    if isinstance(v, (ast.Name, ast.Attribute)):
+                        for rid in mi.resolve_callable(v, fi):
+                            if ":" in rid:
+                                fi.returns_funcs.add(rid)
+            elif isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name) \
+                    and isinstance(node.value, ast.Call):
+                tids = mi.resolve_callable(node.value.func, fi)
+                called = [t for t in tids if ":" in t]
+                if called and not (set(tids) & _JIT_IDS):
+                    fi.aliases[node.targets[0].id] = \
+                        tuple(("result_of", t) for t in called)
+
+    def _handle_call(self, mi: ModuleInfo, fi: FuncInfo,
+                     node: ast.Call) -> None:
+        ids = mi.resolve_callable(node.func, fi)
+        for cid in ids:
+            # "result_of" aliases mean: calling the alias calls whatever
+            # the builder returned — edge to the builder's returns later
+            if isinstance(cid, tuple):
+                fi.calls.add(cid)
+            else:
+                fi.calls.add(cid)
+        # function-valued arguments (shard_map(body), lax.scan(step, ...))
+        for arg in list(node.args) + [kw.value for kw in node.keywords]:
+            if isinstance(arg, ast.Lambda):
+                sub = self._lambda_info(mi, fi, arg)
+                fi.fn_args.add(sub.fid)
+            elif isinstance(arg, (ast.Name, ast.Attribute)):
+                for rid in mi.resolve_callable(arg, fi):
+                    if isinstance(rid, str) and ":" in rid:
+                        fi.fn_args.add(rid)
+        # jax.jit(...) expression sites
+        if set(i for i in ids if isinstance(i, str)) & _JIT_IDS:
+            self._handle_jit_call(mi, fi, node)
+
+    def _handle_jit_call(self, mi: ModuleInfo, fi: FuncInfo | None,
+                         node: ast.Call) -> None:
+        target = node.args[0] if node.args else None
+        direct, result_of = [], []
+        where = fi.qualname if fi is not None else "<module>"
+        anchor = f"{where}:jit"
+        if isinstance(target, ast.Lambda) and fi is not None:
+            sub = self._lambda_info(mi, fi, target)
+            direct.append(sub.fid)
+        elif isinstance(target, ast.Call):
+            for tid in mi.resolve_callable(target.func, fi):
+                if isinstance(tid, str) and ":" in tid:
+                    result_of.append(tid)
+        elif isinstance(target, (ast.Name, ast.Attribute)):
+            for tid in mi.resolve_callable(target, fi):
+                if isinstance(tid, tuple):     # ("result_of", builder)
+                    result_of.append(tid[1])
+                elif ":" in tid:
+                    direct.append(tid)
+            if isinstance(target, ast.Name):
+                anchor = f"{where}:jit({target.id})"
+        order: list = []
+        static = _static_names(node, order)
+        mi.jit_sites.append(JitSite(mi.name, node.lineno, anchor,
+                                    direct_ids=direct,
+                                    result_of=result_of, static=static))
+
+    # -- global passes ---------------------------------------------------
+    def _out_edges(self, fi: FuncInfo, raw: set) -> set:
+        """Expand ("result_of", builder) pseudo-edges to builder returns
+        (falling back to the builder itself) and drop non-ids."""
+        out = set()
+        for e in raw:
+            if isinstance(e, tuple):
+                builder = self.funcs.get(e[1])
+                if builder is not None and builder.returns_funcs:
+                    out |= builder.returns_funcs
+                else:
+                    out.add(e[1])
+            elif isinstance(e, str):
+                out.add(e)
+        return out
+
+    def _fixpoint(self, seed_id: str, edges) -> set:
+        provides = set()
+        for fid, fi in self.funcs.items():
+            if seed_id in self._out_edges(fi, fi.calls):
+                provides.add(fid)
+        changed = True
+        while changed:
+            changed = False
+            for fid, fi in self.funcs.items():
+                if fid in provides:
+                    continue
+                if self._out_edges(fi, edges(fi)) & provides:
+                    provides.add(fid)
+                    changed = True
+        return provides
+
+    def jit_targets(self, site: JitSite) -> list:
+        """The function ids a jit site actually traces."""
+        out = list(site.direct_ids)
+        for builder_id in site.result_of:
+            builder = self.funcs.get(builder_id)
+            if builder is not None and builder.returns_funcs:
+                out.extend(sorted(builder.returns_funcs))
+            else:
+                out.append(builder_id)
+        return out
+
+    def _traced_scope(self) -> dict:
+        """fid -> set of static param names known at its jit roots.
+        Traced scope grows through calls and function-valued args only."""
+        traced: dict = {}
+        work = []
+        for mi in self.modules.values():
+            for site in mi.jit_sites:
+                for fid in self.jit_targets(site):
+                    if fid in self.funcs:
+                        prev = traced.get(fid)
+                        st = set(site.static)
+                        if prev is None or not st <= prev:
+                            traced[fid] = (prev or set()) | st
+                            work.append(fid)
+        while work:
+            fid = work.pop()
+            fi = self.funcs[fid]
+            for nxt in self._out_edges(fi, fi.calls | fi.fn_args):
+                if nxt in self.funcs and nxt not in traced:
+                    traced[nxt] = set()
+                    work.append(nxt)
+        return traced
+
+    # -- rules -----------------------------------------------------------
+    def run(self, select: set | None = None) -> list:
+        findings: list = []
+        checks = {"R1": self._rule_r1, "R2": self._rule_r2,
+                  "R3": self._rule_r3, "R4": self._rule_r4,
+                  "R5": self._rule_r5}
+        for rule, fn in checks.items():
+            if select is None or rule in select:
+                findings.extend(fn())
+        by_path = {mi.path: mi for mi in self.modules.values()}
+        return dedupe([
+            f for f in findings
+            if f.path not in by_path or
+            not by_path[f.path].allowed(f.line, f.rule)])
+
+    def _finding(self, rule: str, mi: ModuleInfo, line: int, symbol: str,
+                 message: str) -> Finding:
+        return Finding(rule, mi.path, line, symbol, message)
+
+    def _rule_r1(self) -> list:
+        out = []
+        for mi in self.modules.values():
+            if not mi.name.startswith(R.R1_SCOPE):
+                continue
+            for site in mi.jit_sites:
+                targets = [t for t in self.jit_targets(site)
+                           if t in self.funcs]
+                if not targets:
+                    continue          # unresolvable target: no claim
+                if not any(t in self.provides_trace for t in targets):
+                    names = ", ".join(t.split(":", 1)[1] for t in targets)
+                    out.append(self._finding(
+                        "R1", mi, site.lineno, site.anchor,
+                        f"jit body ({names}) on the serving path never "
+                        "reaches tracing.record_trace() — retraces of "
+                        "this executable are invisible to the "
+                        "no-retrace counter"))
+        return out
+
+    def _rule_r2(self) -> list:
+        out = []
+        for mi in self.modules.values():
+            is_ops = bool(R.R2_OPS_MODULE.match(mi.name))
+            for fi in mi.funcs.values():
+                if is_ops and "impl" in fi.params and \
+                        fi.fid not in self.provides_record:
+                    out.append(self._finding(
+                        "R2", mi, fi.lineno, fi.qualname,
+                        f"dispatch wrapper {fi.qualname} (takes `impl`) "
+                        "never reaches dispatch.record() — its routing "
+                        "is invisible to the observed-routing gates"))
+                for e in self._out_edges(fi, fi.calls):
+                    if e == R.DISPATCH_REGISTER and not is_ops and \
+                            mi.name != R.DISPATCH_MODULE:
+                        out.append(self._finding(
+                            "R2", mi, fi.lineno, f"{fi.qualname}:register",
+                            f"dispatch.register() call in {mi.name} — "
+                            "outside the repro.kernels.<family>.ops "
+                            "discovery pattern, _ensure_registered will "
+                            "never import it"))
+            # module-level register() calls (the usual idiom)
+            for node in mi.module_level:
+                for sub in ast.walk(node):
+                    if isinstance(sub, ast.Call):
+                        ids = mi.resolve_callable(sub.func, None)
+                        if R.DISPATCH_REGISTER in ids and not is_ops \
+                                and mi.name != R.DISPATCH_MODULE:
+                            out.append(self._finding(
+                                "R2", mi, sub.lineno,
+                                "<module>:register",
+                                f"dispatch.register() at module level in "
+                                f"{mi.name} — outside the "
+                                "repro.kernels.<family>.ops discovery "
+                                "pattern"))
+        return out
+
+    def _rule_r3(self) -> list:
+        out = []
+        for mi in self.modules.values():
+            serving = mi.name.startswith(R.R3_SERVING_SCOPE)
+            for fi in mi.funcs.values():
+                in_traced = fi.fid in self.traced
+                if not (in_traced or serving):
+                    continue
+                statics = self.traced.get(fi.fid, set()) | fi.static_params
+                for node in _iter_body(fi.node):
+                    out.extend(self._r3_node(mi, fi, node, in_traced,
+                                             serving, statics))
+        return out
+
+    def _r3_node(self, mi, fi, node, in_traced, serving, statics) -> list:
+        out = []
+        if isinstance(node, ast.Call):
+            ids = set(i for i in mi.resolve_callable(node.func, fi)
+                      if isinstance(i, str))
+            for did, why in R.R3_HOST_SYNC_CALLS.items():
+                if did in ids and (in_traced or
+                                   (serving and "block" in did)):
+                    out.append(self._finding(
+                        "R3", mi, node.lineno, f"{fi.qualname}:{did}",
+                        f"{did}() in "
+                        f"{'traced scope' if in_traced else 'serving'} "
+                        f"({fi.qualname}) — {why}"))
+            if isinstance(node.func, ast.Attribute) and \
+                    node.func.attr in ("item", "block_until_ready"):
+                if in_traced or (serving and
+                                 node.func.attr == "block_until_ready"):
+                    out.append(self._finding(
+                        "R3", mi, node.lineno,
+                        f"{fi.qualname}:.{node.func.attr}",
+                        f".{node.func.attr}() in "
+                        f"{'traced scope' if in_traced else 'serving'} "
+                        f"({fi.qualname}) — forces a host sync"))
+            if in_traced and node.args and \
+                    isinstance(node.args[0], ast.Name) and \
+                    node.args[0].id in fi.params and \
+                    node.args[0].id not in statics:
+                pname = node.args[0].id
+                if ids & R.R3_NUMPY_ON_PARAM:
+                    out.append(self._finding(
+                        "R3", mi, node.lineno,
+                        f"{fi.qualname}:np({pname})",
+                        f"np conversion of traced parameter `{pname}` in "
+                        f"{fi.qualname} — concretises/syncs at trace "
+                        "time"))
+                elif isinstance(node.func, ast.Name) and \
+                        node.func.id in R.R3_CAST_BUILTINS and \
+                        node.func.id not in fi.params:
+                    out.append(self._finding(
+                        "R3", mi, node.lineno,
+                        f"{fi.qualname}:{node.func.id}({pname})",
+                        f"{node.func.id}() on traced parameter "
+                        f"`{pname}` in {fi.qualname} — concretisation "
+                        "error or silent bake at trace time"))
+        elif isinstance(node, (ast.If, ast.While)) and in_traced and \
+                fi.jit_decorated:
+            test = node.test
+            neg = isinstance(test, ast.UnaryOp) and \
+                isinstance(test.op, ast.Not)
+            t = test.operand if neg else test
+            if isinstance(t, ast.Name) and t.id in fi.params and \
+                    t.id not in statics:
+                out.append(self._finding(
+                    "R3", mi, node.lineno, f"{fi.qualname}:if({t.id})",
+                    f"Python branch on non-static jit parameter "
+                    f"`{t.id}` in {fi.qualname} — traced arrays cannot "
+                    "drive Python control flow"))
+        return out
+
+    def _rule_r4(self) -> list:
+        out = []
+        for mi in self.modules.values():
+            if mi.name == R.R4_OWNER_MODULE or \
+                    mi.name.startswith(R.R4_EXEMPT_PREFIXES):
+                continue
+            for node in ast.walk(mi.tree):
+                if isinstance(node, ast.Constant) and \
+                        isinstance(node.value, str) and \
+                        node.value in R.R4_SUFFIXES:
+                    out.append(self._finding(
+                        "R4", mi, node.lineno,
+                        f"literal:{node.value}",
+                        f"vector-key suffix literal {node.value!r} "
+                        f"outside retrieval/store.py — use the "
+                        "VectorSchema accessors"))
+        return out
+
+    def _rule_r5(self) -> list:
+        out = []
+        for mi in self.modules.values():
+            for stmt in mi.module_level:
+                for node in ast.walk(stmt):
+                    if not isinstance(node, ast.Call):
+                        continue
+                    for cid in mi.resolve_callable(node.func, None):
+                        if isinstance(cid, str) and \
+                                cid.startswith(R.R5_JNP_MODULES):
+                            out.append(self._finding(
+                                "R5", mi, node.lineno,
+                                f"<module>:{cid}",
+                                f"module-level eager {cid}() — "
+                                "allocates/computes at import time"))
+        return out
+
+
+# --- entry points --------------------------------------------------------
+
+
+def lint_sources(sources: dict, paths: dict | None = None,
+                 select: set | None = None) -> list:
+    """Lint in-memory {module_name: source}. Test/fixture entry point."""
+    return Analyzer(sources, paths).run(select)
+
+
+def lint_tree(src_root: Path | str, package: str = "repro",
+              select: set | None = None,
+              repo_root: Path | str | None = None) -> list:
+    """Lint every module of ``package`` under ``src_root``."""
+    src_root = Path(src_root)
+    repo_root = Path(repo_root) if repo_root else src_root.parent
+    sources, paths = {}, {}
+    for py in sorted((src_root / package).rglob("*.py")):
+        rel = py.relative_to(src_root)
+        name = ".".join(rel.with_suffix("").parts)
+        if name.endswith(".__init__"):
+            name = name[: -len(".__init__")]
+        sources[name] = py.read_text()
+        try:
+            paths[name] = str(py.relative_to(repo_root))
+        except ValueError:            # linting a tree outside the repo
+            paths[name] = str(py)
+    return lint_sources(sources, paths, select)

@@ -1,0 +1,250 @@
+"""Jaxpr audit layer: trace the real serving/ingest executables and walk
+their jaxprs for memory-discipline violations no AST rule can see.
+
+The AST layer proves call-graph properties; this layer proves what XLA
+will actually be asked to materialise. It builds the same executables the
+``Retriever`` / ``IngestPipeline`` serve — small representative configs,
+the identical builder code paths — runs ``jax.make_jaxpr`` over them, and
+recursively walks every equation (descending into ``pjit``/``scan``/
+``while``/``cond``/pallas sub-jaxprs):
+
+J1  ``convert_element_type`` lifting an int8 operand to >= f32 at
+    full-corpus leading dimension — the eager HBM shadow of the quantised
+    corpus that PR 3/4 eliminated. The chunked dequant (``chunk`` rows at
+    a time) passes; a full-corpus dequant fires.
+J2  max live intermediate: the byte size of every equation's outputs is
+    checked against a per-scenario budget sized ~2x above the largest
+    intermediate the streamed/chunked cascade legitimately produces —
+    a ``[B, N, Q, D]``-style broadcast blowup lands far beyond it.
+J3  host callback / infeed / outfeed primitives inside a serving body —
+    a hidden host round-trip per dispatch.
+J4  weak-type executable inputs: a Python-scalar argument splits the
+    executable cache by weak-type axis, a retrace axis the runtime
+    counter only catches after the fact.
+
+Run via ``python -m repro.analysis --check`` (the ``--no-jaxpr`` flag
+skips this layer for pure-AST iteration). Each scenario also reports its
+measured ``max_live_bytes`` so budget drift is visible in the archived
+JSON even while under budget.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis import Finding
+
+_F32_BYTES = 4
+_UPCAST_DTYPES = ("float32", "float64")
+_CALLBACK_MARKERS = ("callback", "infeed", "outfeed")
+
+
+# --- jaxpr walking -------------------------------------------------------
+
+
+def _as_jaxprs(v):
+    if hasattr(v, "jaxpr"):          # ClosedJaxpr
+        yield v.jaxpr
+    elif hasattr(v, "eqns"):         # raw Jaxpr (pallas_call params)
+        yield v
+    elif isinstance(v, (tuple, list)):
+        for item in v:
+            yield from _as_jaxprs(item)
+
+
+def iter_eqns(jaxpr):
+    """Yield every equation, recursing into sub-jaxprs of higher-order
+    primitives (pjit, scan, while, cond, custom_*_call, pallas_call)."""
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            for sub in _as_jaxprs(v):
+                yield from iter_eqns(sub)
+
+
+def _aval_bytes(aval) -> int:
+    shape = getattr(aval, "shape", None)
+    dtype = getattr(aval, "dtype", None)
+    if shape is None or dtype is None:
+        return 0
+    n = 1
+    for s in shape:
+        n *= int(s)
+    return n * np.dtype(dtype).itemsize
+
+
+def audit_jaxpr(closed, *, label: str, corpus_rows: int,
+                budget_bytes: int, check_weak_invars: bool = True):
+    """Walk one traced executable. Returns (findings, metrics)."""
+    findings: list = []
+    max_live, max_desc, n_eqns = 0, "", 0
+    for eqn in iter_eqns(closed.jaxpr):
+        n_eqns += 1
+        prim = eqn.primitive.name
+        out_bytes = sum(_aval_bytes(v.aval) for v in eqn.outvars)
+        if out_bytes > max_live:
+            max_live = out_bytes
+            shapes = [tuple(getattr(v.aval, "shape", ()))
+                      for v in eqn.outvars]
+            max_desc = f"{prim}{shapes}"
+        # J1: int8 operand upcast to >= f32 at full-corpus shape
+        if prim == "convert_element_type":
+            src = eqn.invars[0].aval
+            dst = eqn.outvars[0].aval
+            if (str(getattr(src, "dtype", "")) == "int8"
+                    and str(getattr(dst, "dtype", "")) in _UPCAST_DTYPES
+                    and len(getattr(dst, "shape", ())) >= 2
+                    and int(dst.shape[0]) >= corpus_rows):
+                findings.append(Finding(
+                    "J1", f"<jaxpr:{label}>", 0,
+                    f"int8_upcast:{tuple(int(s) for s in dst.shape)}",
+                    f"{label}: int8 operand dequantised to "
+                    f"{dst.dtype} at full-corpus shape "
+                    f"{tuple(dst.shape)} (corpus_rows={corpus_rows}) — "
+                    "recreates the eager HBM shadow the quantised store "
+                    "exists to avoid"))
+        # J2: oversized live intermediate
+        if out_bytes > budget_bytes:
+            shapes = [tuple(int(s) for s in getattr(v.aval, "shape", ()))
+                      for v in eqn.outvars]
+            findings.append(Finding(
+                "J2", f"<jaxpr:{label}>", 0,
+                f"oversized:{prim}:{shapes}",
+                f"{label}: {prim} materialises {out_bytes} bytes "
+                f"{shapes} — over the {budget_bytes}-byte scenario "
+                "budget (broadcast blowup?)"))
+        # J3: host callbacks / transfers inside the serving body
+        if any(m in prim for m in _CALLBACK_MARKERS):
+            findings.append(Finding(
+                "J3", f"<jaxpr:{label}>", 0, f"callback:{prim}",
+                f"{label}: host-callback primitive `{prim}` inside a "
+                "serving body — a host round-trip per dispatch"))
+    if check_weak_invars:
+        for i, var in enumerate(closed.jaxpr.invars):
+            if getattr(var.aval, "weak_type", False):
+                findings.append(Finding(
+                    "J4", f"<jaxpr:{label}>", 0, f"weak_invar:{i}",
+                    f"{label}: executable input {i} is weak-typed "
+                    f"({var.aval}) — a Python-scalar argument that "
+                    "splits the executable cache (a retrace axis)"))
+    metrics = {"label": label, "n_eqns": n_eqns,
+               "max_live_bytes": max_live, "max_live_eqn": max_desc,
+               "budget_bytes": budget_bytes, "corpus_rows": corpus_rows}
+    return findings, metrics
+
+
+# --- representative quick scenarios --------------------------------------
+
+# Geometry: 240 pages in a 256-slot segment, colpali grid (D=1024+
+# specials, d=128), int8-quantised "initial", chunk=16 streamed scan,
+# prefetch_k=8 rerank. Measured legit maxima at this geometry: the
+# rerank candidate working set — [B=4, L=8, D, d] gathered bf16 (8 MiB)
+# and its in-twin f32 dequant (16 MiB). The 24 MiB budget sits 1.5x
+# above that and well below the cheapest full-corpus materialisation —
+# the [B, N, Q, D] sim tensor (40 MiB) or a whole-corpus f32 dequant
+# (135 MiB, also caught shape-wise by J1) — so a regression trips the
+# gate with margin on both sides.
+_N_PAGES = (100, 80, 60)
+_N_QUERIES = (6, 6, 4)
+_CAPACITY = 256
+_CHUNK = 16
+_B = 4
+_SERVE_BUDGET = 24 << 20
+_INGEST_BUDGET = 16 << 20
+
+
+def _corpus():
+    from repro.configs import get_config
+    from repro.data.synthetic import make_benchmark
+    cfg = get_config("colpali")
+    bench = make_benchmark(cfg, _N_PAGES, _N_QUERIES, seed=7)
+    return cfg, bench
+
+
+def _retriever(routing=None):
+    from repro.retrieval.retriever import Retriever
+    from repro.retrieval.store import build_store, quantize_store
+    cfg, bench = _corpus()
+    store = build_store(cfg, jnp.asarray(bench.pages),
+                        jnp.asarray(bench.token_types))
+    store = quantize_store(store, names=("initial",))
+    r = Retriever(store, capacity=_CAPACITY, routing=routing)
+    q = jnp.asarray(bench.queries[:_B])
+    q_mask = jnp.asarray(bench.query_mask[:_B]).astype(bool)
+    return r, q, q_mask
+
+
+def _trace_search(r, q, q_mask, stages):
+    from repro.retrieval.store import as_filter_arrays, filter_words
+    fn = r.search_fn(stages)
+    stores = r.store.stores()
+    fspec = as_filter_arrays(None, filter_words(stores[0]))
+    return jax.make_jaxpr(
+        lambda s, qq, qm, ft: fn(s, qq, qm, ft))(stores, q, q_mask, fspec)
+
+
+def _stages_scan():
+    from repro.core import multistage as MST
+    stages = MST.two_stage(prefetch_k=8, top_k=4)
+    return MST.with_scan_policy(stages, chunk=_CHUNK, scan_topk=True)
+
+
+def scenario_scan_int8():
+    """Streamed int8 scan + ref rerank — the default serving cascade."""
+    r, q, q_mask = _retriever()
+    closed = _trace_search(r, q, q_mask, _stages_scan())
+    return closed, dict(corpus_rows=_CAPACITY, budget_bytes=_SERVE_BUDGET)
+
+
+def scenario_rerank_fused():
+    """Kernel scan policy + fused gather-rerank path."""
+    from repro.core import multistage as MST
+    r, q, q_mask = _retriever()
+    stages = MST.with_rerank_policy(
+        MST.with_scan_policy(_stages_scan(), use_kernel=True),
+        rerank_kernel=True)
+    closed = _trace_search(r, q, q_mask, stages)
+    return closed, dict(corpus_rows=_CAPACITY, budget_bytes=_SERVE_BUDGET)
+
+
+def scenario_routed():
+    """IVF-routed scan (centroid scoring + member-row candidates)."""
+    from repro.core import multistage as MST
+    r, q, q_mask = _retriever(routing=4)
+    stages = MST.with_routing_policy(
+        _stages_scan(), n_probe=2, n_clusters=4)
+    closed = _trace_search(r, q, q_mask, stages)
+    return closed, dict(corpus_rows=_CAPACITY, budget_bytes=_SERVE_BUDGET)
+
+
+def scenario_ingest():
+    """The device-resident ingest index body (pool -> quantise)."""
+    from repro.retrieval.ingest import IngestPipeline
+    cfg, bench = _corpus()
+    pipe = IngestPipeline.for_config(cfg, quantize=("initial",),
+                                     use_kernel=True)
+    pages = jnp.asarray(bench.pages[: pipe.min_bucket])
+    tt = jnp.asarray(bench.token_types)
+    closed = jax.make_jaxpr(
+        lambda p, t: pipe._index_arrays(p, t, None))(pages, tt)
+    return closed, dict(corpus_rows=_CAPACITY, budget_bytes=_INGEST_BUDGET)
+
+
+SCENARIOS = {
+    "scan_int8": scenario_scan_int8,
+    "rerank_fused": scenario_rerank_fused,
+    "routed": scenario_routed,
+    "ingest": scenario_ingest,
+}
+
+
+def run_jaxpr_audit(names=None):
+    """Trace + audit every quick scenario. Returns (findings, metrics)."""
+    findings, metrics = [], {}
+    for name in (names or SCENARIOS):
+        closed, spec = SCENARIOS[name]()
+        f, m = audit_jaxpr(closed, label=name, **spec)
+        findings.extend(f)
+        metrics[name] = m
+    return findings, metrics

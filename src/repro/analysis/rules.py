@@ -1,0 +1,62 @@
+"""Rule definitions and scoping for the AST lint layer.
+
+Each rule is repo-specific — generic lint (undefined names, syntax-level
+errors) is ruff's job (see ``pyproject.toml``); this file only carries
+contracts ruff cannot know about. The scopes are module-name prefixes /
+regexes over the ``repro.*`` dotted names derived from ``src/``.
+"""
+from __future__ import annotations
+
+import re
+
+# --- anchors the rules key on -------------------------------------------
+TRACING_RECORD = "repro.retrieval.tracing:record_trace"
+DISPATCH_RECORD = "repro.kernels.dispatch:record"
+DISPATCH_REGISTER = "repro.kernels.dispatch:register"
+DISPATCH_MODULE = "repro.kernels.dispatch"
+
+# R1: every jit site in the serving/ingest/mutation path must reach a
+# record_trace() call through its traced body.
+R1_SCOPE = ("repro.retrieval.",)
+
+# R2: kernel ops wrappers (any function with an ``impl`` parameter in an
+# ops module) must reach dispatch.record(); register() calls must live in
+# modules _ensure_registered's discovery will import.
+R2_OPS_MODULE = re.compile(r"^repro\.kernels\.[A-Za-z0-9_]+\.ops$")
+
+# R3: host-sync idioms. ``block_until_ready`` additionally flags anywhere
+# in serving modules (host-side serving loops must stay async); the rest
+# only flag inside traced scope, where they would either crash at trace
+# time on real tracers or silently bake/sync.
+R3_SERVING_SCOPE = ("repro.retrieval.",)
+R3_HOST_SYNC_CALLS = {
+    "jax.block_until_ready": "blocks async dispatch",
+    "jax.device_get": "device->host transfer",
+}
+R3_NUMPY_ON_PARAM = {"numpy.asarray", "numpy.array"}
+R3_CAST_BUILTINS = {"float", "int", "bool"}
+
+# R4: the vector-key suffix convention belongs to the typed VectorSchema
+# in retrieval/store.py — a bare suffix literal anywhere else is a
+# stringly leak (PR 4 removed them once; this keeps them out).
+R4_SUFFIXES = ("_mask", "_int8", "_scale")
+R4_OWNER_MODULE = "repro.retrieval.store"
+R4_EXEMPT_PREFIXES = ("repro.analysis",)   # the rules themselves
+
+# R5: module-level eager jnp computation allocates (and possibly
+# compiles) at import time, before any policy/backend decision runs.
+R5_JNP_MODULES = ("jax.numpy",)
+
+RULE_DOCS = {
+    "R1": "jit body on the serving/ingest/mutation path never calls "
+          "tracing.record_trace() — invisible to the no-retrace counter",
+    "R2": "kernel ops wrapper never calls dispatch.record(), or a "
+          "dispatch.register() call sits outside registry discovery",
+    "R3": "host-sync idiom in traced scope / serving module",
+    "R4": "stringly vector-key suffix literal outside the VectorSchema",
+    "R5": "module-level eager jnp computation at import time",
+    "J1": "int8 operand upcast to >=f32 at full-corpus shape",
+    "J2": "live intermediate exceeds the scenario bytes budget",
+    "J3": "host callback/transfer primitive inside a serving body",
+    "J4": "weak-type executable input (Python-scalar retrace axis)",
+}

@@ -73,8 +73,7 @@ class KernelOp:
 _REGISTRY: dict = {}
 _AVAILABLE: dict = {}            # name -> cached probe result
 _COUNTS: dict = {}               # name -> {impl: trace-time dispatches}
-_KNOWN_MODULES = ("repro.kernels.maxsim.ops", "repro.kernels.pooling.ops",
-                  "repro.kernels.embed_bag.ops")
+_DISCOVERED: list = []           # registration modules found on disk
 
 
 def register(op: KernelOp) -> KernelOp:
@@ -84,11 +83,35 @@ def register(op: KernelOp) -> KernelOp:
     return op
 
 
+def registration_modules() -> tuple:
+    """Discover the registration modules instead of hand-maintaining a
+    tuple: every ``repro.kernels.<family>`` subpackage with an ``ops``
+    module registers its families at import time. A new op family is a
+    new subpackage — nothing to edit here, and the R2 contract lint
+    (``repro.analysis``) rejects ``register()`` calls that live outside
+    this pattern and so could never be discovered."""
+    if not _DISCOVERED:
+        import importlib.util
+        import pkgutil
+        import repro.kernels as _pkg
+        for m in pkgutil.iter_modules(_pkg.__path__):
+            if not m.ispkg:
+                continue
+            name = f"{_pkg.__name__}.{m.name}.ops"
+            if importlib.util.find_spec(name) is not None:
+                _DISCOVERED.append(name)
+        _DISCOVERED.sort()
+    return tuple(_DISCOVERED)
+
+
 def _ensure_registered(name: str | None = None) -> None:
     if name is not None and name in _REGISTRY:
         return
     import importlib
-    for mod in _KNOWN_MODULES:
+    for mod in registration_modules():
+        # a registration module that fails to import must fail LOUDLY:
+        # swallowing it would silently shrink the registry and every
+        # downstream resolve() would route around the missing family
         importlib.import_module(mod)
 
 
@@ -147,6 +170,20 @@ def record(name: str, impl: str) -> None:
     observational signal behind the CI routing gates."""
     counts = _COUNTS.setdefault(name, {})
     counts[impl] = counts.get(impl, 0) + 1
+
+
+def reset_counts(name: str | None = None) -> None:
+    """Zero the trace-time dispatch counters (one family, or all).
+
+    ``benchmarks/run.py`` calls this between benchmark functions so a
+    counter bumped by one suite can never satisfy another suite's
+    observed-routing gate. Only the counters reset — the registry and
+    the cached availability probes are unaffected."""
+    if name is None:
+        for counts in _COUNTS.values():
+            counts.clear()
+    else:
+        _COUNTS.get(name, {}).clear()
 
 
 def dispatch_count(name: str, impl: str | None = None) -> int:

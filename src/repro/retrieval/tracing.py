@@ -23,25 +23,65 @@ must leave the counter unchanged. Tests, ``benchmarks/run.py
 dynamic_corpus``, ``serving_tail_latency`` and ``ingest_throughput``
 assert ``trace_count()`` deltas == 0 (the latter two fail CI on a nonzero
 steady-state count).
+
+Thread-safety contract: callers may drive warmed executables from
+multiple threads (the frontend's flush path), and JAX may trace bodies
+concurrently; every mutation of the counter/log below holds ``_LOCK``,
+so ``record_trace()`` is safe to call from any thread and
+``trace_count()`` deltas observed around a quiesced region are exact.
+``no_retrace()`` itself is a per-thread assertion idiom — run traffic
+inside it, not concurrent warm-ups.
+
+The static counterpart to this runtime counter is the contract auditor
+(``python -m repro.analysis --check``): its R1 rule proves every serving
+jit body actually calls ``record_trace()``, so a forgotten hook can't
+make this counter silently blind.
 """
 from __future__ import annotations
 
+import sys
+import threading
 from contextlib import contextmanager
 
+_LOCK = threading.Lock()
 _TRACES = [0]
+_TRACE_LOG: list = []        # qualified name per record_trace() call
+_TRACE_LOG_MAX = 256         # bound the log; the count stays exact
 
 
-def record_trace() -> None:
-    """Call from inside a traced function body (trace-time side effect)."""
-    _TRACES[0] += 1
+def record_trace(name: str | None = None) -> None:
+    """Call from inside a traced function body (trace-time side effect).
+
+    Records the caller's qualified name (module.function, derived from
+    the calling frame when ``name`` is not given) alongside the count,
+    so ``no_retrace()`` can say WHICH jit retraced, not only that one
+    did."""
+    if name is None:
+        f = sys._getframe(1)
+        name = f"{f.f_globals.get('__name__', '?')}.{f.f_code.co_name}"
+    with _LOCK:
+        _TRACES[0] += 1
+        if len(_TRACE_LOG) < _TRACE_LOG_MAX:
+            _TRACE_LOG.append(name)
 
 
 def trace_count() -> int:
-    return _TRACES[0]
+    with _LOCK:
+        return _TRACES[0]
+
+
+def traced_names(since: int = 0) -> tuple:
+    """Qualified names recorded by ``record_trace()`` calls ``since`` a
+    prior ``trace_count()`` snapshot (log entries past the bound are
+    summarised by the callers as unattributed)."""
+    with _LOCK:
+        return tuple(_TRACE_LOG[since:])
 
 
 def reset_trace_count() -> None:
-    _TRACES[0] = 0
+    with _LOCK:
+        _TRACES[0] = 0
+        _TRACE_LOG.clear()
 
 
 @contextmanager
@@ -54,10 +94,21 @@ def no_retrace(what: str = "steady state"):
         with tracing.no_retrace("ragged traffic"):
             for q, qm in traffic:
                 frontend.search(q, qm)
+
+    On failure the assertion names the jit bodies that retraced (their
+    ``record_trace()`` call sites), so the report is actionable without
+    re-running under a tracer.
     """
-    before = _TRACES[0]
+    before = trace_count()
     yield
-    delta = _TRACES[0] - before
-    assert delta == 0, (
-        f"{what}: {delta} retrace(s) of serving jits — the no-retrace "
-        "contract is broken")
+    after = trace_count()
+    delta = after - before
+    if delta != 0:
+        names = traced_names(since=before)
+        unattributed = delta - len(names)
+        who = ", ".join(sorted(set(names))) or "<log saturated>"
+        if unattributed > 0 and names:
+            who += f" (+{unattributed} past the log bound)"
+        raise AssertionError(
+            f"{what}: {delta} retrace(s) of serving jits — the "
+            f"no-retrace contract is broken (retraced: {who})")

@@ -1,0 +1,449 @@
+"""Tests for the static contract auditor (repro.analysis).
+
+One violating + one clean fixture per AST rule, seeded jaxpr-audit
+violations (full-corpus f32 upcast, oversized intermediate, host
+callback, weak-type input), the CLI gate's exit codes, and the
+satellite behaviours that ride with the auditor (dispatch counter
+reset + registration discovery, trace attribution).
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import Finding, apply_baseline
+from repro.analysis.astlint import lint_sources
+from repro.analysis.jaxpr_audit import audit_jaxpr, run_jaxpr_audit
+
+
+def rules_of(findings):
+    return sorted({f.rule for f in findings})
+
+
+# ---------------------------------------------------------------------
+# R1 — serving jit bodies must reach record_trace()
+# ---------------------------------------------------------------------
+
+R1_BAD = {"repro.retrieval.fake": """
+import jax
+def make(n):
+    def body(x):
+        return x * 2
+    return body
+fn = jax.jit(make(3))
+"""}
+
+R1_OK = {"repro.retrieval.fake": """
+import jax
+from repro.retrieval.tracing import record_trace
+def make(n):
+    def body(x):
+        record_trace()
+        return x * 2
+    return body
+fn = jax.jit(make(3))
+"""}
+
+
+def test_r1_flags_traceless_jit_body():
+    assert rules_of(lint_sources(R1_BAD)) == ["R1"]
+
+
+def test_r1_clean_when_returned_closure_records():
+    assert lint_sources(R1_OK) == []
+
+
+def test_r1_decorator_and_method_forms():
+    bad = {"repro.retrieval.seg": """
+import jax
+@jax.jit
+def write(x):
+    return x + 1
+"""}
+    assert rules_of(lint_sources(bad)) == ["R1"]
+    ok = {"repro.retrieval.seg": """
+import jax
+from repro.retrieval import tracing
+@jax.jit
+def write(x):
+    tracing.record_trace()
+    return x + 1
+"""}
+    assert lint_sources(ok) == []
+
+
+def test_r1_out_of_scope_module_is_ignored():
+    # same traceless jit body, but not on the serving path
+    src = R1_BAD["repro.retrieval.fake"]
+    assert lint_sources({"repro.models.fake": src}) == []
+
+
+# ---------------------------------------------------------------------
+# R2 — ops wrappers must reach dispatch.record(); register() must be
+# discoverable
+# ---------------------------------------------------------------------
+
+R2_BAD = {"repro.kernels.fam.ops": """
+from repro.kernels import dispatch as DSP
+def scores(q, v, *, impl="ref"):
+    return q @ v
+"""}
+
+R2_OK = {"repro.kernels.fam.ops": """
+from repro.kernels import dispatch as DSP
+def _inner(q, v, impl):
+    DSP.record("fam", impl)
+    return q @ v
+def scores(q, v, *, impl="ref"):
+    return _inner(q, v, impl)
+"""}
+
+
+def test_r2_flags_recordless_wrapper():
+    assert rules_of(lint_sources(R2_BAD)) == ["R2"]
+
+
+def test_r2_record_through_helper_is_clean():
+    assert lint_sources(R2_OK) == []
+
+
+def test_r2_flags_undiscoverable_register():
+    bad = {"repro.kernels.stray": """
+from repro.kernels import dispatch as DSP
+DSP.register(None)
+"""}
+    fs = lint_sources(bad)
+    assert rules_of(fs) == ["R2"] and "register" in fs[0].symbol
+    ok = {"repro.kernels.fam.ops": """
+from repro.kernels import dispatch as DSP
+DSP.register(None)
+"""}
+    assert lint_sources(ok) == []
+
+
+# ---------------------------------------------------------------------
+# R3 — host-sync idioms in traced scope / serving modules
+# ---------------------------------------------------------------------
+
+R3_BAD = {"repro.retrieval.hot": """
+import jax
+from repro.retrieval.tracing import record_trace
+@jax.jit
+def body(x):
+    record_trace()
+    return x.item()
+"""}
+
+R3_OK = {"repro.retrieval.hot": """
+import numpy as np
+def admit(x):
+    return np.asarray(x)   # host-side, outside any traced body
+"""}
+
+
+def test_r3_flags_item_in_traced_scope():
+    assert rules_of(lint_sources(R3_BAD)) == ["R3"]
+
+
+def test_r3_host_side_numpy_is_clean():
+    assert lint_sources(R3_OK) == []
+
+
+def test_r3_numpy_on_traced_param_and_callee_scope():
+    # the sync sits in a helper the jit body calls — still traced scope
+    bad = {"repro.retrieval.hot": """
+import jax
+import numpy as np
+from repro.retrieval.tracing import record_trace
+def helper(v):
+    return np.asarray(v)
+@jax.jit
+def body(x):
+    record_trace()
+    return helper(x)
+"""}
+    assert rules_of(lint_sources(bad)) == ["R3"]
+
+
+def test_r3_branch_on_nonstatic_param_flagged_static_clean():
+    bad = {"repro.retrieval.hot": """
+import jax
+from repro.retrieval.tracing import record_trace
+@jax.jit
+def body(x, flag):
+    record_trace()
+    if flag:
+        return x
+    return -x
+"""}
+    assert rules_of(lint_sources(bad)) == ["R3"]
+    ok = {"repro.retrieval.hot": """
+import jax
+from functools import partial
+from repro.retrieval.tracing import record_trace
+@partial(jax.jit, static_argnames=("flag",))
+def body(x, flag):
+    record_trace()
+    if flag:
+        return x
+    return -x
+"""}
+    assert lint_sources(ok) == []
+
+
+def test_r3_block_until_ready_in_serving_module():
+    bad = {"repro.retrieval.loop": """
+import jax
+def drain(xs):
+    return [jax.block_until_ready(x) for x in xs]
+"""}
+    assert rules_of(lint_sources(bad)) == ["R3"]
+
+
+def test_inline_allow_pragma_suppresses():
+    ok = {"repro.retrieval.loop": """
+import jax
+def drain(xs):
+    # audit: allow-R3 latency probe needs a sync point
+    return [jax.block_until_ready(x) for x in xs]
+"""}
+    assert lint_sources(ok) == []
+
+
+# ---------------------------------------------------------------------
+# R4 — vector-key suffix literals stay inside store.py
+# ---------------------------------------------------------------------
+
+
+def test_r4_suffix_literal_outside_store():
+    bad = {"repro.retrieval.other": 'KEY = "vec" + "_int8"\n'}
+    assert rules_of(lint_sources(bad)) == ["R4"]
+
+
+def test_r4_clean_cases():
+    # semantic batch keys ending in _mask are a different domain
+    assert lint_sources(
+        {"repro.models.recsys": 'KEY = "seq_mask"\n'}) == []
+    # store.py owns the convention
+    assert lint_sources(
+        {"repro.retrieval.store": '_INT8 = "_int8"\n'}) == []
+
+
+# ---------------------------------------------------------------------
+# R5 — no module-level eager jnp computation
+# ---------------------------------------------------------------------
+
+
+def test_r5_module_level_jnp():
+    bad = {"repro.core.tables": """
+import jax.numpy as jnp
+TABLE = jnp.arange(1024)
+"""}
+    assert rules_of(lint_sources(bad)) == ["R5"]
+    ok = {"repro.core.tables": """
+import jax.numpy as jnp
+def table():
+    return jnp.arange(1024)
+"""}
+    assert lint_sources(ok) == []
+
+
+# ---------------------------------------------------------------------
+# the real tree is clean (the burn-down acceptance criterion)
+# ---------------------------------------------------------------------
+
+
+def test_repo_tree_has_no_ast_findings():
+    from pathlib import Path
+    from repro.analysis.astlint import lint_tree
+    src = Path(__file__).resolve().parents[1] / "src"
+    assert lint_tree(src) == []
+
+
+# ---------------------------------------------------------------------
+# jaxpr audit: seeded violations
+# ---------------------------------------------------------------------
+
+
+def test_jaxpr_flags_full_corpus_int8_upcast():
+    n, d = 64, 8
+
+    def bad(codes, scales, q):
+        # the eager HBM shadow: dequantise the WHOLE corpus
+        v = codes.astype(jnp.float32) * scales[:, None, None]
+        return jnp.einsum("qd,njd->nqj", q, v).sum()
+
+    closed = jax.make_jaxpr(bad)(
+        jnp.zeros((n, 4, d), jnp.int8), jnp.ones((n,), jnp.float32),
+        jnp.ones((3, d), jnp.float32))
+    fs, _ = audit_jaxpr(closed, label="seeded", corpus_rows=n,
+                        budget_bytes=1 << 30)
+    assert "J1" in rules_of(fs)
+
+
+def test_jaxpr_chunked_dequant_passes():
+    n, chunk, d = 64, 8, 8
+
+    def ok(codes, scales, q):
+        def one(i):
+            blk = jax.lax.dynamic_slice_in_dim(codes, i * chunk, chunk)
+            sc = jax.lax.dynamic_slice_in_dim(scales, i * chunk, chunk)
+            v = blk.astype(jnp.float32) * sc[:, None, None]
+            return jnp.einsum("qd,njd->nqj", q, v).sum()
+        return sum(one(i) for i in range(n // chunk))
+
+    closed = jax.make_jaxpr(ok)(
+        jnp.zeros((n, 4, d), jnp.int8), jnp.ones((n,), jnp.float32),
+        jnp.ones((3, d), jnp.float32))
+    fs, _ = audit_jaxpr(closed, label="seeded", corpus_rows=n,
+                        budget_bytes=1 << 30)
+    assert [f for f in fs if f.rule == "J1"] == []
+
+
+def test_jaxpr_flags_oversized_intermediate():
+    def blowup(q, docs):
+        return jnp.einsum("bqd,njd->bnqj", q, docs).max(-1).sum(-1)
+
+    q = jnp.ones((4, 8, 16), jnp.float32)
+    docs = jnp.ones((128, 32, 16), jnp.float32)
+    closed = jax.make_jaxpr(blowup)(q, docs)
+    fs, metrics = audit_jaxpr(closed, label="seeded", corpus_rows=10**9,
+                              budget_bytes=256 << 10)
+    assert "J2" in rules_of(fs)
+    # the [B, N, Q, J] sim tensor is the max live intermediate
+    assert metrics["max_live_bytes"] == 4 * 128 * 8 * 32 * 4
+
+
+def test_jaxpr_flags_host_callback():
+    def cb(x):
+        return jax.pure_callback(
+            lambda v: np.asarray(v) * 2, jax.ShapeDtypeStruct((4,),
+                                                              np.float32),
+            x)
+
+    closed = jax.make_jaxpr(cb)(jnp.ones((4,), jnp.float32))
+    fs, _ = audit_jaxpr(closed, label="seeded", corpus_rows=10**9,
+                        budget_bytes=1 << 30)
+    assert "J3" in rules_of(fs)
+
+
+def test_jaxpr_flags_weak_type_input():
+    closed = jax.make_jaxpr(lambda x, y: x * y)(
+        jnp.ones((4,), jnp.float32), 2.0)   # python scalar input
+    fs, _ = audit_jaxpr(closed, label="seeded", corpus_rows=10**9,
+                        budget_bytes=1 << 30)
+    assert "J4" in rules_of(fs)
+    closed = jax.make_jaxpr(lambda x, y: x * y)(
+        jnp.ones((4,), jnp.float32), jnp.float32(2.0))
+    fs, _ = audit_jaxpr(closed, label="seeded", corpus_rows=10**9,
+                        budget_bytes=1 << 30)
+    assert fs == []
+
+
+def test_real_ingest_scenario_is_clean():
+    fs, metrics = run_jaxpr_audit(names=["ingest"])
+    assert fs == []
+    assert 0 < metrics["ingest"]["max_live_bytes"] \
+        <= metrics["ingest"]["budget_bytes"]
+
+
+# ---------------------------------------------------------------------
+# baseline + CLI gate
+# ---------------------------------------------------------------------
+
+
+def test_baseline_split():
+    f1 = Finding("R1", "a.py", 1, "x", "m")
+    f2 = Finding("R3", "b.py", 2, "y", "m")
+    gated, baselined = apply_baseline([f1, f2], {f2.fingerprint})
+    assert gated == [f1] and baselined == [f2]
+
+
+def test_cli_exit_codes(tmp_path):
+    from repro.analysis.__main__ import main
+    # a fake src tree with one R1 violation
+    pkg = tmp_path / "src" / "repro" / "retrieval"
+    pkg.mkdir(parents=True)
+    for p in (pkg.parent, pkg):
+        (p / "__init__.py").write_text("")
+    (pkg / "bad.py").write_text(
+        "import jax\n"
+        "@jax.jit\n"
+        "def body(x):\n"
+        "    return x + 1\n")
+    report = tmp_path / "report.json"
+    baseline = tmp_path / "baseline.json"
+    baseline.write_text(json.dumps({"allow": []}))
+    rc = main(["--check", "--no-jaxpr", "--src", str(tmp_path / "src"),
+               "--baseline", str(baseline), "--report", str(report)])
+    assert rc == 1
+    rep = json.loads(report.read_text())
+    assert rep["n_gated"] == 1 and rep["gated"][0]["rule"] == "R1"
+    # baselining the finding flips the gate to green
+    baseline.write_text(json.dumps(
+        {"allow": [rep["gated"][0]["fingerprint"]]}))
+    rc = main(["--check", "--no-jaxpr", "--src", str(tmp_path / "src"),
+               "--baseline", str(baseline), "--report", str(report)])
+    assert rc == 0
+    assert json.loads(report.read_text())["n_baselined"] == 1
+
+
+def test_cli_green_on_real_tree_ast_layer():
+    from repro.analysis.__main__ import main
+    assert main(["--check", "--no-jaxpr"]) == 0
+
+
+# ---------------------------------------------------------------------
+# satellites: dispatch reset/discovery, trace attribution
+# ---------------------------------------------------------------------
+
+
+def test_dispatch_reset_counts():
+    from repro.kernels import dispatch as DSP
+    DSP.record("maxsim_scan", "ref")
+    DSP.record("pooling", "jnp")
+    assert DSP.dispatch_count("maxsim_scan") >= 1
+    DSP.reset_counts("maxsim_scan")
+    assert DSP.dispatch_count("maxsim_scan") == 0
+    assert DSP.dispatch_count("pooling") >= 1
+    DSP.reset_counts()
+    assert DSP.dispatch_count("pooling") == 0
+
+
+def test_registration_discovery_matches_known_families():
+    from repro.kernels import dispatch as DSP
+    mods = DSP.registration_modules()
+    assert "repro.kernels.maxsim.ops" in mods
+    assert "repro.kernels.pooling.ops" in mods
+    assert "repro.kernels.embed_bag.ops" in mods
+    assert all(m.startswith("repro.kernels.") and m.endswith(".ops")
+               for m in mods)
+    assert set(DSP.op_names()) >= {"maxsim_scan", "maxsim_rerank",
+                                   "ivf_route", "pooling", "embed_bag"}
+
+
+def test_no_retrace_reports_which_jit():
+    from repro.retrieval import tracing
+
+    def fake_serving_body():
+        tracing.record_trace()
+
+    with pytest.raises(AssertionError, match="fake_serving_body"):
+        with tracing.no_retrace("unit"):
+            fake_serving_body()
+
+
+def test_record_trace_thread_safe():
+    import threading
+    from repro.retrieval import tracing
+    before = tracing.trace_count()
+    threads = [threading.Thread(
+        target=lambda: [tracing.record_trace("t") for _ in range(200)])
+        for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert tracing.trace_count() - before == 8 * 200
