@@ -24,6 +24,15 @@ numbers on TPU, a one-shot stream/matmul microbenchmark elsewhere).
 ``benchmarks/run.py rerank_kernel_vs_ref`` prints this predicted ratio
 next to the measured one.
 
+The TIERED roofline (``tiered_overlap_roofline`` + ``measured_h2d_bw``)
+extends the same discipline across the host boundary: cold-segment
+host -> device bytes (the ``tier-transfer`` entry of
+``cascade_hbm_bytes``) are billed at the measured ``device_put``
+bandwidth, predicting the synchronous-fetch cost (scan + transfer,
+exposed) vs the prefetch-overlapped cost (max of the two, hidden);
+``benchmarks/run.py tiered_qps`` prints predicted vs measured for its
+budget x hit-rate ladder.
+
 Usage: PYTHONPATH=src python -m benchmarks.roofline [--json PATH] [--md]
        PYTHONPATH=src python -m benchmarks.roofline --candidate-path \\
            [--n-docs 1000000] [--batch 16] [--prefetch-k 256] [--top-k 100]
@@ -87,6 +96,72 @@ def _measure_matmul_flops() -> float:
         f(a, b).block_until_ready()
         best = min(best, _time.perf_counter() - t0)
     return 2.0 * n ** 3 / best
+
+
+_H2D_BW: float | None = None
+
+
+def measured_h2d_bw(force: bool = False) -> float:
+    """Best-of-3 host -> device transfer bandwidth (bytes/s) of the live
+    backend, probed as a timed ``jax.device_put`` of a 64 MB numpy buffer
+    — the exact operation the tiered store's promotion path performs, so
+    the tiered roofline's transfer term is calibrated to what an eviction
+    miss actually costs here (PCIe/DMA on accelerators, a memcpy-ish copy
+    on CPU hosts). Cached per process."""
+    global _H2D_BW
+    if _H2D_BW is not None and not force:
+        return _H2D_BW
+    import time as _time
+    import numpy as _np
+    import jax
+    a = _np.ones((16 << 20,), _np.float32)             # 64 MB
+    jax.device_put(a).block_until_ready()
+    best = float("inf")
+    for _ in range(3):
+        t0 = _time.perf_counter()
+        jax.device_put(a).block_until_ready()
+        best = min(best, _time.perf_counter() - t0)
+    _H2D_BW = a.nbytes / best
+    return _H2D_BW
+
+
+def tiered_overlap_roofline(scan_bytes: float, scan_flops: float,
+                            transfer_bytes: float, hit_rate: float,
+                            h2d_bw: float | None = None,
+                            t_scan_s: float | None = None) -> dict:
+    """Predicted per-query cost of the tiered scan, synchronous-fetch vs
+    prefetch-overlapped, from first principles:
+
+    - ``t_scan``: the device-side scan roofline ``max(bytes/bw,
+      flops/peak)`` over the scanned (device-resident) bytes;
+    - ``t_xfer``: the EXPECTED host->device bill per query —
+      ``(1 - hit_rate) * transfer_bytes`` (the ``tier-transfer`` entry of
+      ``multistage.cascade_hbm_bytes``) at the measured ``device_put``
+      bandwidth.
+
+    The synchronous baseline pays ``t_scan + t_xfer`` (the transfer sits
+    exposed on the critical path); with async prefetch over a visible
+    arrival queue the worker's copy lands under compute and steady state
+    is ``max(t_scan, t_xfer)``. ``benchmarks/run.py tiered_qps`` prints
+    this prediction next to the measured ladder.
+
+    ``h2d_bw`` overrides the measured ``device_put`` bandwidth — pass
+    the emulated link rate when the A/B runs against
+    ``TieredEngine(link_bw=...)`` so the prediction models the link the
+    measurement actually crossed. ``t_scan_s`` likewise substitutes a
+    measured per-query scan time for the byte/flop roofline when the
+    scan is dispatch-bound (tiny per-segment calls on a CPU host)."""
+    peaks = measured_peaks()
+    bw = h2d_bw if h2d_bw else measured_h2d_bw()
+    t_scan = t_scan_s if t_scan_s else max(scan_bytes / peaks["hbm_bw"],
+                                           scan_flops / peaks["flops"])
+    t_xfer = (1.0 - hit_rate) * transfer_bytes / bw
+    sync_s = t_scan + t_xfer
+    overlap_s = max(t_scan, t_xfer)
+    return {"t_scan_s": t_scan, "t_xfer_s": t_xfer,
+            "sync_s": sync_s, "overlap_s": overlap_s,
+            "speedup": sync_s / max(overlap_s, 1e-30),
+            "h2d_bw": bw, "peaks": dict(peaks)}
 
 
 def measured_peaks(force: bool = False) -> dict:

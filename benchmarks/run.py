@@ -1106,6 +1106,244 @@ def _persist_routed_scan(out: dict) -> None:
                      "quick": out["quick"]})
 
 
+def tiered_qps(table: dict, quick: bool = False):
+    """Corpus beyond HBM (ROADMAP item 2): QPS through the tiered
+    residency engine (``retrieval.tiering.TieredEngine``) at corpus sizes
+    of 1x/2x/4x/8x a fixed HBM budget, under hit-rate-controlled traffic
+    (80/95/99% of queries land on a hot set that fits in budget; cold
+    queries force a host->device promote + an LRU demote), async-prefetch
+    overlap vs synchronous fetch, interleaved-min A/B:
+
+    - at 4x budget / 95% hit rate, overlap QPS >= 1.3x sync (asserted —
+      the transfer roundtrip must actually hide under MaxSim compute)
+    - tiered results BITWISE equal to fully-resident search over the
+      identical trace, both overlap and sync (asserted)
+    - zero steady-state retraces across every timed trace — residency is
+      placement, never shape (asserted)
+    - predicted-vs-measured vs the ``tiered_overlap_roofline`` transfer
+      model and ``cascade_hbm_bytes(cold_rows=...)``'s freight bill
+
+    The corpus carries the cascade's real freight asymmetry: a fat
+    rerank-only "initial" slab that must MOVE on a tier swap but is only
+    gathered at prefetch_k rows, over a thin "mean_pooling" scan — which
+    is exactly why transfers are expensive relative to a scan and why
+    hiding them pays. The host<->device link is EMULATED
+    (``TieredEngine(link_bw=...)``, calibrated so a miss roundtrip costs
+    ~10 scan dispatches): on the hosts this benchmark must gate on, a
+    ``device_put`` aliases host memory (~free), so the native A/B would
+    measure nothing — the pace rides on whichever thread performs the
+    transfer, which is exactly the scheduling property under test. The
+    ledger records the emulated rate next to the measured native one.
+
+    Rows persist to BENCH_tiered.json at the repo root by git sha."""
+    import jax.numpy as jnp
+    from repro.core import multistage as MST
+    from repro.retrieval import tracing
+    from repro.retrieval.retriever import Retriever
+    from repro.retrieval.store import VectorStore
+    try:
+        from benchmarks import roofline as RF
+    except ImportError:
+        import roofline as RF
+
+    d, D_scan, D_full = 64, 4, 96
+    B, Q, prefetch_k, topk = 4, 8, 16, 4
+    R = 256 if quick else 512       # rows per segment
+    m_res = 6                       # segments the budget holds: hot set
+    #                                 + in-use cold + in-flight prefetches
+    ladder = (1, 2, 4, 8)           # corpus = x * budget
+    hit_rates = (0.80, 0.95, 0.99)
+    rounds = 2 if quick else 3
+    PACE = 14                       # miss roundtrip ~= PACE scan calls
+    st = MST.two_stage(prefetch_k, topk)
+
+    def seg_arrays(seed, rows):
+        r2 = np.random.default_rng(1000 + seed)
+        full = r2.standard_normal((rows, D_full, d)).astype(np.float32)
+        pooled = full.reshape(rows, D_scan, D_full // D_scan, d).mean(2)
+        return {"initial": full, "mean_pooling": pooled}
+
+    def corpus(n_segs, rows):
+        r = Retriever(VectorStore(seg_arrays(0, rows), rows),
+                      capacity=rows)
+        for s in range(1, n_segs):
+            r.store.add_pages(VectorStore(seg_arrays(s, rows), rows))
+        assert len(r.store.segments) == n_segs
+        return r
+
+    # --- calibrate the emulated link to this host's dispatch floor -----
+    qr = np.random.default_rng(9)
+    q = jnp.asarray(qr.standard_normal((B, Q, d)).astype(np.float32))
+    qm = jnp.ones((B, Q), bool)
+    probe = corpus(2, R)
+    seg_bytes = probe.store.segments[0].nbytes
+    with probe.tiered(4 * seg_bytes) as eng:
+        eng.search(q, qm, stages=st, scope=[0])          # compile
+        t0 = time.time()
+        for _ in range(8):
+            eng.search(q, qm, stages=st, scope=[0])
+        t_scan = (time.time() - t0) / 8
+    link_bw = 2 * seg_bytes / (PACE * t_scan)
+    del probe
+
+    def make_trace(n_segs, hit, length, ci0=0):
+        # deterministic hit-rate control: every round(1/(1-hit))-th query
+        # visits the next cold segment (the cursor ``ci0`` carries across
+        # repeat rounds so re-timing a trace keeps MISSING instead of
+        # warming yesterday's cold set into the budget); the rest stay on
+        # the hot segment. The budget (m_res) holds hot + in-use cold +
+        # in-flight prefetches, so LRU never evicts the hot set and the
+        # measured hit rate tracks the target instead of collapsing.
+        period = max(2, int(round(1.0 / (1.0 - hit))))
+        cold = list(range(1, n_segs)) or [0]
+        trace, ci = [], ci0
+        for t in range(length):
+            if n_segs > 1 and t % period == period - 1:
+                trace.append([cold[ci % len(cold)]])
+                ci += 1
+            else:
+                trace.append([0])
+        return trace, ci
+
+    W = 16                       # prefetch lookahead (queries) — covers
+    #                              the PACE-call roundtrip of one miss
+
+    def run_trace(eng, trace, overlap):
+        outs = []
+        if overlap:
+            for w in range(min(W, len(trace))):
+                eng.prefetch(trace[w])
+        t0 = time.time()
+        for t, scope in enumerate(trace):
+            if overlap and t + W < len(trace):
+                eng.prefetch(trace[t + W])
+            outs.append(eng.search(q, qm, stages=st, scope=scope,
+                                   overlap=overlap))
+        return time.time() - t0, outs
+
+    def bitwise(a, b):
+        return all(np.array_equal(sa, sb) and np.array_equal(ia, ib)
+                   for (sa, ia), (sb, ib) in zip(a, b))
+
+    out = {"quick": quick, "rows_per_segment": R, "m_res": m_res,
+           "batch": B, "hit_rates": list(hit_rates),
+           "seg_bytes": seg_bytes, "budget_bytes": m_res * seg_bytes,
+           "link_bw": link_bw, "t_scan_s": t_scan,
+           "native_h2d_bw": RF.measured_h2d_bw(), "ladder": []}
+    budget = m_res * seg_bytes
+    for x in ladder:
+        n_segs = m_res * x
+        r = corpus(n_segs, R)
+        with r.tiered(budget, link_bw=link_bw) as eng:
+            # warm: compile scan/rerank/merge on a hot and a cold scope
+            eng.search(q, qm, stages=st, scope=[0])
+            eng.search(q, qm, stages=st, scope=[n_segs - 1])
+            warm = tracing.trace_count()
+            for hit in hit_rates:
+                period = max(2, int(round(1.0 / (1.0 - hit))))
+                T = max(80 if quick else 160, 4 * period)
+                best = {"overlap": float("inf"), "sync": float("inf")}
+                sync_misses, sync_q, ci = 0, 0, 0
+                for _ in range(rounds):              # interleaved-min A/B
+                    # every timed run gets a FRESH cold cursor: replaying
+                    # one trace would warm its cold set into the budget
+                    # and the second mode would measure pure hits.
+                    # Segments are homogeneous, so fresh traces cost the
+                    # same; results parity is asserted against the
+                    # fully-resident oracle below on a shared trace.
+                    for mode, ov in (("overlap", True), ("sync", False)):
+                        trace, ci = make_trace(n_segs, hit, T, ci)
+                        h0 = dict(eng.stats)
+                        dt, _o = run_trace(eng, trace, ov)
+                        best[mode] = min(best[mode], dt)
+                        if mode == "sync":
+                            # query-level hit rate, and only from the
+                            # un-prefetched mode (a prefetched miss is
+                            # resident by acquire time and counts as a
+                            # hit; the rerank stage re-acquires the scan
+                            # stage's segment, which is always a hit)
+                            sync_misses += (eng.stats["misses"]
+                                            - h0["misses"])
+                            sync_q += len(trace)
+                row = {"corpus_x": x, "n_segments": n_segs,
+                       "hit_target": hit,
+                       "hit_measured": 1.0 - sync_misses / max(sync_q, 1),
+                       "qps_overlap": T * B / best["overlap"],
+                       "qps_sync": T * B / best["sync"],
+                       "speedup": best["sync"] / best["overlap"]}
+                out["ladder"].append(row)
+                _emit(f"tiered_qps_{x}x_h{int(hit*100)}",
+                      best["overlap"] / T,
+                      f"speedup={row['speedup']:.2f}x "
+                      f"hit={row['hit_measured']:.2f}")
+            retraces = tracing.trace_count() - warm
+            assert retraces == 0, (
+                f"tiered timed loops retraced {retraces}x at {x}x budget "
+                "— residency leaked into a trace axis")
+            out["retraces"] = retraces
+        # fully-resident oracle over the SAME trace (budget covers the
+        # whole corpus, so after the first pass every access hits) —
+        # tiered residency must be bitwise invisible to results
+        with r.tiered((n_segs + 1) * seg_bytes) as ref:
+            trace, _ = make_trace(n_segs, 0.95, 80)
+            _, ref_outs = run_trace(ref, trace, False)
+            assert not ref.stats["demotions"], "oracle engine evicted"
+        with r.tiered(budget) as eng:
+            for ov in (True, False):
+                _, got = run_trace(eng, trace, ov)
+                assert bitwise(got, ref_outs), (
+                    f"tiered (overlap={ov}) diverged from fully-resident "
+                    f"search at {x}x budget — eviction corrupted results")
+        out["parity_resident"] = True
+        del r
+
+    # --- predicted-vs-measured at the gate point (4x / 95%) ------------
+    gate = next(row for row in out["ladder"]
+                if row["corpus_x"] == 4 and row["hit_target"] == 0.95)
+    out["gate"] = dict(gate)
+    dims = {"initial": D_full, "mean_pooling": D_scan}
+    hbm = MST.cascade_hbm_bytes(
+        R, Q, d, st, dims, batch=B, cold_rows=R,
+        bytes_per_coord={"initial": 4, "mean_pooling": 4})
+    xfer_pred = next(s["total_bytes"] for s in hbm["stages"]
+                     if s["kind"] == "tier-transfer")
+    scan_bytes = next(s["total_bytes"] for s in hbm["stages"]
+                      if s["kind"] == "scan")
+    flops = 2.0 * B * Q * R * D_scan * d
+    pred = RF.tiered_overlap_roofline(scan_bytes, flops, 2 * seg_bytes,
+                                      0.95, h2d_bw=link_bw,
+                                      t_scan_s=t_scan)
+    out["roofline"] = {"xfer_bytes_pred": xfer_pred,
+                       "seg_bytes_measured": seg_bytes,
+                       "speedup_pred": pred["speedup"],
+                       "speedup_measured": gate["speedup"],
+                       "link_bw": link_bw}
+    print(f"tiered roofline @4x/95%: predicted speedup "
+          f"{pred['speedup']:.2f}x vs measured {gate['speedup']:.2f}x; "
+          f"freight {xfer_pred/1e6:.1f}MB modelled vs "
+          f"{seg_bytes/1e6:.1f}MB/segment measured "
+          f"(emulated link {link_bw/1e9:.2f} GB/s, native h2d "
+          f"{out['native_h2d_bw']/1e9:.1f} GB/s)")
+    assert gate["speedup"] >= 1.3, (
+        f"overlap speedup {gate['speedup']:.2f}x < 1.3x at 4x budget / "
+        "95% hit — prefetch is not hiding the transfer roundtrip")
+    table["tiered_qps"] = out
+    _persist_tiered(out)
+
+
+def _persist_tiered(out: dict) -> None:
+    """Append this run's tiered residency ladder to BENCH_tiered.json
+    (committed-ledger convention: see ``_persist_ledger``)."""
+    _persist_ledger("BENCH_tiered.json",
+                    {"ladder": out["ladder"], "gate": out["gate"],
+                     "parity_resident": out["parity_resident"],
+                     "retraces": out["retraces"],
+                     "roofline": out["roofline"],
+                     "budget_bytes": out["budget_bytes"],
+                     "rows_per_segment": out["rows_per_segment"],
+                     "quick": out["quick"]})
+
+
 # named suites for --suite: subsets a CI job or a dev loop can run
 # without paying for the whole harness (names match the fns above)
 SUITES = {
@@ -1116,6 +1354,7 @@ SUITES = {
     "serving": ("dynamic_corpus", "serving_tail_latency",
                 "mixed_tenant_tail_latency", "ingest_throughput"),
     "routed": ("routed_scan",),
+    "tiered": ("tiered_qps",),
 }
 
 
@@ -1136,15 +1375,17 @@ def main() -> None:
         names = [n for s in args.suite for n in SUITES[s]]
     elif args.quick:
         names = ["eq1_cost_model", "kernel_vs_ref_scan",
-                 "rerank_kernel_vs_ref", "routed_scan", "dynamic_corpus",
-                 "serving_tail_latency", "mixed_tenant_tail_latency",
-                 "ingest_throughput", "kernel_micro"]
+                 "rerank_kernel_vs_ref", "routed_scan", "tiered_qps",
+                 "dynamic_corpus", "serving_tail_latency",
+                 "mixed_tenant_tail_latency", "ingest_throughput",
+                 "kernel_micro"]
     else:
         names = ["table2_quality_qps", "scope_scaling", "eq1_cost_model",
                  "pooling_ablation", "hygiene_ablation", "kernel_micro",
                  "kernel_vs_ref_scan", "rerank_kernel_vs_ref",
-                 "routed_scan", "dynamic_corpus", "serving_tail_latency",
-                 "mixed_tenant_tail_latency", "ingest_throughput"]
+                 "routed_scan", "tiered_qps", "dynamic_corpus",
+                 "serving_tail_latency", "mixed_tenant_tail_latency",
+                 "ingest_throughput"]
     from repro.kernels import dispatch as DSP
     for name in names:
         # dispatch counters are per-process; without a reset a counter

@@ -569,7 +569,12 @@ class Analyzer:
     def _rule_r3(self) -> list:
         out = []
         for mi in self.modules.values():
-            serving = mi.name.startswith(R.R3_SERVING_SCOPE)
+            # host-side serving-module enforcement skips the sanctioned
+            # host-synchronous modules (the tiering residency manager);
+            # traced scope (in_traced) is still checked there like
+            # everywhere else
+            serving = (mi.name.startswith(R.R3_SERVING_SCOPE)
+                       and not mi.name.startswith(R.R3_HOST_EXEMPT_MODULES))
             for fi in mi.funcs.values():
                 in_traced = fi.fid in self.traced
                 if not (in_traced or serving):

@@ -231,11 +231,34 @@ def scenario_ingest():
     return closed, dict(corpus_rows=_CAPACITY, budget_bytes=_INGEST_BUDGET)
 
 
+def scenario_tiered():
+    """The tiered per-segment scan body (``engine.make_segment_scan_fn``)
+    — the executable ``retrieval.tiering.TieredEngine`` dispatches once
+    per scope segment. Same geometry and J2 budget as the joint cascade:
+    per-segment streaming must not cost intermediates the joint body
+    doesn't (the whole point is LESS resident at once, not more). The
+    traced int32 ``offset`` input is also what J4 proves is not
+    weak-typed — segment identity rides as data, not a cache axis."""
+    from repro.retrieval import engine
+    from repro.retrieval.store import as_filter_arrays, filter_words
+    r, q, q_mask = _retriever()
+    fn_store = r.store.segments[0].vectors
+    seg_body = engine.make_segment_scan_fn(
+        r._normalize(_stages_scan()), _CAPACITY)
+    fspec = as_filter_arrays(None, filter_words(fn_store))
+    off = jnp.asarray(0, jnp.int32)
+    closed = jax.make_jaxpr(
+        lambda s, qq, qm, ft, o: seg_body(s, qq, qm, ft, o))(
+            fn_store, q, q_mask, fspec, off)
+    return closed, dict(corpus_rows=_CAPACITY, budget_bytes=_SERVE_BUDGET)
+
+
 SCENARIOS = {
     "scan_int8": scenario_scan_int8,
     "rerank_fused": scenario_rerank_fused,
     "routed": scenario_routed,
     "ingest": scenario_ingest,
+    "tiered": scenario_tiered,
 }
 
 

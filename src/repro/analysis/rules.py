@@ -29,6 +29,14 @@ R2_OPS_MODULE = re.compile(r"^repro\.kernels\.[A-Za-z0-9_]+\.ops$")
 # only flag inside traced scope, where they would either crash at trace
 # time on real tracers or silently bake/sync.
 R3_SERVING_SCOPE = ("repro.retrieval.",)
+# Modules whose HOST-SIDE code is legitimately synchronous: the tiered
+# residency manager's whole job is host<->device transfers and worker
+# waits (promote/evict/prefetch run OFF the query's critical path by
+# design — a thread, not async dispatch). Scoped by MODULE, not pragma
+# comments, so the exemption is one auditable list; traced scope inside
+# these modules is still fully enforced (their jitted combine bodies obey
+# R3 like every other serving jit).
+R3_HOST_EXEMPT_MODULES = ("repro.retrieval.tiering",)
 R3_HOST_SYNC_CALLS = {
     "jax.block_until_ready": "blocks async dispatch",
     "jax.device_get": "device->host transfer",
@@ -52,7 +60,9 @@ RULE_DOCS = {
           "tracing.record_trace() — invisible to the no-retrace counter",
     "R2": "kernel ops wrapper never calls dispatch.record(), or a "
           "dispatch.register() call sits outside registry discovery",
-    "R3": "host-sync idiom in traced scope / serving module",
+    "R3": "host-sync idiom in traced scope / serving module (host-side "
+          "code in R3_HOST_EXEMPT_MODULES is exempt; traced scope never "
+          "is)",
     "R4": "stringly vector-key suffix literal outside the VectorSchema",
     "R5": "module-level eager jnp computation at import time",
     "J1": "int8 operand upcast to >=f32 at full-corpus shape",

@@ -301,7 +301,8 @@ DEFAULT_SCAN_TOPK_CHUNK = 1024
 def cascade_hbm_bytes(n_docs: int, q_tokens: int, dim: int, stages: tuple,
                       store_dims: dict, vec_dims: dict | None = None,
                       *, batch: int = 1,
-                      bytes_per_coord: dict | None = None) -> dict:
+                      bytes_per_coord: dict | None = None,
+                      cold_rows: int = 0) -> dict:
     """Per-stage HBM byte model for one query BATCH through a cascade —
     the BYTES companion of ``qps_cost_model``'s madds. The scan and
     candidate paths are memory-bound, so predicted stage time is
@@ -326,6 +327,16 @@ def cascade_hbm_bytes(n_docs: int, q_tokens: int, dim: int, stages: tuple,
     ``bytes_per_coord`` maps vector name -> stored bytes per coordinate
     (default 2 = bf16; pass 1 for int8-quantised names). Query-side reads
     (``B * Q * d``) are noise at corpus scale and not billed.
+
+    - **tier-transfer** (``cold_rows`` > 0): the tiered store's
+      host -> device promotion bill — ``cold_rows`` rows of the FULL
+      per-row storage (every named vector at its stored precision, plus
+      f32 scale streams for int8 names: promotion moves a segment's whole
+      vectors dict, not just the scanned name). This entry crosses PCIe,
+      not HBM: ``benchmarks.roofline.tiered_overlap_roofline`` bills it
+      at the measured host->device stream bandwidth and predicts when
+      async prefetch hides it (``max(T_scan, T_xfer)``) vs the
+      synchronous-fetch cost (``T_scan + T_xfer``).
 
     - **routed-scan** (scan stage with ``n_probe``/``n_clusters`` set):
       one f32 centroid read (``K * d * 4``) plus a candidate-style gather
@@ -385,5 +396,18 @@ def cascade_hbm_bytes(n_docs: int, q_tokens: int, dim: int, stages: tuple,
                                 + entry["score_write_bytes"])
         per_stage.append(entry)
         cand = k
+    if cold_rows > 0:
+        row_bytes = 0
+        for name, d_vecs in store_dims.items():
+            vd = dim if vec_dims is None else \
+                min(dim, vec_dims.get(name, dim))
+            b = bpc.get(name, 2)
+            row_bytes += d_vecs * vd * b
+            if b == 1:            # int8 names ship their f32 scales too
+                row_bytes += d_vecs * 4
+        xfer = cold_rows * row_bytes
+        per_stage.append({"stage": "host->device", "kind": "tier-transfer",
+                          "read_bytes": xfer, "score_write_bytes": 0,
+                          "total_bytes": xfer})
     return {"stages": per_stage,
             "total_bytes": sum(e["total_bytes"] for e in per_stage)}

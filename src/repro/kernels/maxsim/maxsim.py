@@ -122,6 +122,119 @@ def maxsim_pallas(q: jax.Array, q_mask: jax.Array, docs: jax.Array,
     )(*args)
 
 
+def _maxsim_db_kernel(q_ref, qm_ref, docs_hbm, dm_hbm, out_ref, docs_buf,
+                      dm_buf, sem, *, chunk: int, n_chunks: int,
+                      scales_hbm=None, scale_buf=None):
+    """Manually double-buffered scan step: chunk i+1's HBM -> VMEM DMA is
+    in flight while chunk i runs on the MXU (same per-chunk math as
+    ``_maxsim_kernel`` over a [chunk, D, d] tile). Grid is (n_chunks,);
+    docs/mask/scales stay in HBM (``pl.ANY`` BlockSpecs) and stream
+    through a 2-slot VMEM scratch + DMA-semaphore pair — the kernel-level
+    twin of ``retrieval.tiering``'s segment-granularity prefetch."""
+    i = pl.program_id(0)
+
+    def _start(slot, ci):
+        base = ci * chunk
+        pltpu.make_async_copy(docs_hbm.at[pl.ds(base, chunk)],
+                              docs_buf.at[slot], sem.at[slot, 0]).start()
+        pltpu.make_async_copy(dm_hbm.at[pl.ds(base, chunk)],
+                              dm_buf.at[slot], sem.at[slot, 1]).start()
+        if scales_hbm is not None:
+            pltpu.make_async_copy(scales_hbm.at[pl.ds(base, chunk)],
+                                  scale_buf.at[slot],
+                                  sem.at[slot, 2]).start()
+
+    @pl.when(i == 0)
+    def _warmup():                 # first chunk has nothing to hide under
+        _start(0, 0)
+
+    @pl.when(i + 1 < n_chunks)
+    def _prefetch():               # the overlap: next fetch under this MXU
+        _start((i + 1) % 2, i + 1)
+
+    slot = i % 2
+    base = i * chunk
+    pltpu.make_async_copy(docs_hbm.at[pl.ds(base, chunk)],
+                          docs_buf.at[slot], sem.at[slot, 0]).wait()
+    pltpu.make_async_copy(dm_hbm.at[pl.ds(base, chunk)],
+                          dm_buf.at[slot], sem.at[slot, 1]).wait()
+    if scales_hbm is not None:
+        pltpu.make_async_copy(scales_hbm.at[pl.ds(base, chunk)],
+                              scale_buf.at[slot], sem.at[slot, 2]).wait()
+
+    q = q_ref[...].astype(jnp.float32)                  # [B, Q, d]
+    docs = docs_buf[slot]                               # [chunk, D, d]
+    if scale_buf is not None:
+        docs = docs.astype(jnp.float32) * scale_buf[slot][..., None]
+    docs = docs.astype(jnp.float32)
+    # sim[b, q, n, j] = <q_bq, docs_nj> — contract d on the MXU
+    sim = jax.lax.dot_general(
+        q, docs, (((2,), (2,)), ((), ())),
+        preferred_element_type=jnp.float32)             # [B, Q, chunk, D]
+    sim = jnp.where(dm_buf[slot][None, None, :, :] > 0, sim, NEG)
+    best = jnp.max(sim, axis=3)                         # [B, Q, chunk]
+    best = jnp.where(qm_ref[...][:, :, None] > 0,
+                     jnp.maximum(best, NEG / 2), 0.0)
+    out_ref[...] = jnp.sum(best, axis=1)                # [B, chunk]
+
+
+def maxsim_pallas_db(q: jax.Array, q_mask: jax.Array, docs: jax.Array,
+                     doc_mask: jax.Array, *, chunk: int,
+                     scales: jax.Array | None = None,
+                     interpret: bool = False) -> jax.Array:
+    """Double-buffered streaming scan: q [B,Q,d], docs [N,D,d]
+    (f32/bf16/int8 with ``scales`` [N,D]), doc_mask [N,D] -> [B,N] f32.
+
+    N must be a chunk multiple (callers pad with fully-masked rows). The
+    query block is VMEM-resident for the whole grid; each grid step DMAs
+    one [chunk, D, d] corpus tile into the idle half of a 2-slot scratch
+    while the MXU scores the other half, so steady-state wall clock is
+    max(T_fetch, T_compute) per chunk instead of their sum. Semantics are
+    allclose-level with ``maxsim_pallas`` over the same rows (identical
+    per-element math; reduction grouping differs), and the jnp reference
+    stays the bitwise contract — this path only dispatches natively on
+    TPU (``ops.maxsim_scores_chunked`` keeps interpret-mode hosts on the
+    automatic-pipeline kernel)."""
+    B, Q, d = q.shape
+    N, D, dd = docs.shape
+    assert d == dd and N % chunk == 0, (q.shape, docs.shape, chunk)
+    n_chunks = N // chunk
+    dm = doc_mask.astype(jnp.float32)
+    in_specs = [
+        pl.BlockSpec((B, Q, d), lambda i: (0, 0, 0)),    # q: resident
+        pl.BlockSpec((B, Q), lambda i: (0, 0)),          # q_mask
+        pl.BlockSpec(memory_space=pl.ANY),               # docs stay in HBM
+        pl.BlockSpec(memory_space=pl.ANY),               # doc_mask
+    ]
+    args = [q, q_mask.astype(jnp.float32), docs, dm]
+    scratch = [pltpu.VMEM((2, chunk, D, d), docs.dtype),
+               pltpu.VMEM((2, chunk, D), jnp.float32),
+               pltpu.SemaphoreType.DMA((2, 3))]
+    kernel = functools.partial(_maxsim_db_kernel, chunk=chunk,
+                               n_chunks=n_chunks)
+    if scales is not None:
+        in_specs.append(pl.BlockSpec(memory_space=pl.ANY))
+        args.append(scales.astype(jnp.float32))
+        scratch.insert(2, pltpu.VMEM((2, chunk, D), jnp.float32))
+
+        def kernel(q_ref, qm_ref, docs_hbm, dm_hbm, s_hbm, out_ref,
+                   docs_buf, dm_buf, scale_buf, sem):
+            _maxsim_db_kernel(q_ref, qm_ref, docs_hbm, dm_hbm, out_ref,
+                              docs_buf, dm_buf, sem, chunk=chunk,
+                              n_chunks=n_chunks, scales_hbm=s_hbm,
+                              scale_buf=scale_buf)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(n_chunks,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((B, chunk), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((B, N), jnp.float32),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(*args)
+
+
 def _rerank_kernel(ids_ref, q_ref, qm_ref, docs_ref, dm_ref, out_ref,
                    acc_ref, *, n_d_blocks: int, scale_ref=None):
     del ids_ref            # consumed by the BlockSpec index maps, not here

@@ -100,7 +100,24 @@ def _run_static(args, cfg, bench, store, stages, int8_on):
 
     if args.tenants > 1:
         return _run_static_tenants(args, cfg, bench, stages, int8_on)
-    retriever = Retriever(store, routing=args.n_clusters or None)
+    retriever = None
+    if args.snapshot_dir:
+        from repro.training.checkpoint import latest_step
+        if latest_step(args.snapshot_dir) is not None:
+            t0 = time.time()
+            retriever = Retriever.from_snapshot(args.snapshot_dir)
+            print(f"cold-start: restored {retriever.n_docs} pages from "
+                  f"{args.snapshot_dir} in {time.time()-t0:.2f}s "
+                  "(bitwise the saved corpus; no re-ingest)")
+    if retriever is None:
+        retriever = Retriever(store, routing=args.n_clusters or None)
+        if args.snapshot_dir:
+            t0 = time.time()
+            path = retriever.snapshot(args.snapshot_dir)
+            print(f"snapshot -> {path} ({time.time()-t0:.2f}s; restart "
+                  "with the same --snapshot-dir to cold-start from it)")
+    if args.hbm_budget > 0:
+        return _run_tiered(args, bench, retriever, stages)
     q = jnp.asarray(bench.queries)
     qm = jnp.asarray(bench.query_mask)
     retriever.search(q, qm, stages=stages)                    # compile
@@ -121,6 +138,34 @@ def _run_static(args, cfg, bench, store, stages, int8_on):
         ("/int8" if int8_on else "")
     print(f"{args.stages}-stage [{scan}]: QPS={qps:.1f}  " +
           "  ".join(f"{k}={v:.3f}" for k, v in metrics.items()))
+
+
+def _run_tiered(args, bench, retriever, stages):
+    """Static QPS through the tiered residency engine: device-resident
+    segment bytes capped at ``--hbm-budget``, cold segments spilled to
+    host RAM, async-prefetch overlap vs synchronous fetch both timed."""
+    import jax.numpy as jnp
+
+    store_bytes = sum(s.nbytes for s in retriever.store.segments)
+    q = jnp.asarray(bench.queries)
+    qm = jnp.asarray(bench.query_mask)
+    with retriever.tiered(args.hbm_budget) as eng:
+        for overlap in (True, False):
+            eng.search(q, qm, stages=stages, overlap=overlap)  # warm
+            t0 = time.time()
+            for _ in range(3):
+                eng.search(q, qm, stages=stages, overlap=overlap)
+            qps = 3 * len(q) / (time.time() - t0)
+            mode = "overlap" if overlap else "sync"
+            print(f"tiered [{mode}, budget {args.hbm_budget/1e6:.0f}MB / "
+                  f"corpus {store_bytes/1e6:.0f}MB]: QPS={qps:.1f}  "
+                  f"resident={len(eng.resident())}/"
+                  f"{len(retriever.store.segments)} segments")
+        st = eng.stats
+        print(f"  promotions={st['promotions']} demotions="
+              f"{st['demotions']} h2d={st['bytes_h2d']/1e6:.0f}MB "
+              f"hit-rate={st['hits']/max(st['hits']+st['misses'],1):.2f} "
+              f"wait={st['wait_s']*1e3:.1f}ms")
 
 
 def _run_static_tenants(args, cfg, bench, stages, int8_on):
@@ -396,6 +441,16 @@ def main():
                     help="multi-tenant mode: split the corpus round-robin "
                          "across this many tenants (doc_tenant-stamped "
                          "upserts) and scope requests via FilterSpec")
+    ap.add_argument("--snapshot-dir", default="",
+                    help="persist/restore the indexed corpus: when the "
+                         "directory holds a snapshot, cold-start from it "
+                         "(skip re-ingesting); otherwise index normally "
+                         "and save one there (static mode)")
+    ap.add_argument("--hbm-budget", type=int, default=0,
+                    help="tiered-residency mode (static): cap device-"
+                         "resident segment bytes at this budget, spill "
+                         "cold segments to host RAM, and report QPS with "
+                         "async prefetch vs synchronous fetch")
     ap.add_argument("--tenant-quota", type=int, default=0,
                     help="max queued rows per tenant in the traffic "
                          "frontend (0 = unlimited); excess submits are "
@@ -406,9 +461,17 @@ def main():
     per = max(args.pages // 3, 30)
     qper = max(args.queries // 3, 10)
     bench = make_benchmark(cfg, (per, per, per), (qper, qper, qper))
+    restoring = False
+    if args.snapshot_dir:
+        from repro.training.checkpoint import latest_step
+        restoring = (args.traffic == 0 and args.ingest_batches == 0
+                     and args.tenants <= 1
+                     and latest_step(args.snapshot_dir) is not None)
     t0 = time.time()
-    store = build_store(cfg, jnp.asarray(bench.pages),
-                        jnp.asarray(bench.token_types))
+    store = None
+    if not restoring:
+        store = build_store(cfg, jnp.asarray(bench.pages),
+                            jnp.asarray(bench.token_types))
 
     stages = {1: MST.one_stage(args.top_k),
               2: MST.two_stage(args.prefetch_k, args.top_k),
@@ -425,7 +488,7 @@ def main():
         stages = MST.with_routing_policy(stages, n_probe=args.n_probe,
                                          n_clusters=args.n_clusters)
     int8_on = False
-    if args.int8:
+    if args.int8 and store is not None:
         # quantise the vector the scan stage scores; a single-vector scan
         # (3-stage global_pooling) has nothing worth quantising
         scan_vec = stages[0].vector
@@ -438,8 +501,9 @@ def main():
         else:
             print(f"--int8: scan stage '{scan_vec}' is single-vector; "
                   "skipping quantisation")
-    print(f"indexed {store.n_docs} pages in {time.time()-t0:.2f}s "
-          f"(named vectors: {sorted(store.dims())})")
+    if store is not None:
+        print(f"indexed {store.n_docs} pages in {time.time()-t0:.2f}s "
+              f"(named vectors: {sorted(store.dims())})")
     if args.traffic > 0:
         _run_traffic(args, cfg, bench, store, stages, int8_on)
     elif args.ingest_batches > 0:

@@ -255,6 +255,62 @@ def _offsets(capacities: tuple) -> tuple:
     return tuple(offs)
 
 
+def _segment_stage0(stage: Stage, store: dict, eff, cap: int, off, q,
+                    q_mask, *, routed: bool, impl: str, interpret: bool,
+                    rt_impl: str, rt_interpret: bool, r0_impl: str,
+                    r0_interpret: bool):
+    """Stage-0 candidate generation over ONE segment (single-host path):
+    (vals [B, k0], GLOBAL slot ids [B, k0]) with
+    k0 = min(stage.k, cap[, probed rows]). ``off`` shifts local slot ids
+    into the global slot space; it may be a Python int (the joint cascade
+    body bakes offsets in) or a traced int32 scalar (the tiered
+    per-segment executable takes it as data, so ONE compiled fn serves
+    every same-layout segment regardless of its position in the scope).
+    The math is shared with the joint ``local_body`` — the tiered
+    per-segment pipeline scores each segment bitwise-identically by
+    construction."""
+    if routed:
+        rows = _routed_rows(store, stage, q, q_mask, rt_impl, rt_interpret)
+        rclip = jnp.clip(rows, 0, cap - 1)
+        ok = rows >= 0                  # -1 = padded member slot
+        if eff is not None:
+            ok = ok & jnp.take(eff, rclip, axis=0)
+        s = _score_candidates(*_scan_arrays(store, stage), q, q_mask,
+                              rclip, ok, r0_impl, r0_interpret)
+        v, sel = jax.lax.top_k(s, min(stage.k, cap, rows.shape[1]))
+        # dead winners (k > live probed members) drop their slot id —
+        # -1 is the filler sentinel
+        i = jnp.where(jnp.take_along_axis(ok, sel, axis=1),
+                      jnp.take_along_axis(rclip, sel, axis=1) + off, -1)
+        return v, i
+    vecs, mask, scales = _scan_arrays(store, stage)
+    if stage.scan_topk:
+        v, i = _dispatch_scan_topk(stage, vecs, mask, q, q_mask, scales,
+                                   impl, interpret, eff, min(stage.k, cap))
+    else:
+        s = _dispatch_scan(stage, vecs, mask, q, q_mask, scales, impl,
+                           interpret, doc_valid=eff)
+        v, i = jax.lax.top_k(s, min(stage.k, cap))
+    return v, i + off
+
+
+def _segment_rerank(stage: Stage, store: dict, eff, cap: int, off, q,
+                    q_mask, cand, rr_impl: str, rr_interpret: bool):
+    """One rerank stage's scores for the global candidate set against ONE
+    segment: [B, L]; out-of-segment / filtered / dead candidates score
+    NEG, so the cross-segment combine is an elementwise max. ``off``
+    follows ``_segment_stage0`` (Python int in the joint body, traced
+    scalar in the tiered per-segment executable)."""
+    local = cand - off
+    in_seg = (local >= 0) & (local < cap)
+    rows = jnp.clip(local, 0, cap - 1)
+    ok = in_seg
+    if eff is not None:
+        ok = ok & jnp.take(eff, rows, axis=0)
+    return _score_candidates(*rerank_arrays(store, stage.vector),
+                             q, q_mask, rows, ok, rr_impl, rr_interpret)
+
+
 def _build_body(mesh: Mesh | None, stages: tuple, capacities: tuple,
                 rerank_overcommit: int):
     """The (unjitted) cascade over a tuple of segment store dicts.
@@ -269,23 +325,17 @@ def _build_body(mesh: Mesh | None, stages: tuple, capacities: tuple,
     # kernel routing resolves ONCE at build time through the dispatch
     # registry: the scan stage's streaming kernel (interpret-mode capable
     # off-TPU) and the fused gather+rerank path (jnp twin off-TPU). Stages
-    # with use_kernel/rerank_kernel False run the reference.
-    impl, interpret = DSP.resolve(
-        "maxsim_scan", bool(stages and stages[0].use_kernel))
+    # with use_kernel/rerank_kernel False run the reference. Stage-0
+    # resolution (incl. the routed stage's two extra families) is shared
+    # with the tiered per-segment builders via _resolve_stage0 so the
+    # joint and per-segment executables route identically.
+    r0 = _resolve_stage0(stages)
+    routed = r0["routed"]
+    impl, interpret = r0["impl"], r0["interpret"]
+    rt_impl, rt_interpret = r0["rt_impl"], r0["rt_interpret"]
+    r0_impl, r0_interpret = r0["r0_impl"], r0["r0_interpret"]
     rr_impl, rr_interpret = DSP.resolve(
         "maxsim_rerank", any(s.rerank_kernel for s in stages[1:]))
-    # a routed stage 0 resolves two more families: the centroid-scoring op
-    # (kernel only when the stage asks — the ref GEMM is the off-TPU fast
-    # path AND the bitwise contract) and the candidate scorer the probed
-    # member rows run through (the fused gather path when either kernel
-    # flag is set; the ref gather otherwise, which keeps n_probe == K
-    # bitwise the exhaustive oracle on multi-vector float stages)
-    routed = bool(stages and stages[0].n_probe > 0)
-    rt_impl, rt_interpret = DSP.resolve(
-        "ivf_route", routed and stages[0].use_kernel)
-    r0_impl, r0_interpret = DSP.resolve(
-        "maxsim_rerank",
-        routed and (stages[0].use_kernel or stages[0].rerank_kernel))
     offsets = _offsets(capacities)
     total_cap = sum(capacities)
 
@@ -306,39 +356,13 @@ def _build_body(mesh: Mesh | None, stages: tuple, capacities: tuple,
                     parts_v, parts_i = [], []
                     for store, eff, cap, off in zip(stores, effs, capacities,
                                                     offsets):
-                        if routed:
-                            rows = _routed_rows(store, stage, q, q_mask,
-                                                rt_impl, rt_interpret)
-                            rclip = jnp.clip(rows, 0, cap - 1)
-                            ok = rows >= 0      # -1 = padded member slot
-                            if eff is not None:
-                                ok = ok & jnp.take(eff, rclip, axis=0)
-                            s = _score_candidates(
-                                *_scan_arrays(store, stage), q, q_mask,
-                                rclip, ok, r0_impl, r0_interpret)
-                            v, sel = jax.lax.top_k(
-                                s, min(stage.k, cap, rows.shape[1]))
-                            # dead winners (k > live probed members) drop
-                            # their slot id — -1 is the filler sentinel
-                            i = jnp.where(
-                                jnp.take_along_axis(ok, sel, axis=1),
-                                jnp.take_along_axis(rclip, sel, axis=1)
-                                + off, -1)
-                            parts_v.append(v)
-                            parts_i.append(i)
-                            continue
-                        vecs, mask, scales = _scan_arrays(store, stage)
-                        if stage.scan_topk:
-                            v, i = _dispatch_scan_topk(
-                                stage, vecs, mask, q, q_mask, scales,
-                                impl, interpret, eff, min(stage.k, cap))
-                        else:
-                            s = _dispatch_scan(stage, vecs, mask, q, q_mask,
-                                               scales, impl, interpret,
-                                               doc_valid=eff)
-                            v, i = jax.lax.top_k(s, min(stage.k, cap))
+                        v, i = _segment_stage0(
+                            stage, store, eff, cap, off, q, q_mask,
+                            routed=routed, impl=impl, interpret=interpret,
+                            rt_impl=rt_impl, rt_interpret=rt_interpret,
+                            r0_impl=r0_impl, r0_interpret=r0_interpret)
                         parts_v.append(v)
-                        parts_i.append(i + off)
+                        parts_i.append(i)
                     scores, cand = merge_topk(
                         jnp.concatenate(parts_v, axis=1),
                         jnp.concatenate(parts_i, axis=1),
@@ -347,15 +371,9 @@ def _build_body(mesh: Mesh | None, stages: tuple, capacities: tuple,
                     s_all = None
                     for store, eff, cap, off in zip(stores, effs, capacities,
                                                     offsets):
-                        local = cand - off
-                        in_seg = (local >= 0) & (local < cap)
-                        rows = jnp.clip(local, 0, cap - 1)
-                        ok = in_seg
-                        if eff is not None:
-                            ok = ok & jnp.take(eff, rows, axis=0)
-                        s = _score_candidates(
-                            *rerank_arrays(store, stage.vector),
-                            q, q_mask, rows, ok, *rerank_dispatch(stage))
+                        s = _segment_rerank(stage, store, eff, cap, off,
+                                            q, q_mask, cand,
+                                            *rerank_dispatch(stage))
                         # each candidate lives in exactly one segment; the
                         # others scored it NEG, so max == owner's score
                         s_all = s if s_all is None else jnp.maximum(s_all, s)
@@ -523,6 +541,89 @@ def make_segmented_search_fn(mesh: Mesh | None, stages: tuple,
     def fn(stores, q, q_mask, fspec=None):
         w = filter_words(stores[0]) if stores else 0
         return jfn(stores, q, q_mask, as_filter_arrays(fspec, w))
+
+    return fn
+
+
+def _resolve_stage0(stages: tuple):
+    """Build-time dispatch resolution for stage 0 — the SAME calls, in the
+    same order, as ``_build_body``, so a per-segment executable and the
+    joint cascade route every op family identically (a precondition for
+    the tiered pipeline's bitwise-parity contract)."""
+    impl, interpret = DSP.resolve(
+        "maxsim_scan", bool(stages and stages[0].use_kernel))
+    routed = bool(stages and stages[0].n_probe > 0)
+    rt_impl, rt_interpret = DSP.resolve(
+        "ivf_route", routed and stages[0].use_kernel)
+    r0_impl, r0_interpret = DSP.resolve(
+        "maxsim_rerank",
+        routed and (stages[0].use_kernel or stages[0].rerank_kernel))
+    return dict(routed=routed, impl=impl, interpret=interpret,
+                rt_impl=rt_impl, rt_interpret=rt_interpret,
+                r0_impl=r0_impl, r0_interpret=r0_interpret)
+
+
+def make_segment_scan_fn(stages: tuple, capacity: int):
+    """Jitted stage-0 over ONE segment, for the tiered per-segment
+    pipeline (``repro.retrieval.tiering``, single-host meshes).
+
+    Returns fn(store: dict, q [B,Q,d], q_mask [B,Q], fspec, offset) ->
+    (vals [B,k0], GLOBAL slot ids [B,k0]). ``offset`` is passed as a
+    TRACED int32 scalar — a segment's position in the scope is data, not
+    shape — so one compiled executable serves every segment of this
+    layout and residency churn never adds a retrace axis. The body is
+    ``_segment_stage0``, the exact code the joint cascade runs per
+    segment, with dispatch resolved by the same build-time policy."""
+    stages = tuple(stages)
+    assert stages, "search needs at least one stage"
+    stage = stages[0]
+    r0 = _resolve_stage0(stages)
+
+    def seg_scan(store, q, q_mask, fspec, offset):
+        record_trace()
+        eff = effective_validity(store, fspec)
+        return _segment_stage0(stage, store, eff, capacity, offset,
+                               q, q_mask, **r0)
+
+    jfn = jax.jit(seg_scan)
+
+    def fn(store, q, q_mask, fspec, offset):
+        return jfn(store, q, q_mask,
+                   as_filter_arrays(fspec, filter_words(store)),
+                   jnp.asarray(offset, jnp.int32))
+
+    return fn
+
+
+def make_segment_rerank_fn(stages: tuple, stage_index: int, capacity: int):
+    """Jitted rerank-stage scorer over ONE segment (tiered pipeline twin
+    of the joint body's rerank block — same ``_segment_rerank`` math,
+    same build-time dispatch policy).
+
+    Returns fn(store, q, q_mask, fspec, offset, cand [B,L]) -> [B,L]
+    scores with NEG for candidates this segment doesn't own; the driver
+    combines segments with an elementwise max (exact: each candidate is
+    real in exactly one segment). ``offset`` is traced data, as in
+    ``make_segment_scan_fn``."""
+    stages = tuple(stages)
+    stage = stages[stage_index]
+    rr_impl, rr_interpret = DSP.resolve(
+        "maxsim_rerank", any(s.rerank_kernel for s in stages[1:]))
+    if not stage.rerank_kernel:
+        rr_impl, rr_interpret = "ref", True
+
+    def seg_rerank(store, q, q_mask, fspec, offset, cand):
+        record_trace()
+        eff = effective_validity(store, fspec)
+        return _segment_rerank(stage, store, eff, capacity, offset,
+                               q, q_mask, cand, rr_impl, rr_interpret)
+
+    jfn = jax.jit(seg_rerank)
+
+    def fn(store, q, q_mask, fspec, offset, cand):
+        return jfn(store, q, q_mask,
+                   as_filter_arrays(fspec, filter_words(store)),
+                   jnp.asarray(offset, jnp.int32), cand)
 
     return fn
 

@@ -388,7 +388,11 @@ class ServingFrontend:
     def _cache_key(self, q: np.ndarray, qm: np.ndarray, fkey):
         # the store generation invalidates every entry on corpus mutation
         # (upsert/delete/compact) — a cached result must never outlive the
-        # corpus it was computed against. The FILTER identity is part of
+        # corpus it was computed against. Tier swaps (tiering.TieredEngine
+        # promoting/demoting segments) also bump the generation: residency
+        # changes are bitwise-neutral, so dropping those entries is purely
+        # conservative — correct by construction, never stale. The FILTER
+        # identity is part of
         # the key: the same query bytes under different tenants/filters are
         # DIFFERENT requests, and serving one tenant's cached results to
         # another would cross the isolation boundary.

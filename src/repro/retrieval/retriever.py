@@ -158,6 +158,36 @@ class Retriever:
         return ServingFrontend(self, stages, **kwargs)
 
     # ------------------------------------------------------------------
+    # tiered residency + persistence (repro.retrieval.tiering)
+    # ------------------------------------------------------------------
+
+    def tiered(self, hbm_budget: int, **kwargs):
+        """A ``tiering.TieredEngine`` over this retriever: device residency
+        capped at ``hbm_budget`` bytes, LRU promotion/demotion, async
+        prefetch. The corpus can then exceed HBM by the host-RAM factor."""
+        from repro.retrieval.tiering import TieredEngine
+        return TieredEngine(self, hbm_budget, **kwargs)
+
+    def snapshot(self, directory: str, **kwargs) -> str:
+        """Persist the full corpus (arrays + schema + slot maps +
+        tenant/filter/IVF companions) so a restart serves without
+        re-ingesting; see ``tiering.snapshot``."""
+        from repro.retrieval import tiering
+        return tiering.snapshot(self.store, directory, **kwargs)
+
+    @classmethod
+    def from_snapshot(cls, directory: str, mesh=None, *,
+                      step: int | None = None, place: bool = True,
+                      **kwargs) -> "Retriever":
+        """Cold-start a retriever from a ``snapshot`` directory — bitwise
+        the store that was saved, placed onto ``mesh`` if given. Extra
+        kwargs flow to the constructor (``scan_chunk``, ``ingest``, ...)."""
+        from repro.retrieval import tiering
+        store = tiering.restore_store(directory, mesh=mesh, step=step,
+                                      place=place)
+        return cls(store, mesh=mesh, place=False, **kwargs)
+
+    # ------------------------------------------------------------------
     # search
     # ------------------------------------------------------------------
 

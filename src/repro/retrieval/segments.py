@@ -121,6 +121,13 @@ class Segment:
     # member arrays live in ``vectors`` under the reserved routing keys so
     # they thread through layout_key / placement like everything else.
     routing: object = None
+    # residency tier (``repro.retrieval.tiering``): "device" = arrays live
+    # in accelerator memory; "host" = spilled to host RAM as numpy arrays
+    # of the SAME keys/shapes/dtypes. Residency is placement, never shape:
+    # layout_key() is tier-blind, so compiled search fns survive tier
+    # swaps unchanged (a host-tier segment must be promoted before it is
+    # scanned — the tiering layer owns that).
+    tier: str = "device"
 
     @property
     def free(self) -> int:
@@ -129,6 +136,12 @@ class Segment:
     @property
     def n_valid(self) -> int:
         return int((self.doc_ids >= 0).sum())
+
+    @property
+    def nbytes(self) -> int:
+        """Total array bytes this segment pins in its current tier (the
+        accounting unit of the tiering layer's HBM budget)."""
+        return sum(int(v.nbytes) for v in self.vectors.values())
 
 
 class SegmentedStore:
@@ -425,6 +438,29 @@ class SegmentedStore:
         self._slot_ids = None
         self.generation += 1
         return self
+
+    def tier_swap(self, seg_i: int, vectors: dict, tier: str) -> None:
+        """Adopt a promotion/demotion's array swap for segment ``seg_i``:
+        the SAME keys/shapes/dtypes with a different placement (device
+        arrays on promote, host numpy on demote). The one mutation the
+        tiering layer performs on the store — centralised here so the
+        bookkeeping is uniform with ``commit``/``delete``:
+
+        - ``generation`` bumps: placement did not change any value, but
+          result caches keyed on it (the frontend's LRU) conservatively
+          drop entries rather than reason about residency;
+        - ``doc_ids``/``_slot_ids`` are untouched — slot->page translation
+          is placement-blind, as is ``layout_key()`` (tier swaps never
+          invalidate compiled search fns).
+        """
+        seg = self.segments[seg_i]
+        if set(vectors) != set(seg.vectors):
+            raise ValueError(
+                f"tier swap changed the key set for segment {seg_i}: "
+                f"{sorted(set(vectors) ^ set(seg.vectors))}")
+        seg.vectors = vectors
+        seg.tier = tier
+        self.generation += 1
 
     # ------------------------------------------------------------------
     # views

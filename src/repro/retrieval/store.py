@@ -418,6 +418,22 @@ def rerank_arrays(vectors: dict, name: str) -> tuple:
             vectors[scale_key(name)])
 
 
+def snapshot_entries(vectors: dict) -> tuple:
+    """Deterministic persistence order for a segment's vectors dict:
+    every array — named vectors, their mask/codes/scales companions, the
+    doc-level validity/tenant/filter triple, the replicated IVF routing
+    companions — as ``(key, array)`` pairs sorted by key.
+
+    This is THE enumeration snapshot/restore flattens a ``SegmentedStore``
+    with (``repro.retrieval.tiering``): the key order is recorded in the
+    snapshot meta and the restore rebuilds the dict from it, so schema
+    inference (``VectorSchema.infer``) on the restored store is bitwise
+    the live store's. Owned by this module because the key conventions
+    are — a new companion family automatically persists by virtue of
+    living in the dict."""
+    return tuple(sorted(vectors.items()))
+
+
 def companion_entries(vectors: dict, source: str, name: str) -> dict:
     """Companion arrays a vector DERIVED from ``source`` (same [N, D]
     geometry, e.g. a Matryoshka dim-truncation) should be indexed with,

@@ -1,4 +1,4 @@
-"""Fault-tolerant checkpointing: atomic, keep-last-k, resumable.
+"""Fault-tolerant checkpointing: atomic, keep-last-k, resumable, streamed.
 
 Checkpoint/restart is the first line of fault tolerance at pod scale: a
 failed step re-runs from the last step boundary. Layout:
@@ -13,6 +13,20 @@ mid-save can never corrupt LATEST. ``restore`` validates shapes and returns
 leaves re-formed into the caller's pytree (the caller supplies an example
 tree — robust against treedef repr drift across jax versions).
 
+Leaves STREAM to disk one at a time: ``save`` device_gets and writes each
+leaf before touching the next, so peak host memory is one leaf, not a full
+host copy of the tree. That is what lets ``repro.retrieval.tiering``
+snapshot a corpus at 8x the HBM budget without needing ~2x the corpus in
+host RAM. The on-disk format is unchanged (an npz is a zip of ``.npy``
+members; we write the members individually) so old checkpoints restore and
+new ones load with plain ``np.load``.
+
+Extended-dtype leaves (bfloat16 and friends — numpy can't serialise the
+ml_dtypes kinds) are stored as their same-width unsigned-int BIT PATTERN
+with the true dtype recorded in ``meta.json``; ``restore`` views the bits
+back (a view, never a value-converting astype), so the round trip is
+bitwise.
+
 On real multi-host pods each host writes only the shards it owns
 (process-local leaves of a jax.Array); this single-host implementation
 device_gets full arrays but keeps the same API.
@@ -22,13 +36,30 @@ from __future__ import annotations
 import json
 import os
 import shutil
+import zipfile
 
 import numpy as np
 import jax
 
+# same-width integer stand-ins for extended dtypes numpy can't serialise
+_BITS = {1: np.uint8, 2: np.uint16, 4: np.uint32, 8: np.uint64}
+
 
 def _leaves(tree):
     return jax.tree_util.tree_flatten(tree)[0]
+
+
+def named_dtype(name: str) -> np.dtype:
+    """np.dtype from its recorded string name, reaching into ml_dtypes for
+    the extended families (bfloat16, float8_*) numpy doesn't know."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+_named_dtype = named_dtype
 
 
 def save(ckpt_dir: str, step: int, tree, meta: dict | None = None,
@@ -40,13 +71,25 @@ def save(ckpt_dir: str, step: int, tree, meta: dict | None = None,
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
     os.makedirs(tmp)
-    leaves = [np.asarray(jax.device_get(x)) for x in _leaves(tree)]
-    np.savez(os.path.join(tmp, "arrays.npz"),
-             **{f"leaf_{i}": a for i, a in enumerate(leaves)})
+    # stream: one leaf on the host at a time (device_get -> write -> drop),
+    # as individual .npy members of the npz zip — np.load reads the result
+    # exactly as if np.savez had written it
+    shapes, dtypes = [], []
+    with zipfile.ZipFile(os.path.join(tmp, "arrays.npz"), "w",
+                         zipfile.ZIP_STORED, allowZip64=True) as zf:
+        for i, x in enumerate(_leaves(tree)):
+            a = np.asarray(jax.device_get(x))
+            shapes.append(list(a.shape))
+            dtypes.append(str(a.dtype))
+            if a.dtype.kind == "V":          # extended dtype: store bits
+                a = a.view(_BITS[a.dtype.itemsize])
+            with zf.open(f"leaf_{i}.npy", "w", force_zip64=True) as f:
+                np.lib.format.write_array(f, a, allow_pickle=False)
+            del a
     with open(os.path.join(tmp, "meta.json"), "w") as f:
         json.dump({"step": step,
-                   "shapes": [list(a.shape) for a in leaves],
-                   "dtypes": [str(a.dtype) for a in leaves],
+                   "shapes": shapes,
+                   "dtypes": dtypes,
                    "meta": meta or {}}, f)
     if os.path.exists(final):
         shutil.rmtree(final)
@@ -75,13 +118,27 @@ def latest_step(ckpt_dir: str) -> int | None:
         return int(f.read().strip().split("_")[1])
 
 
+def load_meta(ckpt_dir: str, step: int | None = None) -> dict:
+    """The checkpoint's meta.json alone — shapes/dtypes/user meta without
+    touching the arrays. Restore flows that must RECONSTRUCT the example
+    tree (e.g. ``retrieval.tiering.restore_store``) read this first, build
+    ShapeDtypeStructs from it, then call ``restore``."""
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    with open(os.path.join(ckpt_dir, f"step_{step:08d}", "meta.json")) as f:
+        return json.load(f)
+
+
 def restore(ckpt_dir: str, example_tree, step: int | None = None,
             shardings=None):
     """Load a checkpoint into the structure of ``example_tree``.
 
     ``shardings``: optional pytree of NamedShardings (same structure) to
     place restored leaves directly onto the mesh (resharding on restore =
-    elastic restart onto a different topology)."""
+    elastic restart onto a different topology). Leaves stream off disk one
+    at a time (np.load memory-maps nothing but reads members lazily), so
+    restore peaks at one leaf of host memory beyond the live outputs."""
     step = step if step is not None else latest_step(ckpt_dir)
     if step is None:
         raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
@@ -97,6 +154,11 @@ def restore(ckpt_dir: str, example_tree, step: int | None = None,
     out = []
     for i, (ex, sh) in enumerate(zip(leaves, shard_leaves)):
         a = data[f"leaf_{i}"]
+        want = meta["dtypes"][i]
+        if str(a.dtype) != want:
+            wd = _named_dtype(want)
+            if wd.kind == "V" and wd.itemsize == a.dtype.itemsize:
+                a = a.view(wd)           # bit-pattern round trip: bitwise
         assert tuple(a.shape) == tuple(ex.shape), (i, a.shape, ex.shape)
         out.append(jax.device_put(a.astype(ex.dtype), sh) if sh is not None
                    else jax.numpy.asarray(a, dtype=ex.dtype))

@@ -1,0 +1,336 @@
+"""Tiered segment residency + snapshot/restore: corpus-beyond-HBM
+contracts.
+
+What must hold (and is asserted here):
+
+- **Residency is invisible** — a search through ``TieredEngine`` under
+  ANY budget (evictions, mid-stream promotions, prefetch on or off)
+  returns BITWISE the scores and translated ids of the fully-resident
+  ``Retriever.search``: residency is placement, never math. Includes
+  int8-quantised stores, IVF routing companions, and tenant/tag filters.
+- **Snapshot round-trips** — ``snapshot -> restore_store -> search`` is
+  bitwise the original, including the slot maps, validity of deleted
+  rows, routing state, and tenant companions; no re-ingest runs.
+- **No retrace axis** — tier churn (promote/demote between warmed
+  searches) dispatches cached executables only: segment identity rides
+  as a traced offset, residency as buffer placement.
+- **LRU discipline** — resident bytes equal the sum of device-tier
+  segment sizes, never exceed the budget while an unpinned victim
+  exists, and the least-recently-used unpinned segment is the one
+  evicted. Driven through arbitrary access sequences via hypothesis.
+- **Sharded parity** — the mesh path (replicated routing companions,
+  sharded slabs) survives demote/promote and snapshot/restore bitwise
+  against its own fully-resident search (subprocess: fake CPU devices
+  must exist before jax init).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import multistage as MST
+from repro.retrieval import tracing
+from repro.retrieval.retriever import Retriever
+from repro.retrieval.store import FilterSpec, VectorStore, quantize_store
+from repro.retrieval.tiering import restore_store
+
+D_FULL, D_POOL, DIM = 6, 2, 16
+CAP = 64                     # == SEGMENT_MIN_CAPACITY: a CAP-row batch
+#                              fills exactly one segment, no tail coalesce
+TWO = (MST.Stage("mean_pooling", 8), MST.Stage("initial", 4))
+
+
+def batch(n, seed=0, quant=False):
+    r = np.random.default_rng(seed)
+    full = r.normal(size=(n, D_FULL, DIM)).astype(np.float32)
+    vs = VectorStore({
+        "initial": jnp.asarray(full),
+        "mean_pooling": jnp.asarray(
+            full.reshape(n, D_POOL, D_FULL // D_POOL, DIM).mean(2)),
+    }, n, "float32")
+    return quantize_store(vs, names=("initial",)) if quant else vs
+
+
+def queries(seed=9, b=2, q=4):
+    return jnp.asarray(np.random.default_rng(seed).normal(
+        size=(b, q, DIM)).astype(np.float32))
+
+
+def multi_segment_retriever(n_segs=4, quant=False, routing=None):
+    """CAP-row segments, tenants 0/1 interleaved, a few deletes — the
+    state a snapshot must carry and an eviction must not corrupt."""
+    r = Retriever(batch(CAP, 0, quant), capacity=CAP, routing=routing)
+    for s in range(1, n_segs):
+        r.upsert(batch(CAP, s, quant), tenant=s % 2, tags=(s % 3,))
+    r.delete([1, CAP + 2, n_segs * CAP - 3])
+    assert len(r.store.segments) == n_segs
+    return r
+
+
+FILTERS = (None, FilterSpec(tenant=1), FilterSpec(tenant=0, any_tags=(2,)))
+
+
+def all_searches(search_fn):
+    q = queries()
+    return [search_fn(q, stages=TWO, filter=spec) for spec in FILTERS]
+
+
+def assert_bitwise(got, want):
+    for (gs, gi), (ws, wi) in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(gs), np.asarray(ws))
+        np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+
+
+# ----------------------------------------------------------------------
+# snapshot / restore
+# ----------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("quant", [False, True])
+def test_snapshot_restore_bitwise(tmp_path, quant):
+    r = multi_segment_retriever(quant=quant)
+    want = all_searches(r.search)
+    path = r.snapshot(str(tmp_path))
+    assert os.path.isdir(path)
+    r2 = Retriever.from_snapshot(str(tmp_path))
+    assert r2.n_docs == r.n_docs
+    assert [s.capacity for s in r2.store.segments] == \
+        [s.capacity for s in r.store.segments]
+    assert_bitwise(all_searches(r2.search), want)
+    # the restored corpus keeps ingesting where the old one left off:
+    # fresh ids, no collision with live slots
+    ids_a = r.upsert(batch(4, 77, quant))
+    ids_b = r2.upsert(batch(4, 77, quant))
+    np.testing.assert_array_equal(ids_a, ids_b)
+    assert_bitwise(all_searches(r2.search), all_searches(r.search))
+
+
+def test_snapshot_restore_routing(tmp_path):
+    r = multi_segment_retriever(routing=4)
+    rt = MST.with_routing_policy(TWO, n_probe=4, n_clusters=4)
+    q = queries()
+    want = r.search(q, stages=rt)
+    r.snapshot(str(tmp_path))
+    store = restore_store(str(tmp_path))
+    assert store.router is not None and store.router.n_clusters == 4
+    for seg_a, seg_b in zip(r.store.segments, store.segments):
+        np.testing.assert_array_equal(seg_a.routing.fills,
+                                      seg_b.routing.fills)
+    r2 = Retriever(store, place=False)
+    got = r2.search(q, stages=rt)
+    assert_bitwise([got], [want])
+
+
+def test_snapshot_is_generation_stamped(tmp_path):
+    r = multi_segment_retriever(n_segs=2)
+    gen = r.store.generation
+    r.snapshot(str(tmp_path))
+    r2 = Retriever.from_snapshot(str(tmp_path))
+    assert r2.store.generation == gen
+    # a second snapshot after mutation lands as a NEWER step
+    r.upsert(batch(3, 5))
+    r.snapshot(str(tmp_path))
+    r3 = Retriever.from_snapshot(str(tmp_path))
+    assert r3.n_docs == r.n_docs
+
+
+# ----------------------------------------------------------------------
+# tiered search parity + retraces
+# ----------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("quant", [False, True])
+@pytest.mark.parametrize("overlap", [False, True])
+def test_evict_then_search_parity(quant, overlap):
+    """Under a budget that holds ONE segment, every scoped search churns
+    the residency (promote + demote) — results must stay bitwise those
+    of the fully-resident joint search computed before any eviction."""
+    r = multi_segment_retriever(quant=quant)
+    want = all_searches(r.search)                 # fully resident
+    seg_bytes = r.store.segments[0].nbytes
+    with r.tiered(seg_bytes + 1, prefetch=overlap) as eng:
+        assert len(eng.resident()) <= 1
+        got = [eng.search(queries(), stages=TWO, filter=spec,
+                          overlap=overlap) for spec in FILTERS]
+        assert_bitwise(got, want)
+        assert eng.stats["demotions"] > 0, "budget never forced a spill"
+    # scoped per-segment pipeline == the joint executable, segment by
+    # segment: scope to each segment and cross-check against a scoped
+    # fully-resident engine
+    with r.tiered(2 * seg_bytes) as eng, \
+            r.tiered(len(r.store.segments) * 2 * seg_bytes) as ref:
+        for si in range(len(r.store.segments)):
+            got = eng.search(queries(), stages=TWO, scope=[si],
+                             overlap=overlap)
+            oracle = ref.search(queries(), stages=TWO, scope=[si])
+            assert_bitwise([got], [oracle])
+
+
+def test_snapshot_restore_under_tiering(tmp_path):
+    """Snapshot taken while segments sit on BOTH tiers restores to a
+    searchable store: host-tier arrays persist bitwise too."""
+    r = multi_segment_retriever()
+    want = all_searches(r.search)
+    with r.tiered(r.store.segments[0].nbytes + 1) as eng:
+        eng.search(queries(), stages=TWO, scope=[2])
+        tiers = {s.tier for s in r.store.segments}
+        assert tiers == {"host", "device"}
+        eng.snapshot(str(tmp_path))
+    r2 = Retriever.from_snapshot(str(tmp_path))
+    assert all(s.tier == "device" for s in r2.store.segments)
+    assert_bitwise(all_searches(r2.search), want)
+
+
+def test_zero_retraces_under_churn():
+    r = multi_segment_retriever()
+    seg_bytes = r.store.segments[0].nbytes
+    with r.tiered(2 * seg_bytes + 1) as eng:
+        q = queries()
+        eng.search(q, stages=TWO, scope=[0, 1])          # compile
+        eng.search(q, stages=TWO, scope=[2, 3])          # churn warm
+        before = tracing.trace_count()
+        for i in range(8):
+            scope = [(i % 4), ((i + 1) % 4)]
+            eng.search(q, stages=TWO, scope=scope)
+        assert tracing.trace_count() == before, \
+            "tier churn leaked into a trace axis"
+        assert eng.stats["promotions"] > 2
+
+
+# ----------------------------------------------------------------------
+# LRU discipline
+# ----------------------------------------------------------------------
+
+
+def lru_state_ok(eng, store, budget):
+    resident = eng.resident()
+    by_tier = {i for i, s in enumerate(store.segments)
+               if s.tier == "device"}
+    assert set(resident) == by_tier, "LRU set disagrees with segment tiers"
+    assert eng.resident_bytes == sum(store.segments[i].nbytes
+                                     for i in resident)
+    if eng.resident_bytes > budget:
+        assert eng.stats["overflow"] > 0, \
+            "over budget without an overflow event"
+
+
+def test_lru_deterministic_floor():
+    r = multi_segment_retriever()
+    seg_bytes = r.store.segments[0].nbytes
+    budget = 2 * seg_bytes + 1
+    with r.tiered(budget) as eng:
+        for si in (0, 1, 2):
+            eng.search(queries(), stages=TWO, scope=[si])
+            lru_state_ok(eng, r.store, budget)
+        # 0 is the least recently used of {0,1,2}'s survivors: touching
+        # 2 must have evicted it, and re-touching 1 then 3 evicts 2
+        assert 0 not in eng.resident()
+        eng.search(queries(), stages=TWO, scope=[1])
+        eng.search(queries(), stages=TWO, scope=[3])
+        lru_state_ok(eng, r.store, budget)
+        assert 2 not in eng.resident()
+        assert set(eng.resident()) == {1, 3}
+
+
+def test_lru_invariants_hypothesis():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    r = multi_segment_retriever(n_segs=5)
+    seg_bytes = r.store.segments[0].nbytes
+
+    @given(st.lists(st.integers(0, 4), min_size=1, max_size=24),
+           st.integers(1, 3))
+    @settings(deadline=None, max_examples=12)
+    def prop(accesses, cap_segs):
+        budget = cap_segs * seg_bytes + 1
+        with r.tiered(budget) as eng:
+            for i in accesses:
+                eng._acquire(i, overlap=False)
+                lru_state_ok(eng, r.store, budget)
+                assert i == eng.resident()[-1], "touched != MRU"
+                eng._release(i)
+            assert len(eng.resident()) <= cap_segs
+            assert not eng._pins or not any(eng._pins.values())
+
+    prop()
+
+
+# ----------------------------------------------------------------------
+# sharded tiering (real 4-shard mesh => subprocess)
+# ----------------------------------------------------------------------
+
+TIERING_SHARD_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    os.environ["JAX_PLATFORMS"] = "cpu"
+    import tempfile
+    import numpy as np, jax.numpy as jnp
+    from repro.core import multistage as MST
+    from repro.launch.mesh import make_mesh
+    from repro.retrieval.retriever import Retriever
+    from repro.retrieval.store import FilterSpec, VectorStore
+
+    D, DIM, CAP = 4, 8, 16
+    def batch(n, seed):
+        r = np.random.default_rng(seed)
+        full = r.normal(size=(n, D, DIM)).astype(np.float32)
+        return VectorStore({
+            "initial": jnp.asarray(full),
+            "mean_pooling": jnp.asarray(full.mean(1, keepdims=True)),
+        }, n, "float32")
+
+    st = (MST.Stage("mean_pooling", 6), MST.Stage("initial", 3))
+    rt = MST.with_routing_policy(st, n_probe=2, n_clusters=2)
+    q = jnp.asarray(np.random.default_rng(9).normal(
+        size=(2, 4, DIM)).astype(np.float32))
+    mesh = make_mesh((4,), ("data",))
+
+    r = Retriever(batch(CAP, 0), mesh=mesh, capacity=CAP, routing=2)
+    for s in range(1, 3):
+        r.upsert(batch(CAP, s), tenant=s % 2)
+    r.delete([2, CAP + 5])
+
+    want = [r.search(q, stages=sg, filter=sp)
+            for sg in (st, rt) for sp in (None, FilterSpec(tenant=1))]
+    seg_bytes = r.store.segments[0].nbytes
+    with r.tiered(seg_bytes + 1) as eng:
+        got = [eng.search(q, stages=sg, filter=sp)
+               for sg in (st, rt) for sp in (None, FilterSpec(tenant=1))]
+        assert eng.stats["demotions"] > 0, "no spill under 1-seg budget"
+    for (gs, gi), (ws, wi) in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(gs), np.asarray(ws))
+        np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+
+    # snapshot under the mesh -> restore WITH placement: replicated
+    # routing companions, sharded slabs, bitwise searches
+    with tempfile.TemporaryDirectory() as d:
+        r.snapshot(d)
+        r2 = Retriever.from_snapshot(d, mesh=mesh)
+        cent = r2.store.segments[0].vectors["ivf_centroids"]
+        assert cent.sharding.is_fully_replicated, "companions not replicated"
+        got = [r2.search(q, stages=sg, filter=sp)
+               for sg in (st, rt) for sp in (None, FilterSpec(tenant=1))]
+        for (gs, gi), (ws, wi) in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(gs), np.asarray(ws))
+            np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+    print("TIERING_SHARD_OK")
+""")
+
+
+def test_tiered_multi_shard_parity_subprocess():
+    """Tiered eviction + snapshot/restore on a real 4-shard mesh (fake
+    CPU devices must exist before jax init => subprocess)."""
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", TIERING_SHARD_SCRIPT],
+                         env=env, capture_output=True, text=True,
+                         timeout=500)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "TIERING_SHARD_OK" in out.stdout
