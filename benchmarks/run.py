@@ -1344,6 +1344,238 @@ def _persist_tiered(out: dict) -> None:
                      "quick": out["quick"]})
 
 
+def chaos_serving(table: dict, quick: bool = False):
+    """Serving under failure (ROADMAP item 3): open-loop traffic over a
+    tiered corpus at 4x the HBM budget while the deterministic fault
+    injector (``retrieval.faults``) turns the screws, asserting the
+    exact-or-flagged serving contract end to end:
+
+    - fault ladder 0% / 1% / 5% injected transient transfer failures
+      (plus deadline pressure from injected slow transfers at the faulty
+      rungs): availability >= 99.9% of requests complete at EVERY rung
+      (transient failures are retried, never surfaced), every
+      non-degraded result is BITWISE the fully-resident oracle, and
+      every degraded result is flagged with its skip count (asserted)
+    - p99 latency at the 5% rung bounded by 3x the clean rung's p99
+      + 50ms — fault recovery degrades the tail, it must not unbound it
+      (asserted)
+    - one worker-kill rung: the background tiering worker thread is
+      killed mid-traffic; the supervisor restarts it
+      (``worker_restarts >= 1``) and results stay bitwise (asserted)
+    - zero steady-state retraces across ALL rungs — retries, restarts
+      and degraded folds re-dispatch warmed executables (asserted)
+    - one corrupt-snapshot restore attempt: a bit flipped under a stored
+      array fails restore LOUDLY (``CheckpointCorrupt`` naming the
+      ``seg<i>/<key>`` leaf) while the previous step restores bitwise
+      (asserted)
+
+    Every fault is seeded and counter-keyed (no wall-clock randomness),
+    so the rung outcomes are reproducible run to run. Rows persist to
+    BENCH_chaos.json at the repo root by git sha (CI gates on them)."""
+    import tempfile
+
+    import jax.numpy as jnp
+    from repro.core import multistage as MST
+    from repro.retrieval import faults as FLT
+    from repro.retrieval import tiering as TIER
+    from repro.retrieval import tracing
+    from repro.retrieval.retriever import Retriever
+    from repro.retrieval.store import VectorStore
+    from repro.training import checkpoint as CKPT
+
+    d, D_scan, D_full = 64, 4, 96
+    B, Q, prefetch_k, topk = 4, 8, 16, 4
+    R = 128 if quick else 256            # rows per segment
+    m_res = 4                            # segments the budget holds
+    n_segs = 4 * m_res                   # corpus = 4x budget
+    T = 30 if quick else 60              # requests per rung
+    PACE = 6                             # promote ~= PACE/2 scan calls
+    AVAIL_GATE = 0.999
+    st = MST.two_stage(prefetch_k, topk)
+
+    def seg_arrays(seed, rows):
+        r2 = np.random.default_rng(3000 + seed)
+        full = r2.standard_normal((rows, D_full, d)).astype(np.float32)
+        pooled = full.reshape(rows, D_scan, D_full // D_scan, d).mean(2)
+        return {"initial": full, "mean_pooling": pooled}
+
+    r = Retriever(VectorStore(seg_arrays(0, R), R), capacity=R)
+    for s in range(1, n_segs):
+        r.store.add_pages(VectorStore(seg_arrays(s, R), R))
+    seg_bytes = r.store.segments[0].nbytes
+    budget = m_res * seg_bytes
+
+    qr = np.random.default_rng(11)
+    q = jnp.asarray(qr.standard_normal((B, Q, d)).astype(np.float32))
+    qm = jnp.ones((B, Q), bool)
+
+    # request stream: every request scans a 3-segment scope — the always-
+    # hot segment 0 plus a rotating cold pair, so steady state promotes 2
+    # segments per request (transfer faults get plenty of ops to land on)
+    # and the deadline has a real second promotion to skip under pressure
+    pairs = [(a, a + 1) for a in range(1, n_segs - 1, 2)]
+    scopes = [(0, a, b) for a, b in pairs]
+
+    def oracle_outs():
+        with r.tiered((n_segs + 1) * seg_bytes) as ref:
+            outs = {sc: ref.search(q, qm, stages=st, scope=sc)
+                    for sc in scopes}
+            assert not ref.stats["demotions"], "oracle engine evicted"
+            return {sc: (np.asarray(o.scores), np.asarray(o.ids))
+                    for sc, o in outs.items()}
+
+    def bitwise(res, ref):
+        return (np.array_equal(np.asarray(res.scores), ref[0])
+                and np.array_equal(np.asarray(res.ids), ref[1]))
+
+    ref_outs = oracle_outs()
+    out = {"quick": quick, "rows_per_segment": R, "n_segments": n_segs,
+           "budget_bytes": budget, "requests_per_rung": T, "rungs": []}
+
+    with r.tiered(budget, link_bw=None) as probe:
+        probe.search(q, qm, stages=st, scope=scopes[0])     # compile
+        t0 = time.time()
+        for _ in range(8):
+            probe.search(q, qm, stages=st, scope=scopes[0])
+        t_scan3 = (time.time() - t0) / 8
+    t_scan = t_scan3 / len(scopes[0])
+    link_bw = 2 * seg_bytes / (PACE * t_scan)
+    t_promote = seg_bytes / link_bw
+    # generous enough that BOTH steady-state promotions fit; an injected
+    # slow transfer (2.5x a promote) blows it and degrades the request
+    deadline_ms = (2.2 * t_promote + 12 * t_scan) * 1e3
+    out.update(link_bw=link_bw, t_scan_s=t_scan, deadline_ms=deadline_ms)
+
+    with r.tiered(budget, link_bw=link_bw) as eng:
+        # warm every executable the rungs dispatch: the 3-scope cascade,
+        # the degraded fold, and a forced skip (same executables, fewer
+        # fold steps — warmth is about shapes, not visit counts)
+        eng.search(q, qm, stages=st, scope=scopes[0])
+        eng.search(q, qm, stages=st, scope=scopes[1],
+                   deadline_ms=deadline_ms)
+        eng.search(q, qm, stages=st, scope=scopes[2], deadline_ms=1e-3)
+        warm = tracing.trace_count()
+
+        def run_rung(plan, use_deadline=True, overlap=False, W=2):
+            inj = eng.arm(plan)
+            h0 = dict(eng.stats)
+            lat, completed, failed, degraded, skips = [], 0, 0, 0, 0
+            # offered ~= fault-free service rate (2 promotes + 3 scans +
+            # rerank), so backlog — and thus the tail — is what FAULT
+            # recovery adds, not a load mismatch baked into the schedule
+            period = 2 * t_promote + 8 * t_scan
+            start = time.monotonic()
+            for t in range(T):
+                sc = scopes[t % len(scopes)]
+                sched = start + t * period
+                now = time.monotonic()
+                if now < sched:                 # open-loop: arrivals are
+                    time.sleep(sched - now)     # scheduled, not gated on
+                if overlap:                     # the previous completion
+                    eng.prefetch(scopes[(t + W) % len(scopes)])
+                try:
+                    res = eng.search(
+                        q, qm, stages=st, scope=sc,
+                        deadline_ms=deadline_ms if use_deadline else None,
+                        overlap=overlap)
+                except Exception as e:          # injected-fault fallout
+                    failed += 1
+                    lat.append(time.monotonic() - sched)
+                    print(f"chaos: request {t} failed: {e!r}")
+                    continue
+                lat.append(time.monotonic() - sched)
+                completed += 1
+                if res.degraded:
+                    degraded += 1
+                    skips += res.skipped_segments
+                else:
+                    assert bitwise(res, ref_outs[sc]), (
+                        "non-degraded result diverged from the fully-"
+                        f"resident oracle on scope {sc} — the exact-or-"
+                        "flagged contract is broken")
+            eng.arm(None)
+            delta = {k: eng.stats[k] - h0[k] for k in
+                     ("retries", "transfer_errors", "worker_restarts",
+                      "oom_evictions", "deadline_skips", "degraded")}
+            return {"completed": completed, "failed": failed,
+                    "availability": completed / T, "degraded": degraded,
+                    "skipped_segments": skips,
+                    "p50_ms": float(np.percentile(lat, 50) * 1e3),
+                    "p99_ms": float(np.percentile(lat, 99) * 1e3),
+                    "injected": inj.counts() if inj else {},
+                    "stats": delta}
+
+        # --- the fault ladder ------------------------------------------
+        for rate in (0.0, 0.01, 0.05):
+            plan = None if rate == 0.0 else FLT.FaultPlan(
+                seed=23, transfer_fail_rate=rate, transfer_fail_burst=1,
+                slow_transfer_rate=0.25, slow_transfer_s=2.5 * t_promote)
+            rung = run_rung(plan)
+            rung["fail_rate"] = rate
+            out["rungs"].append(rung)
+            _emit(f"chaos_fail_{int(rate*100)}pct",
+                  rung["p99_ms"] / 1e3,
+                  f"avail={rung['availability']:.4f} "
+                  f"degraded={rung['degraded']}/{T} "
+                  f"retries={rung['stats']['retries']}")
+            assert rung["availability"] >= AVAIL_GATE, (
+                f"availability {rung['availability']:.4f} < {AVAIL_GATE} "
+                f"at {rate:.0%} transfer-failure rate — transient faults "
+                "are leaking out of the retry envelope")
+
+        p99_clean = out["rungs"][0]["p99_ms"]
+        p99_worst = out["rungs"][-1]["p99_ms"]
+        assert p99_worst <= 3 * p99_clean + 50.0, (
+            f"p99 {p99_worst:.1f}ms at the 5% rung vs {p99_clean:.1f}ms "
+            "clean — fault recovery is unbounding the tail")
+
+        # --- worker-kill rung ------------------------------------------
+        kill = run_rung(FLT.FaultPlan(seed=23, kill_worker_at=(1, 5)),
+                        use_deadline=False, overlap=True)
+        out["worker_kill"] = kill
+        _emit("chaos_worker_kill", kill["p99_ms"] / 1e3,
+              f"restarts={kill['stats']['worker_restarts']} "
+              f"avail={kill['availability']:.4f}")
+        assert kill["stats"]["worker_restarts"] >= 1, (
+            "the worker-kill rung never killed the worker — the "
+            "supervisor path went unexercised")
+        assert kill["availability"] >= AVAIL_GATE and not kill["degraded"], (
+            "worker death leaked into served results — the supervisor "
+            "must make restarts invisible")
+
+        retraces = tracing.trace_count() - warm
+        assert retraces == 0, (
+            f"chaos rungs retraced {retraces}x — fault recovery leaked "
+            "into a trace axis")
+        out["retraces"] = retraces
+
+    # --- corrupt-snapshot restore attempt ------------------------------
+    with tempfile.TemporaryDirectory() as td:
+        TIER.snapshot(r.store, td, step=1)
+        TIER.snapshot(r.store, td, step=2, faults=FLT.FaultPlan(
+            snapshot_bitflip_leaf=2))
+        try:
+            TIER.restore_store(td)               # latest = the bad step
+            raise AssertionError(
+                "restore of a bit-flipped snapshot succeeded silently")
+        except CKPT.CheckpointCorrupt as e:
+            assert "seg" in str(e), f"corrupt array not named: {e}"
+            out["corrupt_named"] = str(e).split("'")[1]
+        prev = TIER.restore_store(td, step=1)    # previous step: bitwise
+        for si, seg in enumerate(r.store.segments):
+            for k, v in seg.vectors.items():
+                assert np.array_equal(np.asarray(prev.segments[si].
+                                                 vectors[k]),
+                                      np.asarray(v)), (
+                    f"previous-step restore diverged at seg{si}/{k}")
+        out["prev_step_bitwise"] = True
+    _emit("chaos_snapshot", 0.0,
+          f"corrupt_named={out['corrupt_named']} prev_step_bitwise=True")
+
+    table["chaos_serving"] = out
+    _persist_ledger("BENCH_chaos.json", out)
+
+
 # named suites for --suite: subsets a CI job or a dev loop can run
 # without paying for the whole harness (names match the fns above)
 SUITES = {
@@ -1355,6 +1587,7 @@ SUITES = {
                 "mixed_tenant_tail_latency", "ingest_throughput"),
     "routed": ("routed_scan",),
     "tiered": ("tiered_qps",),
+    "chaos": ("chaos_serving",),
 }
 
 
@@ -1376,16 +1609,16 @@ def main() -> None:
     elif args.quick:
         names = ["eq1_cost_model", "kernel_vs_ref_scan",
                  "rerank_kernel_vs_ref", "routed_scan", "tiered_qps",
-                 "dynamic_corpus", "serving_tail_latency",
-                 "mixed_tenant_tail_latency", "ingest_throughput",
-                 "kernel_micro"]
+                 "chaos_serving", "dynamic_corpus",
+                 "serving_tail_latency", "mixed_tenant_tail_latency",
+                 "ingest_throughput", "kernel_micro"]
     else:
         names = ["table2_quality_qps", "scope_scaling", "eq1_cost_model",
                  "pooling_ablation", "hygiene_ablation", "kernel_micro",
                  "kernel_vs_ref_scan", "rerank_kernel_vs_ref",
-                 "routed_scan", "tiered_qps", "dynamic_corpus",
-                 "serving_tail_latency", "mixed_tenant_tail_latency",
-                 "ingest_throughput"]
+                 "routed_scan", "tiered_qps", "chaos_serving",
+                 "dynamic_corpus", "serving_tail_latency",
+                 "mixed_tenant_tail_latency", "ingest_throughput"]
     from repro.kernels import dispatch as DSP
     for name in names:
         # dispatch counters are per-process; without a reset a counter

@@ -253,12 +253,46 @@ def scenario_tiered():
     return closed, dict(corpus_rows=_CAPACITY, budget_bytes=_SERVE_BUDGET)
 
 
+def scenario_degraded():
+    """The full degraded-serving fold ``TieredEngine._search_degraded``
+    dispatches: per-segment scan bodies folded by ``_merge_pair``, then
+    per-segment rerank scores combined by ``_max_scores`` and closed by
+    ``_select_stage`` — traced as ONE body over a two-segment scope.
+    Degradation only changes WHICH segments are visited (a skipped
+    segment is a dispatch that never happens, not a different trace), so
+    the degraded path must fit the same J2 budget and pass the same J1/
+    J3/J4 checks as the healthy tiered path; a deadline storm costing
+    extra resident intermediates or a retrace axis trips here."""
+    from repro.retrieval import engine, tiering
+    from repro.retrieval.store import as_filter_arrays, filter_words
+    r, q, q_mask = _retriever()
+    stages = r._normalize(_stages_scan())
+    fn_store = r.store.segments[0].vectors
+    seg_scan = engine.make_segment_scan_fn(stages, _CAPACITY)
+    seg_rerank = engine.make_segment_rerank_fn(stages, 1, _CAPACITY)
+    fspec = as_filter_arrays(None, filter_words(fn_store))
+    off = jnp.asarray(0, jnp.int32)
+
+    def fold(s, qq, qm, ft, o):
+        v1, i1 = seg_scan(s, qq, qm, ft, o)
+        v2, i2 = seg_scan(s, qq, qm, ft, o)
+        vals, cand = tiering._merge_pair(v1, i1, v2, i2, 8)
+        s1 = seg_rerank(s, qq, qm, ft, o, cand)
+        s2 = seg_rerank(s, qq, qm, ft, o, cand)
+        sm = tiering._max_scores(s1, s2)
+        return tiering._select_stage(sm, cand, 4)
+
+    closed = jax.make_jaxpr(fold)(fn_store, q, q_mask, fspec, off)
+    return closed, dict(corpus_rows=_CAPACITY, budget_bytes=_SERVE_BUDGET)
+
+
 SCENARIOS = {
     "scan_int8": scenario_scan_int8,
     "rerank_fused": scenario_rerank_fused,
     "routed": scenario_routed,
     "ingest": scenario_ingest,
     "tiered": scenario_tiered,
+    "degraded": scenario_degraded,
 }
 
 

@@ -36,7 +36,10 @@ R3_SERVING_SCOPE = ("repro.retrieval.",)
 # comments, so the exemption is one auditable list; traced scope inside
 # these modules is still fully enforced (their jitted combine bodies obey
 # R3 like every other serving jit).
-R3_HOST_EXEMPT_MODULES = ("repro.retrieval.tiering",)
+R3_HOST_EXEMPT_MODULES = ("repro.retrieval.tiering",
+                          # the fault injector emulates slow/failed
+                          # transfers with host sleeps by construction
+                          "repro.retrieval.faults")
 R3_HOST_SYNC_CALLS = {
     "jax.block_until_ready": "blocks async dispatch",
     "jax.device_get": "device->host transfer",

@@ -55,13 +55,80 @@ cascade, so mixed-tenant traffic at warmed buckets causes zero retraces.
 The frontend queues per filter, flushes round-robin (a bursting tenant
 cannot starve a quiet one), and ``--tenant-quota`` bounds queued rows per
 tenant (excess submits are rejected at admission).
+
+Failure drills (compose with static/tiered/traffic modes):
+
+  PYTHONPATH=src python -m repro.launch.serve --pages 100 --hbm-budget \
+      20000000 --fault-plan transfer_fail_rate=0.05,seed=7 \
+      --deadline-ms 50 --degrade
+
+``--fault-plan`` arms the deterministic fault injector
+(``retrieval.faults.FaultPlan.parse`` spec) on the tiered engine's
+transfer/worker sites; ``--deadline-ms``/``--degrade`` give requests a
+wall budget under which the engine serves from resident segments only
+(results flagged degraded) instead of blocking on cold promotions. On
+SIGTERM/SIGINT the launcher exits GRACEFULLY: drain the frontend's
+queued requests, take a final generation-stamped snapshot (with
+``--snapshot-dir``), report shed/degraded/retry counters, exit 0.
 """
 from __future__ import annotations
 
 import argparse
+import signal
+import sys
 import time
 
 import numpy as np
+
+# live serving objects the SIGTERM/SIGINT path drains/snapshots; mode
+# runners register what they build (a launcher-scoped registry, not a
+# library surface)
+_LIVE: dict = {}
+
+
+class _Shutdown(BaseException):
+    """Raised inside the serving loop by the signal handler; unwinds to
+    main()'s graceful-exit path. A ``BaseException`` on purpose: the
+    frontend's poisoned-dispatch recovery catches ``Exception`` so one
+    bad cohort can't take the server down — a kill signal must sail
+    through that net, not be absorbed as a per-request error."""
+
+
+def _install_signals():
+    def handler(signum, frame):
+        raise _Shutdown(signal.Signals(signum).name)
+    for s in (signal.SIGTERM, signal.SIGINT):
+        signal.signal(s, handler)
+
+
+def _graceful_exit(args, reason: str) -> None:
+    """Drain, snapshot, report, exit 0 — a SIGTERM'd server finishes the
+    work it admitted and leaves a corpus the next process cold-starts
+    from (the restart-without-re-ingest loop)."""
+    print(f"\n{reason}: graceful shutdown")
+    fe = _LIVE.get("frontend")
+    if fe is not None:
+        served = fe.drain()
+        print(f"  drained {served} queued request(s); stats: "
+              f"shed={fe.stats['shed']} degraded={fe.stats['degraded']} "
+              f"errors={fe.stats['errors']} rejected={fe.stats['rejected']}")
+    eng = _LIVE.get("engine")
+    if eng is not None:
+        st = eng.stats
+        print(f"  engine: retries={st['retries']} "
+              f"transfer_errors={st['transfer_errors']} "
+              f"worker_restarts={st['worker_restarts']} "
+              f"degraded={st['degraded']} "
+              f"deadline_skips={st['deadline_skips']}")
+    retriever = _LIVE.get("retriever")
+    if retriever is not None and args.snapshot_dir:
+        # generation-stamped: snapshot() defaults step to the store
+        # generation, so a drained final state lands under its own step
+        path = retriever.snapshot(args.snapshot_dir)
+        print(f"  final snapshot -> {path}")
+    if eng is not None:
+        eng.close()
+    sys.exit(0)
 
 
 def _multi_tenant_retriever(args, cfg, bench, stages, int8_on, **kw):
@@ -146,10 +213,16 @@ def _run_tiered(args, bench, retriever, stages):
     host RAM, async-prefetch overlap vs synchronous fetch both timed."""
     import jax.numpy as jnp
 
+    from repro.retrieval.faults import FaultPlan
+    from repro.retrieval.tiering import DegradePolicy
+
     store_bytes = sum(s.nbytes for s in retriever.store.segments)
     q = jnp.asarray(bench.queries)
     qm = jnp.asarray(bench.query_mask)
-    with retriever.tiered(args.hbm_budget) as eng:
+    plan = FaultPlan.parse(args.fault_plan) if args.fault_plan else None
+    with retriever.tiered(args.hbm_budget, faults=plan) as eng:
+        _LIVE["engine"] = eng
+        _LIVE["retriever"] = retriever
         for overlap in (True, False):
             eng.search(q, qm, stages=stages, overlap=overlap)  # warm
             t0 = time.time()
@@ -161,11 +234,20 @@ def _run_tiered(args, bench, retriever, stages):
                   f"corpus {store_bytes/1e6:.0f}MB]: QPS={qps:.1f}  "
                   f"resident={len(eng.resident())}/"
                   f"{len(retriever.store.segments)} segments")
+        if args.deadline_ms > 0:
+            res = eng.search(
+                q, qm, stages=stages, deadline_ms=args.deadline_ms,
+                degrade=DegradePolicy() if args.degrade else None)
+            print(f"  deadline {args.deadline_ms:.0f}ms: "
+                  f"degraded={res.degraded} "
+                  f"skipped_segments={res.skipped_segments}")
         st = eng.stats
         print(f"  promotions={st['promotions']} demotions="
               f"{st['demotions']} h2d={st['bytes_h2d']/1e6:.0f}MB "
               f"hit-rate={st['hits']/max(st['hits']+st['misses'],1):.2f} "
-              f"wait={st['wait_s']*1e3:.1f}ms")
+              f"wait={st['wait_s']*1e3:.1f}ms retries={st['retries']} "
+              f"transfer_errors={st['transfer_errors']} "
+              f"worker_restarts={st['worker_restarts']}")
 
 
 def _run_static_tenants(args, cfg, bench, stages, int8_on):
@@ -246,7 +328,10 @@ def _run_traffic(args, cfg, bench, store, stages, int8_on):
                          max_q=bench.queries.shape[1],
                          flush_ms=args.flush_ms,
                          cache_size=args.result_cache,
-                         tenant_quota=args.tenant_quota)
+                         tenant_quota=args.tenant_quota,
+                         deadline_ms=args.deadline_ms)
+    _LIVE["frontend"] = fe
+    _LIVE["retriever"] = retriever
     n_warm = fe.warm()
     rate = args.arrival_rate or 0.8 * static_qps
     rng = np.random.default_rng(17)
@@ -277,6 +362,8 @@ def _run_traffic(args, cfg, bench, store, stages, int8_on):
           f"padded rows={fe.stats['rows_padded']}  "
           f"cache hits={fe.stats['cache_hits']}  "
           f"rejected={fe.stats['rejected']}  "
+          f"shed={fe.stats['shed']}  degraded={fe.stats['degraded']}  "
+          f"errors={fe.stats['errors']}  "
           f"steady-state retraces={retraces} (expect 0)")
 
 
@@ -455,7 +542,23 @@ def main():
                     help="max queued rows per tenant in the traffic "
                          "frontend (0 = unlimited); excess submits are "
                          "rejected at admission")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="per-request wall budget: tiered searches over "
+                         "budget serve resident segments only (flagged "
+                         "degraded); queued traffic requests past their "
+                         "deadline are shed instead of dispatched "
+                         "(0 = no deadline)")
+    ap.add_argument("--degrade", action="store_true",
+                    help="with --deadline-ms: apply the DegradePolicy "
+                         "(skip cold segments under deadline pressure) "
+                         "instead of the default resident-only fallback")
+    ap.add_argument("--fault-plan", default="",
+                    help="arm the deterministic fault injector on the "
+                         "tiered engine (FaultPlan.parse spec, e.g. "
+                         "'transfer_fail_rate=0.05,kill_worker_at=3,"
+                         "seed=7')")
     args = ap.parse_args()
+    _install_signals()
 
     cfg = get_config(args.arch)
     per = max(args.pages // 3, 30)
@@ -504,12 +607,15 @@ def main():
     if store is not None:
         print(f"indexed {store.n_docs} pages in {time.time()-t0:.2f}s "
               f"(named vectors: {sorted(store.dims())})")
-    if args.traffic > 0:
-        _run_traffic(args, cfg, bench, store, stages, int8_on)
-    elif args.ingest_batches > 0:
-        _run_ingest(args, cfg, bench, store, stages, int8_on)
-    else:
-        _run_static(args, cfg, bench, store, stages, int8_on)
+    try:
+        if args.traffic > 0:
+            _run_traffic(args, cfg, bench, store, stages, int8_on)
+        elif args.ingest_batches > 0:
+            _run_ingest(args, cfg, bench, store, stages, int8_on)
+        else:
+            _run_static(args, cfg, bench, store, stages, int8_on)
+    except _Shutdown as e:
+        _graceful_exit(args, str(e))
 
 
 if __name__ == "__main__":

@@ -76,20 +76,45 @@ class AdmissionError(RuntimeError):
     the caller should retry after draining or surface backpressure)."""
 
 
+class DeadlineExceeded(RuntimeError):
+    """The request's deadline was already blown before it could be
+    dispatched, so it was SHED instead of queued/served — spending a
+    dispatch on an answer nobody is still waiting for would only grow
+    everyone else's tail."""
+
+
 class PendingResult:
     """Handle for a submitted request; filled in by the flush that serves
-    it. ``latency`` is seconds from admission to completed dispatch."""
-    __slots__ = ("scores", "ids", "t_submit", "t_done", "cached")
+    it (or sheds/fails it — a completed handle always resolves: check
+    ``error``/``shed``/``degraded``, or call ``result()`` to get
+    ``(scores, ids)``-or-raise). ``latency`` is seconds from admission to
+    completion."""
+    __slots__ = ("scores", "ids", "t_submit", "t_done", "cached",
+                 "error", "shed", "degraded", "deadline")
 
-    def __init__(self, t_submit: float):
+    def __init__(self, t_submit: float, deadline: float | None = None):
         self.scores = None
         self.ids = None
         self.t_submit = t_submit
         self.t_done = None
         self.cached = False
+        self.error = None
+        self.shed = False
+        self.degraded = False
+        self.deadline = deadline
 
     def done(self) -> bool:
         return self.t_done is not None
+
+    def result(self) -> tuple:
+        """(scores, ids), or raise: the dispatch error for a failed
+        cohort, ``DeadlineExceeded`` for a shed request, ``ValueError``
+        while still queued. Waiters RAISE, never hang."""
+        if self.error is not None:
+            raise self.error
+        if self.t_done is None:
+            raise ValueError("request not served yet — pump() the frontend")
+        return self.scores, self.ids
 
     @property
     def latency(self) -> float:
@@ -110,9 +135,23 @@ class ServingFrontend:
     def __init__(self, retriever, stages: tuple, *, max_batch: int = 16,
                  max_q: int = 32, min_q: int = 8, flush_ms: float = 2.0,
                  cache_size: int = 0, tenant_quota: int = 0,
+                 deadline_ms: float = 0.0, engine=None, degrade=None,
                  clock=time.perf_counter):
         self.retriever = retriever
         self.stages = retriever._normalize(tuple(stages))
+        # per-request wall budget (0 = none): a request whose deadline is
+        # already blown at admission or flush time is SHED (completed
+        # with DeadlineExceeded) instead of queued/dispatched —
+        # load-shedding keeps the tail of the requests still worth
+        # serving. submit(deadline_ms=...) overrides per request.
+        self.deadline_ms = float(deadline_ms)
+        # optional tiering.TieredEngine to dispatch through: micro-batches
+        # then carry their oldest member's remaining budget into the
+        # engine, which degrades (resident-only serving, flagged) instead
+        # of blocking on cold-segment promotions. ``degrade`` is the
+        # tiering.DegradePolicy to degrade under (None = engine default).
+        self._engine = engine
+        self._degrade = degrade
         self.b_buckets = bucket_ladder(max_batch)
         self.q_buckets = bucket_ladder(max_q, min_q)
         self.max_batch = self.b_buckets[-1]
@@ -131,7 +170,8 @@ class ServingFrontend:
         self._tenant_rows: dict = {}                # tenant id -> rows
         self._cache: OrderedDict = OrderedDict()
         self.stats = {"requests": 0, "dispatches": 0, "cache_hits": 0,
-                      "rows_real": 0, "rows_padded": 0, "rejected": 0}
+                      "rows_real": 0, "rows_padded": 0, "rejected": 0,
+                      "shed": 0, "degraded": 0, "errors": 0}
 
     # ------------------------------------------------------------------
     # buckets
@@ -188,8 +228,13 @@ class ServingFrontend:
         hit = self._cache_get(q, qm, fkey)
         if hit is not None:
             return hit
-        scores, ids = self._run_block([(q, qm)], fkey)
-        self._cache_put(q, qm, fkey, (scores, ids))
+        scores, ids, degraded = self._run_block([(q, qm)], fkey)
+        if degraded:
+            self.stats["degraded"] += 1
+        else:
+            # a degraded (partial) answer must never be served again
+            # from cache as if it were the exact one
+            self._cache_put(q, qm, fkey, (scores, ids))
         return scores, ids
 
     # ------------------------------------------------------------------
@@ -197,13 +242,21 @@ class ServingFrontend:
     # ------------------------------------------------------------------
 
     def submit(self, q, q_mask=None, filter=None,
-               t_submit: float | None = None) -> PendingResult:
+               t_submit: float | None = None,
+               deadline_ms: float | None = None) -> PendingResult:
         """Queue one request for the next micro-batch. Returns a
         ``PendingResult`` filled in by a later ``pump``/``flush``
         (immediately, on a result-cache hit). Requests queue per FILTER
         identity — a micro-batch carries exactly one fspec — and a
         tenant over its ``tenant_quota`` of queued rows gets
         ``AdmissionError`` instead of a slot.
+
+        ``deadline_ms`` (default: the frontend's) bounds the request's
+        wall budget from ``t_submit``; a request whose deadline is
+        already blown — here, or by the time its flush comes — is SHED:
+        completed immediately with ``DeadlineExceeded`` (``shed=True``,
+        ``stats["shed"]``), never queued behind work that would only make
+        it later.
 
         ``t_submit`` is the request's TRUE arrival time on this frontend's
         clock (default: now). Replay loops must pass the scheduled arrival
@@ -213,12 +266,17 @@ class ServingFrontend:
         q, qm = self._admit(q, q_mask)
         fkey = self._filter_key(filter)
         self.stats["requests"] += 1
-        pr = PendingResult(self.clock() if t_submit is None else t_submit)
+        t0 = self.clock() if t_submit is None else t_submit
+        eff = self.deadline_ms if deadline_ms is None else deadline_ms
+        pr = PendingResult(t0, t0 + eff / 1e3 if eff else None)
         hit = self._cache_get(q, qm, fkey)
         if hit is not None:
             pr.scores, pr.ids = hit
             pr.t_done = self.clock()
             pr.cached = True
+            return pr
+        if pr.deadline is not None and self.clock() > pr.deadline:
+            self._shed(pr, self.clock())     # blown before admission
             return pr
         tenant = self._tenant_of(fkey)
         if self.tenant_quota and self._tenant_rows.get(tenant, 0) \
@@ -283,23 +341,76 @@ class ServingFrontend:
         del self._queues[fkey]
         if queue:
             self._queues[fkey] = queue
-        scores, ids = self._run_block([(q, qm) for _, q, qm in take], fkey)
-        r0 = 0
-        t_done = self.clock()
+        # the popped requests leave the queue NOW, whatever happens next:
+        # keep the row/quota accounting in step even when the dispatch
+        # below throws (accounting after dispatch leaked quota and queued
+        # rows on every dispatch error)
         tenant = self._tenant_of(fkey)
-        for pr, q, qm in take:
-            b = q.shape[0]
-            pr.scores, pr.ids = scores[r0:r0 + b], ids[r0:r0 + b]
-            pr.t_done = t_done
-            self._cache_put(q, qm, fkey, (pr.scores, pr.ids))
-            r0 += b
         self._queued_rows -= rows
         left = self._tenant_rows.get(tenant, 0) - rows
         if left > 0:
             self._tenant_rows[tenant] = left
         else:
             self._tenant_rows.pop(tenant, None)
+        # shed the cohort members whose deadline is already blown — a
+        # dispatch slot spent on them only delays the live ones
+        now = self.clock()
+        live = []
+        for item in take:
+            pr = item[0]
+            if pr.deadline is not None and now > pr.deadline:
+                self._shed(pr, now)
+            else:
+                live.append(item)
+        if not live:
+            return len(take)
+        budget = None
+        deadlines = [pr.deadline for pr, _, _ in live
+                     if pr.deadline is not None]
+        if deadlines:
+            # the cohort shares one dispatch: the tightest member's
+            # remaining budget bounds it
+            budget = max((min(deadlines) - now) * 1e3, 0.0)
+        try:
+            scores, ids, degraded = self._run_block(
+                [(q, qm) for _, q, qm in live], fkey, deadline_ms=budget)
+        except BaseException as e:
+            # complete every popped request with the error — waiters
+            # raise (PendingResult.result) instead of hanging forever on
+            # a handle no later flush will ever see again
+            t_done = self.clock()
+            for pr, _, _ in live:
+                pr.error = e
+                pr.t_done = t_done
+                self.stats["errors"] += 1
+            if not isinstance(e, Exception):
+                # a kill signal (KeyboardInterrupt, a shutdown sentinel)
+                # must still reach the serving loop — complete the
+                # cohort, then let it fly
+                raise
+            return len(take)
+        r0 = 0
+        t_done = self.clock()
+        for pr, q, qm in live:
+            b = q.shape[0]
+            pr.scores, pr.ids = scores[r0:r0 + b], ids[r0:r0 + b]
+            pr.t_done = t_done
+            if degraded:
+                pr.degraded = True
+                self.stats["degraded"] += 1
+            else:
+                # degraded (partial) answers are flagged, never cached
+                self._cache_put(q, qm, fkey, (pr.scores, pr.ids))
+            r0 += b
         return len(take)
+
+    def _shed(self, pr: PendingResult, now: float) -> None:
+        pr.shed = True
+        pr.error = DeadlineExceeded(
+            f"deadline blown {1e3 * (now - pr.deadline):.2f}ms before "
+            f"dispatch — request shed")
+        pr.t_done = now
+        self.stats["shed"] += 1
 
     def drain(self) -> int:
         """Flush until every filter queue is empty. Returns requests
@@ -346,10 +457,11 @@ class ServingFrontend:
         unscoped requests, which share one bucket)."""
         return getattr(fkey, "tenant", -1) if fkey is not None else -1
 
-    def _run_block(self, reqs: list, fkey=None) -> tuple:
+    def _run_block(self, reqs: list, fkey=None,
+                   deadline_ms: float | None = None) -> tuple:
         """Pad a list of admitted same-filter requests into one bucket
         block and dispatch it. Returns host (scores [rows, k], page ids
-        [rows, k])."""
+        [rows, k], degraded flag)."""
         rows = sum(q.shape[0] for q, _ in reqs)
         q_len = max(q.shape[1] for q, _ in reqs)
         d = reqs[0][0].shape[2]
@@ -362,18 +474,31 @@ class ServingFrontend:
             qp[r0:r0 + b, :ql] = q
             qmp[r0:r0 + b, :ql] = qm
             r0 += b
-        return self._dispatch(qp, qmp, rows=rows, fkey=fkey)
+        return self._dispatch(qp, qmp, rows=rows, fkey=fkey,
+                              deadline_ms=deadline_ms)
 
     def _dispatch(self, qp: np.ndarray, qmp: np.ndarray, rows: int,
-                  fkey=None) -> tuple:
+                  fkey=None, deadline_ms: float | None = None) -> tuple:
         """One cascade launch on a padded bucket block. Padded batch rows
         are dropped BEFORE id translation (their scores rank dead/zero
         content; translating them would be wasted host work). ``fkey`` is
         the block's filter — data into the compiled cascade, so mixed
-        filter traffic at warmed buckets stays zero-retrace."""
+        filter traffic at warmed buckets stays zero-retrace. Returns
+        (scores, ids, degraded); ``degraded`` is only ever True on the
+        tiered-engine path under a deadline."""
         self.stats["dispatches"] += 1
         self.stats["rows_real"] += rows
         self.stats["rows_padded"] += qp.shape[0] - rows
+        if self._engine is not None:
+            # tiered path: the engine translates/masks ids itself and
+            # degrades under the cohort's remaining budget instead of
+            # blocking on cold-segment promotions
+            res = self._engine.search(
+                jnp.asarray(qp), jnp.asarray(qmp), stages=self.stages,
+                filter=fkey, deadline_ms=deadline_ms,
+                degrade=self._degrade)
+            return (np.asarray(res.scores)[:rows],
+                    np.asarray(res.ids)[:rows], bool(res.degraded))
         scores, slots = self.retriever.search(
             jnp.asarray(qp), jnp.asarray(qmp), stages=self.stages,
             translate_ids=False, filter=fkey)
@@ -383,7 +508,7 @@ class ServingFrontend:
         # filter-excluded live slots score NEG like dead slots; mask their
         # ids so filler can never expose another tenant's page ids (same
         # contract as Retriever.search with translate_ids=True)
-        return scores, np.where(scores <= NEG / 2, np.int64(-1), ids)
+        return scores, np.where(scores <= NEG / 2, np.int64(-1), ids), False
 
     def _cache_key(self, q: np.ndarray, qm: np.ndarray, fkey):
         # the store generation invalidates every entry on corpus mutation

@@ -37,12 +37,25 @@ import json
 import os
 import shutil
 import zipfile
+import zlib
 
 import numpy as np
 import jax
 
 # same-width integer stand-ins for extended dtypes numpy can't serialise
 _BITS = {1: np.uint8, 2: np.uint16, 4: np.uint32, 8: np.uint64}
+
+
+class CheckpointCorrupt(RuntimeError):
+    """A restored array's bytes do not match the checksum recorded at
+    save time — the checkpoint is damaged and must not be served. The
+    message names the bad array; recover by restoring an earlier step."""
+
+
+def _crc(a: np.ndarray) -> int:
+    """CRC32 of an array's stored bytes (the bit-pattern form extended
+    dtypes are written as)."""
+    return zlib.crc32(np.ascontiguousarray(a).view(np.uint8).reshape(-1))
 
 
 def _leaves(tree):
@@ -63,7 +76,19 @@ _named_dtype = named_dtype
 
 
 def save(ckpt_dir: str, step: int, tree, meta: dict | None = None,
-         keep: int = 3) -> str:
+         keep: int = 3, leaf_names: list | None = None,
+         faults=None) -> str:
+    """Write one checkpoint step (see module docstring for the layout).
+
+    Every leaf's CRC32 (of its stored bit-pattern bytes) is recorded in
+    ``meta.json``; ``restore`` verifies them and raises
+    ``CheckpointCorrupt`` naming the damaged array. ``leaf_names`` is an
+    optional parallel list of human names used in that message (defaults
+    to ``leaf_<i>``). ``faults`` is an optional
+    ``retrieval.faults.FaultInjector`` whose snapshot hooks emulate a
+    writer killed mid-step (``.tmp`` debris left behind, LATEST
+    untouched) or silent media corruption (a bit flip AFTER the checksum
+    is computed)."""
     os.makedirs(ckpt_dir, exist_ok=True)
     name = f"step_{step:08d}"
     tmp = os.path.join(ckpt_dir, name + ".tmp")
@@ -74,7 +99,7 @@ def save(ckpt_dir: str, step: int, tree, meta: dict | None = None,
     # stream: one leaf on the host at a time (device_get -> write -> drop),
     # as individual .npy members of the npz zip — np.load reads the result
     # exactly as if np.savez had written it
-    shapes, dtypes = [], []
+    shapes, dtypes, checksums = [], [], []
     with zipfile.ZipFile(os.path.join(tmp, "arrays.npz"), "w",
                          zipfile.ZIP_STORED, allowZip64=True) as zf:
         for i, x in enumerate(_leaves(tree)):
@@ -83,13 +108,20 @@ def save(ckpt_dir: str, step: int, tree, meta: dict | None = None,
             dtypes.append(str(a.dtype))
             if a.dtype.kind == "V":          # extended dtype: store bits
                 a = a.view(_BITS[a.dtype.itemsize])
+            checksums.append(_crc(a))
+            if faults is not None:
+                a = faults.corrupt_snapshot_leaf(i, a)
             with zf.open(f"leaf_{i}.npy", "w", force_zip64=True) as f:
                 np.lib.format.write_array(f, a, allow_pickle=False)
             del a
+            if faults is not None:
+                faults.snapshot_leaf_written(i)   # may 'crash' the writer
     with open(os.path.join(tmp, "meta.json"), "w") as f:
         json.dump({"step": step,
                    "shapes": shapes,
                    "dtypes": dtypes,
+                   "checksums": checksums,
+                   "leaf_names": leaf_names,
                    "meta": meta or {}}, f)
     if os.path.exists(final):
         shutil.rmtree(final)
@@ -104,10 +136,29 @@ def save(ckpt_dir: str, step: int, tree, meta: dict | None = None,
 
 
 def _gc(ckpt_dir: str, keep: int):
+    """Prune old steps, keeping the last ``keep`` COMPLETE ones. Crash
+    debris (``.tmp`` directories from a killed writer) is cleaned up but
+    never counted against ``keep``, and the newest complete step — plus
+    whatever LATEST names — is never deleted, even with ``keep <= 0``."""
     steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_")
                    and not d.endswith(".tmp"))
-    for d in steps[:-keep]:
+    if not steps:
+        return
+    protected = {steps[-1]}
+    latest = os.path.join(ckpt_dir, "LATEST")
+    if os.path.exists(latest):
+        with open(latest) as f:
+            protected.add(f.read().strip())
+    for d in steps[:-max(int(keep), 1)]:
+        if d in protected:
+            continue
         shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+    # a .tmp older than the newest complete step is debris from a killed
+    # writer (a live save owns at most the newest name); drop it so crash
+    # loops can't fill the disk
+    for d in os.listdir(ckpt_dir):
+        if d.endswith(".tmp") and d[:-len(".tmp")] < steps[-1]:
+            shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
 
 
 def latest_step(ckpt_dir: str) -> int | None:
@@ -151,9 +202,17 @@ def restore(ckpt_dir: str, example_tree, step: int | None = None,
         f"leaf count mismatch: {len(leaves)} vs {len(meta['shapes'])}"
     shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
                     if shardings is not None else [None] * len(leaves))
+    sums = meta.get("checksums")
+    names = meta.get("leaf_names") or []
     out = []
     for i, (ex, sh) in enumerate(zip(leaves, shard_leaves)):
         a = data[f"leaf_{i}"]
+        if sums is not None and _crc(a) != sums[i]:
+            label = names[i] if i < len(names) else f"leaf_{i}"
+            raise CheckpointCorrupt(
+                f"checkpoint {path}: array '{label}' failed its CRC32 "
+                f"check — bytes on disk do not match the bytes saved; "
+                f"restore an earlier step")
         want = meta["dtypes"][i]
         if str(a.dtype) != want:
             wd = _named_dtype(want)

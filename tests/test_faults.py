@@ -1,0 +1,403 @@
+"""Fault injection + graceful degradation: the serving-under-failure
+contracts (ISSUE 10 tentpole).
+
+What must hold (and is asserted here):
+
+- **Faults are deterministic** — a ``FaultPlan`` is seeded and
+  counter-keyed: the same operation sequence replays the same faults,
+  and ``FaultPlan.parse`` round-trips the CLI spec.
+- **Transient failures are invisible** — injected transfer failures
+  inside the retry budget recover (``stats["retries"]``) and results
+  stay BITWISE the fully-resident oracle; failures that exhaust the
+  budget surface as a typed ``TierError`` (never a hang), and the engine
+  serves bitwise again once the fault clears.
+- **Worker death is survivable** — an injected ``WorkerKilled`` (a
+  BaseException: per-item recovery must not swallow it) genuinely kills
+  the worker thread; the supervisor restarts it, re-enqueues pending
+  work, and in-flight waiters complete. ``stats["worker_restarts"]``.
+- **Degradation is exact-or-flagged** — under a deadline the engine
+  skips cold segments (``degraded=True`` + skip count) and the degraded
+  answer is bitwise the oracle over the segments actually scanned; a
+  non-degraded answer is ALWAYS the full bitwise oracle.
+- **Snapshots fail loudly, never wrongly** — a writer killed mid-step
+  leaves only ``.tmp`` debris (LATEST untouched, previous step restores
+  bitwise); a bit flipped under a stored array raises
+  ``CheckpointCorrupt`` NAMING the damaged ``seg<i>/<key>`` array.
+- **Recovery preserves residency discipline** — after ANY seeded fault
+  schedule, the LRU/pin/byte-accounting invariants hold and searches are
+  bitwise again (hypothesis property).
+"""
+import os
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import multistage as MST
+from repro.retrieval import faults as FLT
+from repro.retrieval import tiering as TIER
+from repro.retrieval.retriever import Retriever
+from repro.retrieval.store import VectorStore
+from repro.retrieval.tiering import DegradePolicy, TierError
+from repro.training import checkpoint as CKPT
+
+D_FULL, D_POOL, DIM = 6, 2, 16
+CAP = 64
+TWO = (MST.Stage("mean_pooling", 8), MST.Stage("initial", 4))
+ONE = (MST.Stage("mean_pooling", 4),)
+
+
+def batch(n, seed=0):
+    r = np.random.default_rng(seed)
+    full = r.normal(size=(n, D_FULL, DIM)).astype(np.float32)
+    return VectorStore({
+        "initial": jnp.asarray(full),
+        "mean_pooling": jnp.asarray(
+            full.reshape(n, D_POOL, D_FULL // D_POOL, DIM).mean(2)),
+    }, n, "float32")
+
+
+def queries(seed=9, b=2, q=4):
+    return jnp.asarray(np.random.default_rng(seed).normal(
+        size=(b, q, DIM)).astype(np.float32))
+
+
+def multi_segment_retriever(n_segs=4):
+    r = Retriever(batch(CAP, 0), capacity=CAP)
+    for s in range(1, n_segs):
+        r.upsert(batch(CAP, s))
+    r.delete([1, CAP + 2])
+    assert len(r.store.segments) == n_segs
+    return r
+
+
+def assert_bitwise(got, want):
+    gs, gi = got
+    ws, wi = want
+    np.testing.assert_array_equal(np.asarray(gs), np.asarray(ws))
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+
+
+def pins_clear(eng):
+    assert not eng._pins or not any(eng._pins.values()), \
+        f"leaked pins: {eng._pins}"
+
+
+# ----------------------------------------------------------------------
+# the injector itself
+# ----------------------------------------------------------------------
+
+
+def test_fault_plan_parse():
+    p = FLT.FaultPlan.parse(
+        "transfer_fail_rate=0.05,kill_worker_at=3+9,seed=7,"
+        "transfer_fail_burst=2,oom_at=1,snapshot_bitflip_leaf=4")
+    assert p.transfer_fail_rate == 0.05
+    assert p.kill_worker_at == (3, 9)
+    assert p.seed == 7 and p.transfer_fail_burst == 2
+    assert p.oom_at == (1,) and p.snapshot_bitflip_leaf == 4
+    assert FLT.FaultPlan.parse("") == FLT.FaultPlan()
+    with pytest.raises(ValueError, match="unknown fault-plan field"):
+        FLT.FaultPlan.parse("warp_factor=9")
+    with pytest.raises(ValueError, match="not k=v"):
+        FLT.FaultPlan.parse("seed")
+    with pytest.raises(TypeError):
+        FLT.as_injector(object())
+
+
+def test_injector_deterministic_and_counter_keyed():
+    plan = FLT.FaultPlan(seed=3, transfer_fail_rate=0.4,
+                         slow_transfer_rate=0.3, slow_transfer_s=0.0,
+                         oom_at=(2,), kill_worker_at=(1,))
+
+    def drive(inj):
+        log = []
+        for site in ("h2d", "d2h", "h2d", "h2d", "d2h", "worker",
+                     "worker", "h2d", "d2h", "h2d"):
+            try:
+                inj.fire(site)
+                log.append((site, None))
+            except BaseException as e:          # includes WorkerKilled
+                log.append((site, type(e).__name__))
+        return log, list(inj.events)
+
+    a = drive(FLT.FaultInjector(plan))
+    b = drive(FLT.FaultInjector(plan))
+    assert a == b, "same plan + same op sequence must replay identically"
+    # a different seed reshuffles the rate-drawn faults but the explicit
+    # schedules stay pinned to their op indices
+    log_c, _ = drive(FLT.FaultInjector(
+        FLT.FaultPlan(seed=4, transfer_fail_rate=0.4, oom_at=(2,),
+                      kill_worker_at=(1,))))
+    assert log_c[6] == ("worker", "WorkerKilled")
+    kinds = [k for s, k in a[0] if s == "h2d"]
+    assert "DeviceOOM" in kinds, "explicit oom_at index never fired"
+
+
+def test_disarm_keeps_counters_aligned():
+    plan = FLT.FaultPlan(transfer_fail_ops=(0, 2))
+    inj = FLT.FaultInjector(plan)
+    inj.disarm()
+    inj.fire("h2d")                               # op 0: scheduled, armed off
+    inj.armed = True
+    inj.fire("h2d")                               # op 1: clean
+    with pytest.raises(FLT.TransientTransferError):
+        inj.fire("h2d")                           # op 2: still aligned
+    assert inj.counts() == {"transfer_fail": 1}
+
+
+# ----------------------------------------------------------------------
+# transient failures: retried inside the engine, invisible to results
+# ----------------------------------------------------------------------
+
+
+def test_transient_transfer_failures_retry_bitwise():
+    r = multi_segment_retriever()
+    q = queries()
+    want = r.search(q, stages=TWO)
+    seg_bytes = r.store.segments[0].nbytes
+    # every 3rd transfer op fails once; burst=1 < retry budget, so every
+    # failure recovers on the next attempt
+    plan = FLT.FaultPlan(transfer_fail_ops=tuple(range(0, 30, 3)))
+    with r.tiered(seg_bytes + 1, faults=plan) as eng:
+        got = eng.search(q, stages=TWO, overlap=False)
+        assert_bitwise(got, want)
+        assert eng.stats["retries"] > 0, "no injected failure was retried"
+        assert eng.stats["transfer_errors"] == 0
+        assert not got.degraded
+        pins_clear(eng)
+
+
+def test_permanent_failure_is_typed_then_recovers():
+    r = multi_segment_retriever()
+    q = queries()
+    want = r.search(q, stages=TWO)
+    seg_bytes = r.store.segments[0].nbytes
+    with r.tiered(seg_bytes + 1, max_retries=2) as eng:
+        eng.search(q, stages=TWO, overlap=False)     # warm + settle LRU
+        # burst far beyond the retry budget: the failure is permanent
+        # while armed and must surface as a typed TierError, not a hang
+        eng.arm(FLT.FaultPlan(transfer_fail_rate=1.0,
+                              transfer_fail_burst=10 ** 6))
+        with pytest.raises(TierError, match="failed after 3 attempts"):
+            eng.search(q, stages=TWO, overlap=False)
+        assert eng.stats["transfer_errors"] >= 1
+        pins_clear(eng)
+        # the fault clears -> the SAME engine serves bitwise again
+        eng.arm(None)
+        assert_bitwise(eng.search(q, stages=TWO, overlap=False), want)
+        pins_clear(eng)
+
+
+def test_oom_on_promotion_evicts_and_recovers():
+    r = multi_segment_retriever()
+    q = queries()
+    want = r.search(q, stages=TWO)
+    seg_bytes = r.store.segments[0].nbytes
+    plan = FLT.FaultPlan(oom_at=(0, 3))
+    with r.tiered(2 * seg_bytes + 1, faults=plan) as eng:
+        got = eng.search(q, stages=TWO, overlap=False)
+        assert_bitwise(got, want)
+        assert eng.stats["oom_evictions"] >= 1, \
+            "injected DeviceOOM never forced an eviction"
+        pins_clear(eng)
+
+
+# ----------------------------------------------------------------------
+# worker death: the supervisor restarts, waiters never hang
+# ----------------------------------------------------------------------
+
+
+def test_worker_kill_supervisor_restarts_bitwise():
+    r = multi_segment_retriever()
+    q = queries()
+    want = r.search(q, stages=TWO)
+    seg_bytes = r.store.segments[0].nbytes
+    # the first two worker items die mid-flight: one kills a prefetch the
+    # search is about to wait on, the restart's re-enqueued op survives
+    plan = FLT.FaultPlan(kill_worker_at=(0, 2))
+    with r.tiered(seg_bytes + 1, faults=plan) as eng:
+        for _ in range(3):
+            eng.prefetch([2])
+            got = eng.search(q, stages=TWO, overlap=True)
+            assert_bitwise(got, want)
+        assert eng.stats["worker_restarts"] >= 1, \
+            "worker died but the supervisor never restarted it"
+        assert eng._worker.is_alive()
+        pins_clear(eng)
+    inj = FLT.FaultInjector(plan)
+    assert inj.plan.kill_worker_at == (0, 2)
+
+
+# ----------------------------------------------------------------------
+# deadlines: exact-or-flagged degradation
+# ----------------------------------------------------------------------
+
+
+def test_deadline_degrades_exact_or_flagged():
+    r = multi_segment_retriever()
+    q = queries()
+    seg_bytes = r.store.segments[0].nbytes
+    n = len(r.store.segments)
+    with r.tiered(seg_bytes + 1, link_bw=seg_bytes / 0.05) as eng, \
+            r.tiered((n + 1) * seg_bytes) as oracle:
+        eng.search(q, stages=TWO, scope=[0], overlap=False)  # 0 resident
+        # an impossible budget: every cold promotion (50ms on the
+        # emulated link) gets skipped; the resident segment still serves
+        res = eng.search(q, stages=TWO, deadline_ms=1.0)
+        assert res.degraded and res.skipped_segments == n - 1
+        assert eng.stats["deadline_skips"] >= n - 1
+        assert eng.stats["degraded"] >= 1
+        # partial-but-never-wrong: the degraded answer IS the oracle
+        # answer over the segments actually scanned
+        assert_bitwise(res, oracle.search(q, stages=TWO, scope=[0]))
+        # a generous budget: nothing skipped -> NOT degraded, and
+        # bitwise the full oracle (the exact-or-flagged invariant)
+        res = eng.search(q, stages=TWO, deadline_ms=60_000.0)
+        assert not res.degraded and res.skipped_segments == 0
+        assert_bitwise(res, oracle.search(q, stages=TWO))
+        pins_clear(eng)
+
+
+def test_degrade_policy_min_segments_forces_answers():
+    r = multi_segment_retriever()
+    q = queries()
+    seg_bytes = r.store.segments[0].nbytes
+    n = len(r.store.segments)
+    with r.tiered(seg_bytes + 1, link_bw=seg_bytes / 0.05) as eng, \
+            r.tiered((n + 1) * seg_bytes) as oracle:
+        eng.search(q, stages=TWO, scope=[3], overlap=False)  # 3 resident
+        res = eng.search(q, stages=TWO, deadline_ms=1.0,
+                         degrade=DegradePolicy(min_segments=2))
+        # segment 3 was a resident hit; the policy floor forced ONE
+        # skipped segment in (scope order: 0) despite the blown budget
+        assert res.degraded and res.skipped_segments == n - 2
+        assert_bitwise(res, oracle.search(q, stages=TWO, scope=[3, 0]))
+        pins_clear(eng)
+
+
+def test_degraded_stage_fallback_on_blown_arrival():
+    r = multi_segment_retriever()
+    q = queries()
+    with r.tiered(10 * r.store.segments[0].nbytes) as eng:
+        policy = DegradePolicy(skip_cold=False, stages_degraded=ONE)
+        res = eng.search(q, stages=TWO, deadline_ms=1e-9, degrade=policy)
+        # nothing was skipped, but the cheaper cascade answered — the
+        # result must still carry the degraded flag
+        assert res.degraded and res.skipped_segments == 0
+        assert_bitwise(res, eng.search(q, stages=ONE))
+
+
+# ----------------------------------------------------------------------
+# snapshot integrity: crash debris, bit flips, GC discipline
+# ----------------------------------------------------------------------
+
+
+def test_snapshot_midwrite_kill_falls_back_bitwise(tmp_path):
+    r = multi_segment_retriever()
+    q = queries()
+    want = r.search(q, stages=TWO)
+    TIER.snapshot(r.store, str(tmp_path), step=1)
+    with pytest.raises(FLT.SnapshotKilled):
+        TIER.snapshot(r.store, str(tmp_path), step=2,
+                      faults=FLT.FaultPlan(snapshot_kill_after_leaf=2))
+    # the kill left only .tmp debris: LATEST still names step 1
+    assert any(d.endswith(".tmp") for d in os.listdir(tmp_path))
+    assert CKPT.latest_step(str(tmp_path)) == 1
+    r2 = Retriever.from_snapshot(str(tmp_path))
+    assert_bitwise(r2.search(q, stages=TWO), want)
+    # the next COMPLETE step sweeps the dead writer's debris
+    TIER.snapshot(r.store, str(tmp_path), step=3)
+    assert not any(d.endswith(".tmp") for d in os.listdir(tmp_path))
+    assert CKPT.latest_step(str(tmp_path)) == 3
+
+
+def test_snapshot_bitflip_detected_and_named(tmp_path):
+    r = multi_segment_retriever()
+    q = queries()
+    want = r.search(q, stages=TWO)
+    TIER.snapshot(r.store, str(tmp_path), step=1)
+    TIER.snapshot(r.store, str(tmp_path), step=2,
+                  faults=FLT.FaultPlan(snapshot_bitflip_leaf=3))
+    with pytest.raises(CKPT.CheckpointCorrupt, match=r"seg\d+/\w+"):
+        TIER.restore_store(str(tmp_path))
+    # the damage is step-local: the previous step restores bitwise
+    store = TIER.restore_store(str(tmp_path), step=1)
+    got = Retriever(store, place=False).search(q, stages=TWO)
+    assert_bitwise(got, want)
+
+
+def test_gc_never_deletes_newest_complete(tmp_path):
+    tree = [np.arange(8, dtype=np.float32)]
+    for step in (1, 2, 3):
+        CKPT.save(str(tmp_path), step, tree, keep=2)
+    names = sorted(d for d in os.listdir(tmp_path)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    assert names == ["step_00000002", "step_00000003"]
+    # keep=0 must still floor at the newest complete step, .tmp debris
+    # notwithstanding
+    os.makedirs(tmp_path / "step_00000001.tmp")
+    CKPT.save(str(tmp_path), 4, tree, keep=0)
+    names = [d for d in os.listdir(tmp_path) if d.startswith("step_")]
+    assert "step_00000004" in names
+    assert "step_00000001.tmp" not in names, "stale debris survived GC"
+    restored, _ = CKPT.restore(str(tmp_path), tree)
+    np.testing.assert_array_equal(np.asarray(restored[0]), tree[0])
+
+
+# ----------------------------------------------------------------------
+# property: ANY seeded fault schedule leaves the engine coherent
+# ----------------------------------------------------------------------
+
+
+def test_fault_recovery_invariants_hypothesis():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    r = multi_segment_retriever(n_segs=4)
+    q = queries()
+    want = r.search(q, stages=TWO)
+    seg_bytes = r.store.segments[0].nbytes
+
+    def lru_state_ok(eng, budget):
+        resident = eng.resident()
+        by_tier = {i for i, s in enumerate(r.store.segments)
+                   if s.tier == "device"}
+        assert set(resident) == by_tier
+        assert eng.resident_bytes == sum(r.store.segments[i].nbytes
+                                         for i in resident)
+        if eng.resident_bytes > budget:
+            assert eng.stats["overflow"] > 0
+
+    @given(seed=st.integers(0, 2 ** 16),
+           rate=st.sampled_from([0.0, 0.3, 0.9]),
+           kills=st.lists(st.integers(0, 5), max_size=2, unique=True),
+           oom=st.lists(st.integers(0, 5), max_size=1),
+           cap_segs=st.integers(1, 3))
+    @settings(deadline=None, max_examples=12)
+    def prop(seed, rate, kills, oom, cap_segs):
+        plan = FLT.FaultPlan(seed=seed, transfer_fail_rate=rate,
+                             transfer_fail_burst=2,
+                             kill_worker_at=tuple(kills),
+                             oom_at=tuple(oom))
+        budget = cap_segs * seg_bytes + 1
+        with r.tiered(budget, max_retries=2) as eng:
+            eng.arm(plan)
+            for i, ov in ((1, False), (3, True), (0, False), (2, True)):
+                try:
+                    if ov:
+                        eng.prefetch([i])
+                    eng.search(q, stages=TWO, scope=[i, (i + 1) % 4],
+                               overlap=ov)
+                except TierError:
+                    pass            # permanent-failure surfacing is legal
+                lru_state_ok(eng, budget)
+                pins_clear(eng)
+            # the storm passes: the engine must serve bitwise again
+            eng.arm(None)
+            got = eng.search(q, stages=TWO, overlap=False)
+            assert_bitwise(got, want)
+            lru_state_ok(eng, budget)
+            pins_clear(eng)
+
+    prop()

@@ -22,8 +22,8 @@ import pytest
 
 from repro.core import multistage as MST
 from repro.retrieval import tracing
-from repro.retrieval.frontend import (PendingResult, ServingFrontend,
-                                      bucket_ladder)
+from repro.retrieval.frontend import (DeadlineExceeded, PendingResult,
+                                      ServingFrontend, bucket_ladder)
 from repro.retrieval.retriever import Retriever
 from repro.retrieval.store import VectorStore
 
@@ -272,3 +272,92 @@ def test_pending_result_latency():
         pr.latency
     pr.t_done = 1.25
     assert pr.latency == pytest.approx(0.25)
+
+
+def test_poisoned_dispatch_completes_requests_no_leak():
+    """Satellite regression (ISSUE 10): a dispatch that throws used to
+    drop the popped requests on the floor — their PendingResults never
+    completed (waiters hung forever) and the queued-row / tenant-quota
+    accounting leaked the popped rows. Every popped request must complete
+    WITH the error, accounting must return to zero, and the next healthy
+    flush must serve normally."""
+    r = Retriever(_batch(16, 0))
+    fe = ServingFrontend(r, STAGES, max_batch=4, max_q=4, min_q=4,
+                         tenant_quota=8)
+    rng = np.random.default_rng(12)
+    qs = [rng.normal(size=(1, 4, DIM)).astype(np.float32)
+          for _ in range(3)]
+
+    boom = RuntimeError("injected dispatch failure")
+    good_search = r.search
+    r.search = lambda *a, **kw: (_ for _ in ()).throw(boom)
+    prs = [fe.submit(q) for q in qs]
+    assert fe.flush() == len(prs)
+    for pr in prs:
+        assert pr.done() and pr.error is boom and not pr.shed
+        with pytest.raises(RuntimeError, match="injected dispatch"):
+            pr.result()
+    assert fe.stats["errors"] == len(prs)
+    # no leaked accounting: the poisoned cohort's rows are gone
+    assert fe.pending == 0 and fe._queued_rows == 0
+    assert not fe._tenant_rows
+    # the poison clears -> the same frontend serves normally
+    r.search = good_search
+    pr = fe.submit(qs[0])
+    fe.flush()
+    s, i = pr.result()
+    np.testing.assert_array_equal(s, fe.search(qs[0])[0])
+    np.testing.assert_array_equal(i, fe.search(qs[0])[1])
+
+
+def test_kill_signal_completes_cohort_then_propagates():
+    """A BaseException during dispatch (KeyboardInterrupt, a server's
+    shutdown sentinel) must NOT be absorbed by the poisoned-dispatch
+    recovery — the cohort completes with the error so no waiter hangs,
+    but the signal still unwinds out of flush() to the serving loop."""
+    r = Retriever(_batch(16, 0))
+    fe = ServingFrontend(r, STAGES, max_batch=4, max_q=4, min_q=4)
+    rng = np.random.default_rng(13)
+    qs = [rng.normal(size=(1, 4, DIM)).astype(np.float32)
+          for _ in range(2)]
+
+    boom = KeyboardInterrupt("drain now")
+    r.search = lambda *a, **kw: (_ for _ in ()).throw(boom)
+    prs = [fe.submit(q) for q in qs]
+    with pytest.raises(KeyboardInterrupt):
+        fe.flush()
+    for pr in prs:
+        assert pr.done() and pr.error is boom
+    assert fe.pending == 0 and fe._queued_rows == 0
+
+
+def test_deadline_shed_at_admission_and_flush():
+    """A request whose deadline is blown is SHED — completed with
+    DeadlineExceeded (shed=True, stats['shed']), never dispatched; a
+    still-live cohort member is served normally."""
+    t = [0.0]
+    fe = ServingFrontend(Retriever(_batch(16, 0)), STAGES, max_batch=4,
+                         max_q=4, min_q=4, deadline_ms=10.0,
+                         clock=lambda: t[0])
+    rng = np.random.default_rng(13)
+    q = rng.normal(size=(1, 4, DIM)).astype(np.float32)
+
+    # blown at admission: shed immediately, never queued
+    late = fe.submit(q, t_submit=-1.0)
+    assert late.done() and late.shed and fe.pending == 0
+    with pytest.raises(DeadlineExceeded):
+        late.result()
+
+    # blown while queued: shed at flush; its live cohort member serves
+    doomed = fe.submit(q)
+    live = fe.submit(q, deadline_ms=60_000.0)       # per-request override
+    t[0] = 0.02                                     # 20ms > 10ms deadline
+    fe.flush()
+    assert doomed.shed and not live.shed and live.error is None
+    live.result()                                   # serves, no raise
+    assert fe.stats["shed"] == 2
+    # deadline_ms=0 (the default frontend setting) means no deadline
+    fe2 = ServingFrontend(Retriever(_batch(8, 0)), STAGES, max_batch=1,
+                          max_q=4, min_q=4, clock=lambda: t[0])
+    pr = fe2.submit(q, t_submit=-100.0)
+    assert pr.deadline is None and not pr.done()
